@@ -1,0 +1,75 @@
+"""Shared benchmark plumbing. Every figure module exposes ``run() ->
+list[(name, us_per_call, derived)]``; run.py aggregates to CSV.
+
+Measured numbers are real wall-clock on this host (single CPU device);
+``derived`` carries the figure's y-axis (PEPS/TEPS, modeled where the paper's
+hardware is required — flagged with a ``model:`` prefix in the name).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.algorithms import BFSExecutor, DegreeCountExecutor, PageRankExecutor
+from repro.core import MultiQueryEngine, QueryRecord, XEON_E5_2660V4
+
+Row = tuple[str, float, float]
+
+
+def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in µs."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter_ns()
+        fn()
+        times.append((time.perf_counter_ns() - t0) / 1e3)
+    return float(np.median(times))
+
+
+def make_executor(algorithm: str, graph, seed: int = 0):
+    if algorithm == "bfs":
+        deg = np.asarray(graph.out_degrees())
+        src = int(np.argsort(-deg)[seed % 8])
+        return BFSExecutor(graph, src)
+    if algorithm in ("pr_pull", "pr_push"):
+        return PageRankExecutor(
+            graph, mode=algorithm.split("_")[1], max_iters=5, tol=0
+        )
+    if algorithm == "degree_count":
+        return DegreeCountExecutor(graph)
+    raise ValueError(algorithm)
+
+
+def run_single_query(algorithm: str, graph, policy: str) -> tuple[float, float, float]:
+    """-> (us_per_run, measured_eps, modeled_eps) for one query."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+
+    def once():
+        ex = make_executor(algorithm, graph)
+        rec = QueryRecord(0, 0, algorithm)
+        eng.run_query(ex, rec)
+        return rec
+
+    rec = once()  # warm compile
+    us = time_call(lambda: once(), repeats=3, warmup=0)
+    edges = rec.edges or 1.0
+    measured_eps = edges / (us * 1e-6)
+    modeled_eps = edges / max(rec.modeled_ns * 1e-9, 1e-12)
+    return us, measured_eps, modeled_eps
+
+
+def run_sessions(algorithm: str, graph, policy: str, sessions: int) -> tuple[float, float]:
+    """-> (us_total, modeled_aggregate_eps) for N concurrent sessions."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+
+    def mk(s, q):
+        return make_executor(algorithm, graph, seed=s)
+
+    t0 = time.perf_counter_ns()
+    rep = eng.run_sessions(mk, sessions=sessions, queries_per_session=1)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    return us, rep.throughput_modeled()

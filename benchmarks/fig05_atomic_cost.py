@@ -1,0 +1,19 @@
+"""Fig. 5: relative cost of atomics vs thread count and counter-array size.
+
+Derived from the calibrated hardware models (Xeon preset reproduces the
+paper's machine; TPU preset is the adaptation target): derived column =
+L_atomic(T, M) / L_atomic(1, M)."""
+from repro.core import TPU_V5E_POD, XEON_E5_2660V4
+
+from .common import Row
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for hw in (XEON_E5_2660V4, TPU_V5E_POD):
+        for m in (1 << 14, 1 << 22, 1 << 30):
+            base = hw.l_atomic(1, m)
+            for t in (2, 8, hw.max_threads):
+                rel = hw.l_atomic(t, m) / base
+                rows.append((f"fig05/{hw.name}/M={m}B/T={t}", 0.0, rel))
+    return rows

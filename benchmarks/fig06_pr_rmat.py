@@ -1,0 +1,19 @@
+"""Fig. 6: single-query PageRank across RMAT scale factors ×
+{sequential, simple, scheduler} × {push, pull}. Derived: modeled PEPS on
+the paper's Xeon preset (measured µs also reported)."""
+from repro.graph import rmat_graph
+
+from .common import Row, run_single_query
+
+SCALES = (10, 13, 15)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for sf in SCALES:
+        g = rmat_graph(sf, seed=3)
+        for algo in ("pr_push", "pr_pull"):
+            for policy in ("sequential", "simple", "scheduler"):
+                us, meps, peps = run_single_query(algo, g, policy)
+                rows.append((f"fig06/{algo}/sf{sf}/{policy}", us, peps))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 7: PageRank on real-world dataset surrogates (offline container:
+SNAP graphs replaced by matched-family synthetics, DESIGN.md §8)."""
+from repro.graph import load_dataset
+
+from .common import Row, run_single_query
+
+DATASETS = ("roadNet-CA", "web-BerkStan", "soc-pokec-relationships")
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in DATASETS:
+        g = load_dataset(name, scale_div=512)
+        for algo in ("pr_push", "pr_pull"):
+            for policy in ("simple", "scheduler"):
+                us, meps, peps = run_single_query(algo, g, policy)
+                rows.append((f"fig07/{algo}/{name}/{policy}", us, peps))
+    return rows

@@ -1,0 +1,16 @@
+"""Fig. 8: single-query BFS across RMAT scale factors × policies (TEPS)."""
+from repro.graph import rmat_graph
+
+from .common import Row, run_single_query
+
+SCALES = (10, 13, 15)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for sf in SCALES:
+        g = rmat_graph(sf, seed=3)
+        for policy in ("sequential", "simple", "scheduler"):
+            us, meps, teps = run_single_query("bfs", g, policy)
+            rows.append((f"fig08/bfs/sf{sf}/{policy}", us, teps))
+    return rows

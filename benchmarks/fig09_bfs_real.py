@@ -1,0 +1,16 @@
+"""Fig. 9: BFS on real-world surrogates × policies (TEPS)."""
+from repro.graph import load_dataset
+
+from .common import Row, run_single_query
+
+DATASETS = ("roadNet-CA", "web-BerkStan", "as-skitter")
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in DATASETS:
+        g = load_dataset(name, scale_div=512)
+        for policy in ("sequential", "simple", "scheduler"):
+            us, meps, teps = run_single_query("bfs", g, policy)
+            rows.append((f"fig09/bfs/{name}/{policy}", us, teps))
+    return rows

@@ -1,0 +1,16 @@
+"""Fig. 10: PR throughput scaling across concurrent sessions (RMAT)."""
+from repro.graph import rmat_graph
+
+from .common import Row, run_sessions
+
+SESSIONS = (1, 4, 16)
+
+
+def run() -> list[Row]:
+    g = rmat_graph(13, seed=3)
+    rows: list[Row] = []
+    for policy in ("sequential", "simple", "scheduler"):
+        for n in SESSIONS:
+            us, peps = run_sessions("pr_pull", g, policy, n)
+            rows.append((f"fig10/pr_pull/sf13/{policy}/s{n}", us, peps))
+    return rows

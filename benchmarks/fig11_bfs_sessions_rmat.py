@@ -1,0 +1,16 @@
+"""Fig. 11: BFS throughput scaling across concurrent sessions (RMAT)."""
+from repro.graph import rmat_graph
+
+from .common import Row, run_sessions
+
+SESSIONS = (1, 4, 16)
+
+
+def run() -> list[Row]:
+    g = rmat_graph(13, seed=3)
+    rows: list[Row] = []
+    for policy in ("sequential", "simple", "scheduler"):
+        for n in SESSIONS:
+            us, teps = run_sessions("bfs", g, policy, n)
+            rows.append((f"fig11/bfs/sf13/{policy}/s{n}", us, teps))
+    return rows

@@ -1,0 +1,15 @@
+"""Fig. 12: PR concurrent-session scaling on real-world surrogates."""
+from repro.graph import load_dataset
+
+from .common import Row, run_sessions
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in ("roadNet-CA", "soc-pokec-relationships"):
+        g = load_dataset(name, scale_div=512)
+        for policy in ("sequential", "scheduler"):
+            for n in (1, 8):
+                us, peps = run_sessions("pr_pull", g, policy, n)
+                rows.append((f"fig12/pr_pull/{name}/{policy}/s{n}", us, peps))
+    return rows

@@ -1,0 +1,15 @@
+"""Fig. 13: BFS concurrent-session scaling on real-world surrogates."""
+from repro.graph import load_dataset
+
+from .common import Row, run_sessions
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for name in ("roadNet-CA", "soc-LiveJournal1"):
+        g = load_dataset(name, scale_div=512)
+        for policy in ("sequential", "simple", "scheduler"):
+            for n in (1, 8):
+                us, teps = run_sessions("bfs", g, policy, n)
+                rows.append((f"fig13/bfs/{name}/{policy}/s{n}", us, teps))
+    return rows

@@ -1,0 +1,120 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch × shape), single-pod 16×16 mesh, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_chip            / 197e12 FLOP/s
+    memory     = HLO_bytes_per_chip            / 819e9  B/s
+    collective = weighted collective B/chip    / 50e9   B/s (1 ICI link,
+                 ring all-reduce counted 2×; see dryrun.parse_collectives)
+
+HLO terms come from trip-1/trip-2 unrolled compiles scaled to full depth
+(XLA cost analysis counts while-bodies once; see dryrun.scaled_totals);
+cells without scan scaling (recsys) use the full compile directly.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve) for LMs; analytic
+per-family formulas otherwise (see launch/steps.py meta).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_records(mesh: str = "single", variant: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        if variant is None and r.get("variant", "baseline") != "baseline":
+            continue
+        if variant is not None and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["chips"]
+    scaled = rec.get("scaled") or {}
+    flops = scaled.get("flops_scaled") or rec["full"]["hlo_flops"] or 0.0
+    byts = scaled.get("bytes_scaled") or rec["full"]["hlo_bytes"] or 0.0
+    coll = scaled.get("collective_bytes_scaled")
+    if coll is None:
+        coll = rec["full"]["collectives"]["total_weighted_bytes"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(t_comp, t_mem, t_coll)
+    model_flops = rec["meta"].get("model_flops") or 0.0
+    hlo_total = flops * chips
+    return {
+        "cell": rec["cell"],
+        "chips": chips,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        # fraction of the bound that is useful compute at peak
+        "roofline_fraction": (model_flops / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "temp_gib": (rec["full"]["memory"]["temp_bytes"] or 0) / 2**30,
+        "arg_gib": (rec["full"]["memory"]["argument_bytes"] or 0) / 2**30,
+    }
+
+
+FIX_HINTS = {
+    "compute": "raise MXU utilization: larger per-chip tiles (less TP), bf16 everywhere, fewer remat recomputes",
+    "memory": "cut HBM traffic: fuse elementwise chains, shrink remat window, keep activations bf16",
+    "collective": "cut ICI volume: reshard to reduce all-gathers, reduce-scatter instead of all-reduce, overlap with compute",
+}
+
+
+def report(recs: list[dict]) -> str:
+    rows = [roofline_terms(r) for r in recs]
+    rows.sort(key=lambda r: r["cell"])
+    lines = [
+        "| cell | compute s | memory s | collective s | dominant | roofline frac | useful FLOP ratio | temp GiB/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | {r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_ratio']:.3f} | {r['temp_gib']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    recs = load_records("single")
+    print(report(recs))
+    rows = [roofline_terms(r) for r in recs]
+    rows.sort(key=lambda r: r["roofline_fraction"])
+    print("\nWorst roofline fractions:")
+    for r in rows[:5]:
+        print(f"  {r['cell']:45s} frac={r['roofline_fraction']:.4f} dominant={r['dominant']}"
+              f" -> {FIX_HINTS[r['dominant']]}")
+    coll_bound = [r for r in rows if r["dominant"] == "collective"]
+    coll_bound.sort(key=lambda r: -r["t_collective_s"])
+    print("\nMost collective-bound:")
+    for r in coll_bound[:5]:
+        print(f"  {r['cell']:45s} t_coll={r['t_collective_s']:.3e}s frac={r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "fig04_contention",
+    "fig05_atomic_cost",
+    "fig06_pr_rmat",
+    "fig07_pr_real",
+    "fig08_bfs_rmat",
+    "fig09_bfs_real",
+    "fig10_pr_sessions_rmat",
+    "fig11_bfs_sessions_rmat",
+    "fig12_pr_sessions_real",
+    "fig13_bfs_sessions_real",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and only not in mod_name:
+            continue
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived:.6g}")
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Train MeshGraphNet on neighbour-sampled batches of an RMAT graph — the
+GNN family the scheduler's edge-traversal estimators apply to natively.
+
+    PYTHONPATH=src python examples/gnn_train.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import GraphBatchStream
+from repro.graph import rmat_graph
+from repro.models.gnn import meshgraphnet as mgn
+from repro.optim import OptimizerConfig, clip_by_global_norm, make_optimizer
+
+
+def main() -> None:
+    g = rmat_graph(11, seed=1)
+    cfg = mgn.MGNConfig(n_layers=4, d_hidden=64, d_node_in=16, d_edge_in=8, d_out=3)
+    params = mgn.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(name="adamw", lr=1e-3, warmup_steps=5, decay_steps=100)
+    init_opt, update = make_optimizer(opt_cfg)
+    opt_state = init_opt(params)
+    stream = GraphBatchStream(g, batch_nodes=32, fanouts=(6, 4), d_feat=16)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: mgn.loss_fn(cfg, p, batch))(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt_state = update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    for i in range(60):
+        raw = next(stream)
+        n = raw["nodes"].shape[0]
+        e = raw["src"].shape[0]
+        batch = dict(
+            nodes=jnp.asarray(raw["feats"]),
+            src=raw["src"], dst=raw["dst"],
+            edge_feat=jnp.ones((e, 8), jnp.float32),
+            node_mask=raw["node_mask"], edge_mask=raw["edge_mask"],
+            graph_ids=jnp.zeros((n,), jnp.int32), n_graphs=1,
+            # synthetic target: smooth function of features
+            targets=jnp.asarray(raw["feats"][:, :3] * 0.5),
+        )
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {losses[-1]:.4f}")
+    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

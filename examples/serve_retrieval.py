@@ -1,0 +1,55 @@
+"""Serve the two-tower retrieval model: batched candidate scoring through
+the Pallas scoring kernel, with the paper's scheduler choosing the device-
+group width per request under varying load.
+
+    PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import TPU_V5E_POD
+from repro.kernels.scoring import score_topk
+from repro.models import recsys as tt
+from repro.serving import plan_group_width
+
+
+def main() -> None:
+    mod = get_arch("two-tower-retrieval")
+    cfg = mod.make_smoke_config()
+    params = tt.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # precompute a candidate corpus with the item tower
+    n_items = 4096
+    item_feats = {
+        f.name: jnp.asarray(rng.integers(0, f.vocab, (n_items, f.multi_hot)), jnp.int32)
+        for f in cfg.item_fields
+    }
+    corpus = tt.item_embedding(cfg, params, item_feats, n_items)
+    print(f"corpus: {n_items} candidates x {corpus.shape[1]} dims")
+
+    for batch, queue_depth in ((4, 1), (64, 1), (4, 32)):
+        user_feats = {
+            f.name: jnp.asarray(rng.integers(0, f.vocab, (batch, f.multi_hot)), jnp.int32)
+            for f in cfg.user_fields
+        }
+        u = tt.user_embedding(cfg, params, user_feats, batch)
+        t0 = time.perf_counter()
+        scores, idx = score_topk(u, corpus, k=10)
+        scores.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e3
+        width = plan_group_width(
+            TPU_V5E_POD, batch=batch, cache_len=n_items, n_kv_heads=1,
+            head_dim=corpus.shape[1], n_layers=1, queue_depth=queue_depth,
+        )
+        print(f"batch={batch:3d} queue={queue_depth:3d}: top-1 idx {int(idx[0,0]):4d} "
+              f"({dt:6.1f} ms via Pallas kernel); planned group width = {width}")
+    print("deep queue -> narrower groups: inter-query parallelism wins under load")
+
+
+if __name__ == "__main__":
+    main()

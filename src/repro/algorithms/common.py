@@ -1,0 +1,83 @@
+"""Shared machinery for the graph algorithm executors.
+
+TPU adaptation note (DESIGN.md §2): all algorithms are *edge-centric* —
+work is vectorized over the edge list (VPU lanes / MXU tiles), not over a
+vertex loop. Work packages select a *slot range* of the compacted frontier;
+membership is materialized as a dense vertex mask with static shapes, so one
+jitted program serves every package (the range travels as traced scalars — no
+recompilation per package).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.structure import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeArrays:
+    """Device-resident edge-centric views of a graph (static shapes)."""
+
+    src: jnp.ndarray          # [E] int32, sorted by src (out-edge order)
+    dst: jnp.ndarray          # [E] int32
+    in_src: jnp.ndarray       # [E] int32, in-edge order (sorted by target)
+    in_dst: jnp.ndarray       # [E] int32 (the targets; sorted ascending)
+    out_deg: jnp.ndarray      # [V] int32
+    num_vertices: int
+    num_edges: int
+
+    @classmethod
+    def from_graph(cls, g: Graph) -> "EdgeArrays":
+        in_dst = g.csr_in.edge_sources()  # sources of in-CSR == targets
+        return cls(
+            src=g.src,
+            dst=g.dst,
+            in_src=g.csr_in.indices,      # in-CSR indices = original sources
+            in_dst=in_dst,
+            out_deg=g.csr.out_degrees().astype(jnp.int32),
+            num_vertices=g.num_vertices,
+            num_edges=g.num_edges,
+        )
+
+
+def member_mask_from_slots(
+    frontier_list: jnp.ndarray,  # [V] int32, compacted frontier padded with V
+    n_frontier: jnp.ndarray,     # scalar int32
+    lo: jnp.ndarray,             # scalar int32 — slot range [lo, hi)
+    hi: jnp.ndarray,
+    num_vertices: int,
+) -> jnp.ndarray:
+    """Dense [V] bool mask of the vertices in frontier slots [lo, hi)."""
+    slots = jnp.arange(frontier_list.shape[0], dtype=jnp.int32)
+    sel = (slots >= lo) & (slots < hi) & (slots < n_frontier)
+    return (
+        jnp.zeros((num_vertices,), dtype=bool)
+        .at[frontier_list]
+        .set(sel, mode="drop")
+    )
+
+
+def merge_ranges(bounds: np.ndarray, package_ids: Iterable[int]) -> list[tuple[int, int]]:
+    """Merge an (arbitrary-order) set of package ids into minimal contiguous
+    slot ranges, preserving the order of first appearance of each run."""
+    ids = sorted(int(p) for p in package_ids)
+    ranges: list[tuple[int, int]] = []
+    for p in ids:
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        if ranges and ranges[-1][1] == lo:
+            ranges[-1] = (ranges[-1][0], hi)
+        else:
+            ranges.append((lo, hi))
+    return ranges
+
+
+def compact_frontier(mask: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact a [V] bool mask into a padded vertex list + count (static)."""
+    v = mask.shape[0]
+    idx = jnp.nonzero(mask, size=v, fill_value=v)[0].astype(jnp.int32)
+    return idx, jnp.sum(mask).astype(jnp.int32)

@@ -1,0 +1,98 @@
+"""Degree count — the paper's reference/calibration algorithm (§5.1).
+
+Counts occurrences of vertex IDs in an edge list (as source or target) with
+fetch-and-add atomics on a single counter array. Parameters vary almost
+arbitrarily (counter array size, edge count), which is why the paper uses it
+to train the contention model. Work is partitioned in non-overlapping parts
+of 16k edges each — exactly the package grain reproduced here.
+
+The JAX realization: per-package unsorted scatter-add (`.at[].add`) into the
+counter array (the Pallas TPU kernel in repro.kernels.degree_count computes
+the identical histogram with one-hot MXU tiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.descriptors import DEGREE_COUNT
+from ..graph.structure import Graph, GraphStats
+
+PACKAGE_EDGES = 16 * 1024  # §5.1: non-overlapping parts of 16k edges
+
+
+def degree_count_reference(src: np.ndarray, dst: np.ndarray, num_counters: int) -> np.ndarray:
+    counts = np.zeros(num_counters, dtype=np.int32)
+    np.add.at(counts, np.asarray(src) % num_counters, 1)
+    np.add.at(counts, np.asarray(dst) % num_counters, 1)
+    return counts
+
+
+@partial(jax.jit, static_argnames=("num_counters",))
+def _count_range(src, dst, counters, lo, hi, *, num_counters: int):
+    """Count edge endpoints for edges [lo, hi) into the counter array."""
+    idx = jnp.arange(src.shape[0], dtype=jnp.int32)
+    sel = (idx >= lo) & (idx < hi)
+    ones = sel.astype(jnp.int32)
+    counters = counters.at[src % num_counters].add(ones, mode="drop")
+    counters = counters.at[dst % num_counters].add(ones, mode="drop")
+    return counters, jnp.sum(ones)
+
+
+@dataclasses.dataclass
+class DegreeCountExecutor:
+    """QueryExecutor for degree count: one logical iteration over all edges,
+    packaged at the 16k-edge grain."""
+
+    graph: Graph
+    num_counters: int | None = None
+    desc: Any = DEGREE_COUNT
+
+    def __post_init__(self):
+        self._src = self.graph.src.astype(jnp.int32)
+        self._dst = self.graph.dst.astype(jnp.int32)
+        self._n = self.graph.num_edges
+        self.num_counters = int(self.num_counters or self.graph.num_vertices)
+
+    def graph_stats(self) -> GraphStats:
+        return self.graph.stats
+
+    def start(self) -> None:
+        self._counters = jnp.zeros((self.num_counters,), jnp.int32)
+        self._edges = 0.0
+        self._covered = 0
+        self._done = False
+
+    def finished(self) -> bool:
+        return self._done
+
+    def frontier(self) -> tuple[int, np.ndarray | None, float]:
+        # "frontier" = the edge list itself; degree 1 per item (one update
+        # pair per edge). Report edge count as the item count.
+        return self._n, np.ones(min(self._n, 4096), dtype=np.int64), 0.0
+
+    def run_packages(self, package_ids, packages, t: int, parallel: bool) -> None:
+        from .common import merge_ranges
+
+        # package bounds are in frontier (=edge) slots already
+        for lo, hi in merge_ranges(packages.bounds, package_ids):
+            self._counters, edges = _count_range(
+                self._src, self._dst, self._counters,
+                jnp.int32(lo), jnp.int32(hi),
+                num_counters=self.num_counters,
+            )
+            self._edges += float(edges)
+            self._covered += hi - lo
+        if self._covered >= self._n:
+            self._done = True
+
+    def edges_traversed(self) -> float:
+        return self._edges
+
+    def result(self) -> np.ndarray:
+        return np.asarray(self._counters)

@@ -1,0 +1,151 @@
+"""Checkpointing: sharded, manifest-committed, async, restart-safe.
+
+Design (1000-node posture, DESIGN.md §6):
+  * each host writes only its local shards (here: the single-host slice);
+  * a step directory becomes valid only when ``MANIFEST.json`` is atomically
+    renamed into place — a torn write is never loadable (crash-consistent);
+  * an async writer thread overlaps serialization with the next step
+    (double-buffered; ``wait()`` fences before the next save);
+  * restore is topology-independent: arrays are saved unsharded per leaf
+    (host-gathered) and re-sharded on load against whatever mesh the
+    restarted job brings up — elastic restart across different pod counts;
+  * ``keep`` bounds disk usage (oldest checkpoints pruned after commit).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Exception | None = None
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
+        """Snapshot ``tree`` at ``step``. Device→host copy happens here (so
+        the caller may donate/overwrite buffers); file IO happens async."""
+        items, _ = _flatten(tree)
+        host_items = [(k, np.asarray(v)) for k, v in items]
+        if self._thread is None or blocking:
+            self._write(step, host_items)
+        else:
+            self.wait()
+            self._q.put((step, host_items))
+
+    def wait(self) -> None:
+        """Fence: block until the in-flight async save committed."""
+        if self._thread is not None:
+            self._q.join()
+        if self._err:
+            raise self._err
+
+    def _worker(self) -> None:
+        while True:
+            step, items = self._q.get()
+            try:
+                self._write(step, items)
+            except Exception as e:  # surfaced at next wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, items) -> None:
+        tmp = self.dir / f".tmp_step_{step:09d}"
+        final = self.dir / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "arrays": {}}
+        arrays = {}
+        for key, arr in items:
+            fname = f"a{len(arrays):05d}.npy"
+            arrays[fname] = arr
+            manifest["arrays"][key] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        for fname, arr in arrays.items():
+            np.save(tmp / fname, arr, allow_pickle=False)
+        # manifest written last, then the whole directory commits via rename
+        with open(tmp / "MANIFEST.json", "w") as f:
+            json.dump(manifest, f)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "MANIFEST.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None, *, shardings: Any = None) -> Any:
+        """Load into the structure of ``template``; optionally re-shard with
+        ``shardings`` (same treedef) — topology may differ from save time."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        with open(d / "MANIFEST.json") as f:
+            manifest = json.load(f)
+
+        items, treedef = _flatten(template)
+        sh_items = None
+        if shardings is not None:
+            sh_items, _ = _flatten(shardings)
+        leaves = []
+        for i, (key, leaf) in enumerate(items):
+            meta = manifest["arrays"].get(key)
+            if meta is None:
+                raise KeyError(f"checkpoint {step} missing leaf {key!r}")
+            arr = np.load(d / meta["file"], allow_pickle=False)
+            if list(arr.shape) != list(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs template {leaf.shape}"
+                )
+            if sh_items is not None:
+                arr = jax.device_put(arr, sh_items[i][1])
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,56 @@
+"""The paper's own workload as an 11th config: a sharded PageRank-pull
+iteration + BFS frontier expansion over an RMAT-scale graph, distributed
+edge-parallel over the mesh (the graph-engine data path the scheduler
+controls). Dry-run-only at full scale (V=2^26, E=2^30)."""
+import jax
+import jax.numpy as jnp
+
+from ..launch.steps import CellProgram
+from ..sharding.context import constrain
+
+ARCH_ID = "paper-graph-engine"
+FAMILY = "graph"
+SHAPES = ["pr_iteration", "bfs_expand"]
+
+V = 1 << 26
+E = 1 << 30
+
+def make_cell(shape: str, **_):
+    if shape == "pr_iteration":
+        def step(src, dst, rank, out_deg):
+            contrib = jnp.where(out_deg > 0, rank / jnp.maximum(out_deg, 1), 0.0)
+            vals = constrain(jnp.take(contrib, src), ("edges",))
+            acc = jax.ops.segment_sum(vals, dst, num_segments=V)
+            return 0.15 / V + 0.85 * acc
+
+        args = (
+            jax.ShapeDtypeStruct((E,), jnp.int32),
+            jax.ShapeDtypeStruct((E,), jnp.int32),
+            jax.ShapeDtypeStruct((V,), jnp.float32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+        )
+        axes = (("edges",), ("edges",), ("nodes",), ("nodes",))
+        return CellProgram(
+            name=f"{ARCH_ID}:{shape}", kind="serve", step_fn=step,
+            abstract_args=args, axes_trees=axes,
+            meta=dict(model_flops=2.0 * E, n_edges=E, n_nodes=V),
+        )
+
+    def step(src, dst, visited, frontier):
+        active = constrain(jnp.take(frontier, src), ("edges",))
+        touched = jnp.zeros((V,), jnp.bool_).at[dst].max(active, mode="drop")
+        new = touched & ~visited
+        return visited | new, new
+
+    args = (
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((V,), jnp.bool_),
+        jax.ShapeDtypeStruct((V,), jnp.bool_),
+    )
+    axes = (("edges",), ("edges",), ("nodes",), ("nodes",))
+    return CellProgram(
+        name=f"{ARCH_ID}:{shape}", kind="serve", step_fn=step,
+        abstract_args=args, axes_trees=axes,
+        meta=dict(model_flops=1.0 * E, n_edges=E, n_nodes=V),
+    )

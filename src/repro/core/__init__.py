@@ -1,0 +1,62 @@
+# The paper's primary contribution: cost-model-driven control of intra- and
+# inter-query parallelism (estimators -> cost model -> bounds -> packaging ->
+# selective sequential execution -> multi-query engine).
+from .estimators import (
+    TraversalEstimator,
+    estimate_found_closed_form,
+    estimate_found_paper_form,
+    estimate_found_sampled,
+    estimate_touched_closed_form,
+    estimate_touched_exact,
+    estimate_touched_sampled,
+)
+from .descriptors import (
+    REGISTRY as DESCRIPTORS,
+    AlgorithmDescriptor,
+    BFS_TOP_DOWN,
+    DEGREE_COUNT,
+    ItemCost,
+    PR_PULL,
+    PR_PUSH,
+)
+from .contention import (
+    PRESETS,
+    TPU_V5E_POD,
+    XEON_E5_2660V4,
+    HardwareModel,
+    MemoryLevel,
+    calibrate_from_runs,
+    counter_array_bytes,
+)
+from .cost_model import (
+    IterationWork,
+    c_sub,
+    c_vertex_sequential,
+    c_vertex_total,
+    iteration_cost_ns,
+    touched_memory_bytes,
+)
+from .bounds import ThreadBounds, parallel_beats_sequential, thread_bounds, v_min_for_parallel
+from .packaging import WorkPackages, make_packages, packages_to_table
+from .autotuner import PreparedIteration, prepare_iteration
+from .scheduler import PackageScheduler, ScheduleTrace, WorkerPool, largest_pow2_leq
+from .session import EngineReport, MultiQueryEngine, QueryExecutor, QueryRecord
+from .feedback import CostFeedback
+
+__all__ = [
+    "TraversalEstimator", "estimate_found_closed_form", "estimate_found_paper_form",
+    "estimate_found_sampled", "estimate_touched_closed_form", "estimate_touched_exact",
+    "estimate_touched_sampled",
+    "DESCRIPTORS", "AlgorithmDescriptor", "BFS_TOP_DOWN", "DEGREE_COUNT", "ItemCost",
+    "PR_PULL", "PR_PUSH",
+    "PRESETS", "TPU_V5E_POD", "XEON_E5_2660V4", "HardwareModel", "MemoryLevel",
+    "calibrate_from_runs", "counter_array_bytes",
+    "IterationWork", "c_sub", "c_vertex_sequential", "c_vertex_total",
+    "iteration_cost_ns", "touched_memory_bytes",
+    "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",
+    "WorkPackages", "make_packages", "packages_to_table",
+    "PreparedIteration", "prepare_iteration",
+    "PackageScheduler", "ScheduleTrace", "WorkerPool", "largest_pow2_leq",
+    "EngineReport", "MultiQueryEngine", "QueryExecutor", "QueryRecord",
+    "CostFeedback",
+]

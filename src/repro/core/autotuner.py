@@ -1,0 +1,97 @@
+"""Preparation component ("Cost and Parameter Estimation", Fig. 1–3).
+
+Wires the pieces of §3 together for one upcoming iteration:
+
+  graph/frontier statistics  ──► traversal estimators (|U_j|, |F_j|)
+            │                              │
+            ▼                              ▼
+  footprint model M  ──►  cache level  ──► L_mem / L_atomic(T)
+                                           │
+                                           ▼
+                 thread bounds (Alg. 1) ──► work packages (§4.2)
+
+Topology-centric algorithms (PR) prepare once; data-driven ones (BFS) prepare
+per iteration (§4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graph.structure import GraphStats
+from .bounds import ThreadBounds, thread_bounds
+from .contention import HardwareModel
+from .cost_model import IterationWork, touched_memory_bytes
+from .descriptors import AlgorithmDescriptor
+from .estimators import SAMPLE_CAP_RUNTIME, TraversalEstimator
+from .packaging import WorkPackages, make_packages
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedIteration:
+    work: IterationWork
+    bounds: ThreadBounds
+    packages: WorkPackages
+    used_local_stats: bool
+
+
+def prepare_iteration(
+    desc: AlgorithmDescriptor,
+    hw: HardwareModel,
+    stats: GraphStats,
+    frontier_size: int,
+    *,
+    frontier_degrees: np.ndarray | None = None,
+    unvisited: float | None = None,
+    p: int | None = None,
+) -> PreparedIteration:
+    """Run the full preparation step for the next iteration."""
+    est = TraversalEstimator(
+        deg_mean=stats.deg_out_mean,
+        deg_max=stats.deg_out_max,
+        v_reach=stats.v_reach,
+    )
+    variance_ratio = stats.degree_variance_ratio
+    use_local = (not est.low_variance) and frontier_degrees is not None
+    if use_local:
+        # §4.1.2: high variance → compute local statistics on a subset (up to
+        # the first 4000 vertices) using real degrees, extrapolate globally.
+        sample = np.asarray(frontier_degrees)[:SAMPLE_CAP_RUNTIME]
+        mean_local = float(sample.mean()) if sample.size else stats.deg_out_mean
+        edges = mean_local * frontier_size
+        touched = est.touched(frontier_size, frontier_degrees=sample)
+        found = est.found(
+            frontier_size,
+            unvisited if unvisited is not None else stats.v_reach,
+            frontier_degrees=sample,
+        )
+    else:
+        edges = stats.deg_out_mean * frontier_size
+        touched = est.touched(frontier_size)
+        found = est.found(
+            frontier_size, unvisited if unvisited is not None else stats.v_reach
+        )
+
+    if desc.kind == "topology":
+        # PR-style: every vertex processed, every edge traversed, no "found".
+        edges = float(stats.num_edges) if frontier_size >= stats.num_vertices else edges
+        found = 0.0
+        touched = float(min(touched, stats.v_reach))
+
+    m_bytes = touched_memory_bytes(desc, touched, frontier_size)
+    work = IterationWork(
+        frontier=float(frontier_size),
+        edges=float(edges),
+        found=float(found),
+        touched=float(touched),
+        m_bytes=float(m_bytes),
+    )
+    tb = thread_bounds(desc, hw, work, p=p)
+    pkgs = make_packages(
+        frontier_degrees,
+        tb,
+        variance_ratio=variance_ratio,
+        frontier_size=int(frontier_size),
+    )
+    return PreparedIteration(work=work, bounds=tb, packages=pkgs, used_local_stats=use_local)

@@ -1,0 +1,50 @@
+"""Runtime → cost-estimator feedback (paper §4.4, dotted line — explicitly
+left as future work: "it is also possible that some stage provides feedback
+like the measured cost of a work package ... this might allow to optimize
+later iterations"; we implement it).
+
+After each iteration the engine reports (modeled_ns, measured_ns); an EWMA
+of the log-ratio becomes a per-(algorithm, mode) correction factor applied
+to subsequent predictions. This compensates for systematic model error
+(mis-calibrated L_mem, cache effects the Eq. 12–14 interpolation misses)
+without touching the model structure — predictions stay cheap, accuracy
+improves over a session's lifetime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class CostFeedback:
+    """Per-(algorithm, parallel-mode) multiplicative correction, EWMA'd."""
+
+    alpha: float = 0.2           # EWMA weight for new observations
+    clip: float = 8.0            # bound corrections to [1/clip, clip]
+    _log_corr: dict = dataclasses.field(default_factory=dict)
+    observations: int = 0
+
+    def _key(self, algorithm: str, parallel: bool) -> tuple:
+        return (algorithm, parallel)
+
+    def correction(self, algorithm: str, parallel: bool) -> float:
+        return math.exp(self._log_corr.get(self._key(algorithm, parallel), 0.0))
+
+    def observe(self, algorithm: str, parallel: bool, modeled_ns: float, measured_ns: float) -> None:
+        if modeled_ns <= 0 or measured_ns <= 0:
+            return
+        ratio = max(min(measured_ns / modeled_ns, self.clip), 1.0 / self.clip)
+        key = self._key(algorithm, parallel)
+        prev = self._log_corr.get(key, 0.0)
+        self._log_corr[key] = (1 - self.alpha) * prev + self.alpha * math.log(ratio)
+        self.observations += 1
+
+    def predict(self, algorithm: str, parallel: bool, modeled_ns: float) -> float:
+        """Corrected prediction for the next iteration."""
+        return modeled_ns * self.correction(algorithm, parallel)
+
+    def error_db(self, algorithm: str, parallel: bool, modeled_ns: float, measured_ns: float) -> float:
+        """|log10 prediction error| after correction (for tests/telemetry)."""
+        pred = self.predict(algorithm, parallel, modeled_ns)
+        return abs(math.log10(max(pred, 1e-9) / max(measured_ns, 1e-9)))

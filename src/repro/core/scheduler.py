@@ -1,0 +1,183 @@
+"""Runtime component: the work-package scheduler implementing *selective
+sequential execution* (paper §4.3).
+
+Protocol (verbatim adaptation):
+  1. when a task starts, the runtime requests workers up to the upper thread
+     bound T_max from the shared worker pool;
+  2. arriving workers register; the scheduler checks whether registered
+     workers ≥ T_min (minimum boundary for parallel execution);
+  3. if yes → assign packages to the workers for parallel execution;
+  4. if no  → one worker executes a package *sequentially* while the others
+     wait; the scheduler re-evaluates after each package;
+  5. after ``seq_package_limit`` sequential packages it releases all but one
+     worker and completes the whole task sequentially.
+
+The pool abstracts the machine: CPU threads in the paper, TPU device groups
+here. The scheduler is deliberately decentralized — no central task scheduler
+needs to understand graph queries (paper: avoids a central scheduler that
+deals with many short heterogeneous tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Literal
+
+import numpy as np
+
+from .bounds import ThreadBounds
+from .packaging import WorkPackages
+
+
+class WorkerPool:
+    """System-wide execution resource shared by all concurrent queries.
+
+    Capacity = P (cores / devices). Thread-safe so concurrent sessions can
+    contend for workers, which is what produces the paper's inter-query
+    behaviour (under load, grants shrink and queries fall back to sequential
+    execution)."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._available = int(capacity)
+        self._lock = threading.Lock()
+
+    def request(self, n: int) -> int:
+        """Grant up to n workers (at least 0); non-blocking."""
+        with self._lock:
+            grant = max(min(n, self._available), 0)
+            self._available -= grant
+            return grant
+
+    def release(self, n: int) -> None:
+        with self._lock:
+            self._available = min(self._available + n, self.capacity)
+
+    @property
+    def available(self) -> int:
+        with self._lock:
+            return self._available
+
+    def resize(self, new_capacity: int) -> None:
+        """Elastic scaling: grow/shrink the machine (node join/loss)."""
+        with self._lock:
+            delta = int(new_capacity) - self.capacity
+            self.capacity = int(new_capacity)
+            self._available = max(min(self._available + delta, self.capacity), 0)
+
+
+@dataclasses.dataclass
+class PackageRun:
+    package: int
+    mode: Literal["parallel", "sequential"]
+    workers: int
+
+
+@dataclasses.dataclass
+class ScheduleTrace:
+    """Decision record for one task execution (tests + benchmarks)."""
+
+    requested: int
+    runs: list[PackageRun] = dataclasses.field(default_factory=list)
+    released_early: bool = False
+
+    @property
+    def parallel_fraction(self) -> float:
+        if not self.runs:
+            return 0.0
+        return sum(r.mode == "parallel" for r in self.runs) / len(self.runs)
+
+    @property
+    def max_workers(self) -> int:
+        return max((r.workers for r in self.runs), default=1)
+
+
+def largest_pow2_leq(n: int) -> int:
+    if n < 1:
+        return 0
+    return 1 << (int(n).bit_length() - 1)
+
+
+class PackageScheduler:
+    """Selective sequential execution over one task's package list."""
+
+    def __init__(
+        self,
+        pool: WorkerPool,
+        *,
+        seq_package_limit: int = 4,
+    ):
+        self.pool = pool
+        self.seq_package_limit = seq_package_limit
+
+    def run(
+        self,
+        packages: WorkPackages,
+        bounds: ThreadBounds,
+        execute_parallel: Callable[[np.ndarray, int], None],
+        execute_sequential: Callable[[np.ndarray], None],
+    ) -> ScheduleTrace:
+        """Execute all packages of one iteration.
+
+        execute_parallel(package_ids, t): run the given packages with t-way
+        parallelism (device group of size t / t threads).
+        execute_sequential(package_ids): run the given packages on one worker.
+        """
+        order = packages.order[: packages.n_packages]
+        if not bounds.parallel or packages.n_packages <= 1:
+            # preparation already decided sequential: take one worker at most
+            granted = self.pool.request(1)
+            trace = ScheduleTrace(requested=1)
+            try:
+                execute_sequential(order)
+                trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in order)
+            finally:
+                self.pool.release(granted)
+            return trace
+
+        requested = bounds.t_max
+        granted = self.pool.request(requested)
+        trace = ScheduleTrace(requested=requested)
+        try:
+            cursor = 0
+            seq_done = 0
+            n = len(order)
+            while cursor < n:
+                usable = largest_pow2_leq(granted)
+                if usable >= max(bounds.t_min, 2):
+                    # parallel phase: hand the remaining packages to the group
+                    batch = order[cursor:]
+                    execute_parallel(batch, usable)
+                    trace.runs.extend(
+                        PackageRun(int(p), "parallel", usable) for p in batch
+                    )
+                    cursor = n
+                elif seq_done < self.seq_package_limit:
+                    # below the parallel boundary: one worker runs one package,
+                    # the rest wait; re-evaluate afterwards (workers may have
+                    # freed up or new ones may have arrived)
+                    pkg = order[cursor : cursor + 1]
+                    execute_sequential(pkg)
+                    trace.runs.append(PackageRun(int(pkg[0]), "sequential", 1))
+                    cursor += 1
+                    seq_done += 1
+                    extra = self.pool.request(requested - granted)
+                    granted += extra
+                else:
+                    # give up on parallelism: release all but one worker and
+                    # finish sequentially (§4.3 last step)
+                    if granted > 1:
+                        self.pool.release(granted - 1)
+                        granted = 1
+                    batch = order[cursor:]
+                    execute_sequential(batch)
+                    trace.runs.extend(
+                        PackageRun(int(p), "sequential", 1) for p in batch
+                    )
+                    trace.released_early = True
+                    cursor = n
+        finally:
+            self.pool.release(granted)
+        return trace

@@ -1,0 +1,1 @@
+from .fault_tolerance import ElasticPlan, HeartbeatMonitor, StragglerPolicy

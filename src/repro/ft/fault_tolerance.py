@@ -1,0 +1,119 @@
+"""Fault tolerance: heartbeats, straggler mitigation, elastic re-planning.
+
+The key observation (DESIGN.md §6): the paper's own machinery IS the
+elasticity policy. Node loss shrinks P; re-running Algorithm 1 with the
+surviving device count yields new [T_min, T_max] bounds, and the 8×
+work-package overdecomposition (§4.2) is exactly the work-stealing grain
+that lets surviving workers absorb a failed worker's packages.
+
+Components:
+  * HeartbeatMonitor — tracks liveness per worker group; marks groups dead
+    after ``timeout_s`` without a beat (driven by the launcher loop; in a
+    real deployment the beat is a collective barrier side-channel).
+  * StragglerPolicy — watches per-package latencies; packages slower than
+    ``quantile`` × median get reissued (backup tasks); duplicate completions
+    are idempotent because packages are pure functions of state.
+  * ElasticPlan — reacts to capacity changes: resize the WorkerPool, clamp
+    every in-flight query's ThreadBounds, and (for data parallel jobs)
+    recompute the batch shard map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from ..core.bounds import ThreadBounds
+from ..core.scheduler import WorkerPool
+
+
+class HeartbeatMonitor:
+    def __init__(self, groups: list[str], *, timeout_s: float = 10.0, clock=time.monotonic):
+        self._clock = clock
+        self.timeout_s = timeout_s
+        now = clock()
+        self._last = {g: now for g in groups}
+        self._dead: set[str] = set()
+
+    def beat(self, group: str) -> None:
+        if group in self._dead:
+            return  # rejoin handled explicitly via rejoin()
+        self._last[group] = self._clock()
+
+    def rejoin(self, group: str) -> None:
+        self._dead.discard(group)
+        self._last[group] = self._clock()
+
+    def check(self) -> list[str]:
+        """Returns newly-dead groups."""
+        now = self._clock()
+        newly = [
+            g
+            for g, t in self._last.items()
+            if g not in self._dead and now - t > self.timeout_s
+        ]
+        self._dead.update(newly)
+        return newly
+
+    @property
+    def alive(self) -> list[str]:
+        return [g for g in self._last if g not in self._dead]
+
+
+@dataclasses.dataclass
+class PackageTiming:
+    package: int
+    started: float
+    finished: float | None = None
+
+
+class StragglerPolicy:
+    """Backup-task reissue for tail packages (8× overdecomposition grain)."""
+
+    def __init__(self, *, slow_factor: float = 3.0, min_samples: int = 4, clock=time.monotonic):
+        self.slow_factor = slow_factor
+        self.min_samples = min_samples
+        self._clock = clock
+        self._timings: dict[int, PackageTiming] = {}
+
+    def started(self, package: int) -> None:
+        self._timings[package] = PackageTiming(package, self._clock())
+
+    def finished(self, package: int) -> None:
+        t = self._timings.get(package)
+        if t and t.finished is None:
+            t.finished = self._clock()
+
+    def to_reissue(self) -> list[int]:
+        done = [t.finished - t.started for t in self._timings.values() if t.finished]
+        if len(done) < self.min_samples:
+            return []
+        median = float(np.median(done))
+        now = self._clock()
+        return [
+            t.package
+            for t in self._timings.values()
+            if t.finished is None and now - t.started > self.slow_factor * max(median, 1e-9)
+        ]
+
+
+class ElasticPlan:
+    """Capacity-change reaction: pool resize + bounds clamp + restride."""
+
+    def __init__(self, pool: WorkerPool):
+        self.pool = pool
+        self.events: list[tuple[str, int]] = []
+
+    def on_capacity_change(self, new_capacity: int, bounds_in_flight: list[ThreadBounds]) -> list[ThreadBounds]:
+        old = self.pool.capacity
+        self.pool.resize(new_capacity)
+        self.events.append(("shrink" if new_capacity < old else "grow", new_capacity))
+        return [b.clamp(new_capacity) for b in bounds_in_flight]
+
+    @staticmethod
+    def reshard_batch(global_batch: int, survivors: int) -> list[tuple[int, int]]:
+        """Re-stride a data-parallel batch over the surviving workers."""
+        bounds = np.linspace(0, global_batch, survivors + 1).round().astype(int)
+        return [(int(a), int(b)) for a, b in zip(bounds[:-1], bounds[1:])]

@@ -1,0 +1,180 @@
+"""Graph data structures.
+
+CSR is the primary topology index (the paper's "adjacency list"); statistics
+required by the cost model (§4.1.2) are gathered *during construction* so that
+they are free at query time. All arrays are fixed-shape jnp arrays so every
+algorithm lowers to a static XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed-sparse-row adjacency (out-edges).
+
+    indptr:  [V+1] int32 — row offsets.
+    indices: [E]   int32 — destination vertex of each out-edge.
+    """
+
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def out_degrees(self) -> jnp.ndarray:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def edge_sources(self) -> jnp.ndarray:
+        """[E] int32 source vertex per edge (CSR row expansion)."""
+        v = self.num_vertices
+        return jnp.asarray(
+            np.repeat(np.arange(v, dtype=np.int32), np.asarray(self.out_degrees())),
+            dtype=jnp.int32,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Construction-time statistics (paper §4.1.2, Table 1).
+
+    Gathered while the adjacency index is built; used by the estimators and
+    the cost model without touching the graph again.
+    """
+
+    num_vertices: int
+    num_edges: int
+    v_reach: int            # |V_reach|: neither isolated nor without in-edge
+    deg_out_mean: float     # mean out-degree over all vertices
+    deg_out_max: int        # max out-degree
+    deg_in_mean: float
+    deg_in_max: int
+    # degree variance indicator used by §4.1.2 (threshold 1.1)
+    @property
+    def degree_variance_ratio(self) -> float:
+        if self.deg_out_mean <= 0:
+            return 1.0
+        return float(self.deg_out_max) / float(self.deg_out_mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A graph bundle: out-CSR, in-CSR (for pull), COO views, and stats."""
+
+    csr: CSRGraph                  # out-edges (push / BFS top-down)
+    csr_in: CSRGraph               # in-edges  (pull PR)
+    src: jnp.ndarray               # [E] COO source (sorted by src)
+    dst: jnp.ndarray               # [E] COO destination
+    stats: GraphStats
+    name: str = "graph"
+    surrogate: bool = False        # True when standing in for a SNAP dataset
+
+    @property
+    def num_vertices(self) -> int:
+        return self.csr.num_vertices
+
+    @property
+    def num_edges(self) -> int:
+        return self.csr.num_edges
+
+    def out_degrees(self) -> jnp.ndarray:
+        return self.csr.out_degrees()
+
+    def in_degrees(self) -> jnp.ndarray:
+        return self.csr_in.out_degrees()
+
+
+def _csr_from_coo_np(src: np.ndarray, dst: np.ndarray, num_vertices: int):
+    order = np.argsort(src, kind="stable")
+    src_s = src[order]
+    dst_s = dst[order]
+    counts = np.bincount(src_s, minlength=num_vertices).astype(np.int64)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr.astype(np.int32), dst_s.astype(np.int32), src_s.astype(np.int32)
+
+
+def build_graph(
+    src,
+    dst,
+    num_vertices: int,
+    *,
+    name: str = "graph",
+    dedup: bool = False,
+    surrogate: bool = False,
+) -> Graph:
+    """Build the full graph bundle + stats from a COO edge list.
+
+    Statistics are collected during this construction pass (paper §4.1.2):
+    out/in degree mean & max, and |V_reach| (vertices that are neither
+    isolated nor lacking an incoming edge — the paper's approximation).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.ndim != 1 or src.shape != dst.shape:
+        raise ValueError("src/dst must be 1-D arrays of equal length")
+    if src.size and (src.min() < 0 or src.max() >= num_vertices):
+        raise ValueError("src out of range")
+    if dst.size and (dst.min() < 0 or dst.max() >= num_vertices):
+        raise ValueError("dst out of range")
+    if dedup and src.size:
+        key = src * num_vertices + dst
+        _, keep = np.unique(key, return_index=True)
+        src, dst = src[keep], dst[keep]
+
+    indptr, indices, src_sorted = _csr_from_coo_np(src, dst, num_vertices)
+    indptr_in, indices_in, _ = _csr_from_coo_np(dst, src, num_vertices)
+
+    out_deg = np.diff(indptr)
+    in_deg = np.diff(indptr_in)
+    has_in = in_deg > 0
+    isolated = (out_deg == 0) & (in_deg == 0)
+    v_reach = int(np.count_nonzero(has_in & ~isolated))
+
+    stats = GraphStats(
+        num_vertices=int(num_vertices),
+        num_edges=int(src.size),
+        v_reach=max(v_reach, 1),
+        deg_out_mean=float(out_deg.mean()) if num_vertices else 0.0,
+        deg_out_max=int(out_deg.max()) if num_vertices else 0,
+        deg_in_mean=float(in_deg.mean()) if num_vertices else 0.0,
+        deg_in_max=int(in_deg.max()) if num_vertices else 0,
+    )
+    csr = CSRGraph(jnp.asarray(indptr), jnp.asarray(indices))
+    csr_in = CSRGraph(jnp.asarray(indptr_in), jnp.asarray(indices_in))
+    dst_by_src = indices  # already sorted by src
+    return Graph(
+        csr=csr,
+        csr_in=csr_in,
+        src=jnp.asarray(src_sorted),
+        dst=jnp.asarray(dst_by_src),
+        stats=stats,
+        name=name,
+        surrogate=surrogate,
+    )
+
+
+def pad_edges(src: jnp.ndarray, dst: jnp.ndarray, multiple: int, fill: int):
+    """Pad a COO edge list to a multiple (static-shape work packages)."""
+    e = src.shape[0]
+    target = ((e + multiple - 1) // multiple) * multiple
+    pad = target - e
+    if pad == 0:
+        return src, dst, e
+    src = jnp.concatenate([src, jnp.full((pad,), fill, src.dtype)])
+    dst = jnp.concatenate([dst, jnp.full((pad,), fill, dst.dtype)])
+    return src, dst, e

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Online-softmax over KV tiles with VMEM scratch accumulators — the classic
+IO-aware schedule (FlashAttention [arXiv:2205.14135]) retargeted at TPU:
+MXU-aligned q/k tiles, sequential innermost KV grid axis carrying (m, l,
+acc) scratch across steps, output written on the last KV step.
+
+  grid = (B·H, S/BLOCK_Q, S/BLOCK_K)   (KV innermost — sequential on TPU)
+  q tile [BLOCK_Q, D], k/v tiles [BLOCK_K, D], scratch m/l [BLOCK_Q],
+  acc [BLOCK_Q, D] — VMEM working set ≈ (2·BLOCK_K + 2·BLOCK_Q)·D·2B.
+
+The pure-JAX twin (repro.layers.attention.blocked_causal_attention) shares
+the math; ref.py is the unblocked oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 512
+BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, block_q: int, block_k: int, n_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale         # [BQ, D]
+    k = k_ref[0].astype(jnp.float32)                 # [BK, D]
+    v = v_ref[0].astype(jnp.float32)                 # [BK, D]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # [BQ, BK]
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    scores = jnp.where(cols <= rows, scores, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [BH, S, D]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    n_q, n_k = s // block_q, s // block_k
+    scale = d ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, n_k=n_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper: [B, S, H, D] layout plumbing around the flash kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 512, block_k: int = 512, interpret: bool = True):
+    """q/k/v: [B, S, H, D] (same H — expand GQA beforehand) -> [B, S, H, D]."""
+    b, s, h, d = q.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = flash_attention_pallas(
+        fold(q), fold(k), fold(v), block_q=block_q, block_k=block_k, interpret=interpret
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

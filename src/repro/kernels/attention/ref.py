@@ -1,0 +1,13 @@
+"""Unblocked causal-attention oracle."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """q/k/v: [BH, S, D] -> [BH, S, D] (fp32 math)."""
+    bh, s, d = q.shape
+    scores = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * d**-0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)

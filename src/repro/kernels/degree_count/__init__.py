@@ -1,0 +1,3 @@
+from .ops import degree_count
+from .ref import degree_count_ref
+from .degree_count import degree_count_pallas, EDGE_BLOCK, COUNTER_TILE

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: degree count (vertex-ID histogram) — the paper's §5.1
+calibration/reference algorithm.
+
+CPU original: fetch-and-add atomics on a shared counter array, 16k-edge work
+packages. TPU adaptation (DESIGN.md §2): atomics do not exist — each grid
+step turns a 16k-edge block into a one-hot comparison tile and reduces it on
+the VPU/MXU, accumulating *conflict-free* partial counters in VMEM; cross-
+block combination happens through the sequential grid revisiting the same
+output tile (and across devices via an explicit psum in ops.py).
+
+Tiling:
+  grid = (num_counter_tiles, num_edge_blocks)
+  ids block:     [EDGE_BLOCK]            (VMEM, revisited per counter tile)
+  counters tile: [COUNTER_TILE]          (VMEM accumulator, int32)
+
+The one-hot compare [EDGE_BLOCK, COUNTER_TILE] is generated in registers and
+summed immediately — the working set stays EDGE_BLOCK·COUNTER_TILE·4 B
+(16k × 512 × 4 B = 32 MiB worst case; defaults keep it at 4 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EDGE_BLOCK = 16 * 1024   # the paper's work-package grain (§5.1)
+COUNTER_TILE = 2048
+
+
+def _degree_count_kernel(ids_ref, out_ref, *, counter_tile: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    i = pl.program_id(0)
+    ids = ids_ref[...]                                   # [EDGE_BLOCK] int32
+    base = i * counter_tile
+    lanes = base + jax.lax.broadcasted_iota(jnp.int32, (counter_tile,), 0)
+    # one-hot compare + reduce: [E_BLK, C_TILE] -> [C_TILE]
+    onehot = (ids[:, None] == lanes[None, :]).astype(jnp.int32)
+    out_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def degree_count_pallas(
+    ids: jnp.ndarray,
+    num_counters: int,
+    *,
+    edge_block: int = EDGE_BLOCK,
+    counter_tile: int = COUNTER_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Histogram of ``ids`` (already reduced mod num_counters by the caller).
+
+    ids: [E] int32, padded with -1 (never matches a lane).
+    Returns counts [num_counters] int32."""
+    e = ids.shape[0]
+    assert e % edge_block == 0, "pad ids to a multiple of edge_block"
+    assert num_counters % counter_tile == 0, "pad counters to tile multiple"
+    grid = (num_counters // counter_tile, e // edge_block)
+    return pl.pallas_call(
+        functools.partial(_degree_count_kernel, counter_tile=counter_tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((edge_block,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((counter_tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((num_counters,), jnp.int32),
+        interpret=interpret,
+    )(ids)

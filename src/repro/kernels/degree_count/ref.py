@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the degree-count kernel."""
+import jax.numpy as jnp
+
+
+def degree_count_ref(ids: jnp.ndarray, num_counters: int) -> jnp.ndarray:
+    """ids: [E] int32 (padding = -1, ignored). -> counts [num_counters] int32."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    return (
+        jnp.zeros((num_counters,), jnp.int32)
+        .at[safe]
+        .add(valid.astype(jnp.int32), mode="drop")
+    )

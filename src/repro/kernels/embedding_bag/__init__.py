@@ -1,0 +1,3 @@
+from .ops import embedding_bag
+from .ref import embedding_bag_ref
+from .embedding_bag import embedding_bag_pallas

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + per-bag sum reduce).
+
+JAX has no native EmbeddingBag; the TPU-native formulation uses *scalar
+prefetch*: the flat id and segment arrays are prefetched into SMEM and drive
+the BlockSpec index maps, so each grid step DMAs exactly one table row
+(HBM → VMEM) and accumulates it into the output row of its bag — the
+revisit-accumulate pattern (sequential TPU grid) replacing the CPU's
+scatter-add atomics.
+
+  grid = (N,)  — one step per (id, segment) pair
+  table row block:  [1, D] selected by ids[i]      (scalar-prefetch DMA)
+  output row block: [1, D] selected by segments[i] (revisited, accumulated)
+
+Bags must be sorted (segments non-decreasing) so each output row's visits
+are consecutive — ops.py sorts and also pre-scales weighted bags.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embag_kernel(ids_ref, segs_ref, w_ref, table_row_ref, out_ref):
+    i = pl.program_id(0)
+    seg = segs_ref[i]
+    first = jnp.logical_or(i == 0, segs_ref[jnp.maximum(i - 1, 0)] != seg)
+
+    row = table_row_ref[...] * w_ref[i]
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row
+
+
+def embedding_bag_pallas(
+    table: jnp.ndarray,     # [V, D]
+    ids: jnp.ndarray,       # [N] int32 (sorted by segment)
+    segments: jnp.ndarray,  # [N] int32 non-decreasing
+    weights: jnp.ndarray,   # [N] f32 (1.0 for plain sum; 0.0 for padding)
+    num_bags: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n = ids.shape[0]
+    v, d = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # ids, segments, weights prefetched to SMEM
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, segs, w: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids, segs, w: (segs[i], 0)),
+    )
+    return pl.pallas_call(
+        _embag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, d), table.dtype),
+        interpret=interpret,
+    )(ids, segments, weights, table)

@@ -1,0 +1,29 @@
+"""Jit-adjacent wrapper: sorts (id, segment) pairs by segment (the kernel's
+revisit-accumulate pattern needs consecutive bag visits) and handles empty
+bags (rows never visited stay zero only if some step initializes them —
+ops pre-zeroes by scattering one weight-0 sentinel per empty bag)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedding_bag import embedding_bag_pallas
+
+
+def embedding_bag(table, ids, segments, num_bags: int, *, weights=None, interpret: bool = True):
+    ids = jnp.asarray(ids, jnp.int32)
+    segments = jnp.asarray(segments, jnp.int32)
+    n = ids.shape[0]
+    w = jnp.ones((n,), table.dtype) if weights is None else weights.astype(table.dtype)
+    # append one weight-0 sentinel per bag so every output row is visited
+    sent_ids = jnp.zeros((num_bags,), jnp.int32)
+    sent_segs = jnp.arange(num_bags, dtype=jnp.int32)
+    sent_w = jnp.zeros((num_bags,), table.dtype)
+    ids = jnp.concatenate([ids, sent_ids])
+    segments = jnp.concatenate([segments, sent_segs])
+    w = jnp.concatenate([w, sent_w])
+    order = jnp.argsort(segments, stable=True)
+    return embedding_bag_pallas(
+        table, ids[order], segments[order], w[order], num_bags, interpret=interpret
+    )

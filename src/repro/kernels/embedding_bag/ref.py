@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: take + segment_sum (the repro.layers.embedding path)."""
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, segments, weights, num_bags: int):
+    rows = jnp.take(table, ids, axis=0) * weights[:, None]
+    return jax.ops.segment_sum(rows, segments, num_segments=num_bags)

@@ -1,0 +1,3 @@
+from .ops import score_topk
+from .ref import scoring_ref, topk_ref
+from .scoring import scoring_pallas, CAND_TILE

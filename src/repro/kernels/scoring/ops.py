@@ -1,0 +1,32 @@
+"""Jit'd wrapper: pad candidates to tile multiple, score, hierarchical top-k."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .scoring import CAND_TILE, scoring_pallas
+
+NEG = -3.0e38
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def score_topk(queries, candidates, k: int = 128, *, interpret: bool = True):
+    """-> (scores [B, k], indices [B, k]) over the candidate axis."""
+    n = candidates.shape[0]
+    n_pad = ((n + CAND_TILE - 1) // CAND_TILE) * CAND_TILE
+    cands = jnp.pad(candidates, ((0, n_pad - n), (0, 0)))
+    scores = scoring_pallas(queries, cands, interpret=interpret)   # [B, n_pad]
+    scores = jnp.where(jnp.arange(n_pad)[None, :] < n, scores, NEG)
+    b = scores.shape[0]
+    n_tiles = n_pad // CAND_TILE
+    kk = min(k, CAND_TILE)
+    # per-tile top-k ...
+    tiled = scores.reshape(b, n_tiles, CAND_TILE)
+    tv, ti = jax.lax.top_k(tiled, kk)                    # [B, T, kk]
+    ti = ti + (jnp.arange(n_tiles) * CAND_TILE)[None, :, None]
+    # ... then reduce the [B, T*kk] shortlist
+    fv, fi = jax.lax.top_k(tv.reshape(b, -1), k)
+    idx = jnp.take_along_axis(ti.reshape(b, -1), fi, axis=1)
+    return fv, idx

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for candidate scoring."""
+import jax
+import jax.numpy as jnp
+
+
+def scoring_ref(queries: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+    return (queries.astype(jnp.float32) @ candidates.astype(jnp.float32).T)
+
+
+def topk_ref(queries, candidates, k: int):
+    return jax.lax.top_k(scoring_ref(queries, candidates), k)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: two-tower candidate scoring (retrieval_cand shape).
+
+Scores B query embeddings against N candidate embeddings in MXU tiles:
+
+    grid = (N / CAND_TILE,)
+    queries [B, D] stay resident in VMEM; each step loads a candidate tile
+    [CAND_TILE, D] and emits scores [B, CAND_TILE] via one matmul.
+
+Top-k is reduced hierarchically in ops.py (per-tile top-k → final top-k) so
+the [B, N] score matrix never round-trips through HBM at full width when k
+is small — the fusion the taxonomy §RecSys calls for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CAND_TILE = 2048
+
+
+def _scoring_kernel(q_ref, c_ref, out_ref):
+    q = q_ref[...]        # [B, D]
+    c = c_ref[...]        # [CAND_TILE, D]
+    out_ref[...] = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def scoring_pallas(
+    queries: jnp.ndarray,      # [B, D]
+    candidates: jnp.ndarray,   # [N, D]  (N % CAND_TILE == 0)
+    *,
+    cand_tile: int = CAND_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, d = queries.shape
+    n, d2 = candidates.shape
+    assert d == d2 and n % cand_tile == 0
+    return pl.pallas_call(
+        _scoring_kernel,
+        grid=(n // cand_tile,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((cand_tile, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, cand_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(queries, candidates)

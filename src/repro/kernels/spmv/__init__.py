@@ -1,0 +1,3 @@
+from .ops import spmv, build_tiles
+from .ref import spmv_ref
+from .spmv import spmv_pallas, DST_TILE

@@ -1,0 +1,43 @@
+"""Jit'd wrapper + dst-tiled COO format builder (host-side, numpy)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spmv import DST_TILE, spmv_pallas
+
+
+def build_tiles(src, dst, num_vertices: int, *, dst_tile: int = DST_TILE, chunk_multiple: int = 128):
+    """Sort edges by dst and bucket into per-dst-tile padded chunks.
+
+    Returns (src_chunks [T, C], dstl_chunks [T, C], padded_v). Pad source id
+    0 with local dst -1 (matches no lane)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    v_pad = ((num_vertices + dst_tile - 1) // dst_tile) * dst_tile
+    n_tiles = v_pad // dst_tile
+    order = np.argsort(dst, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    tile_of = dst_s // dst_tile
+    counts = np.bincount(tile_of, minlength=n_tiles)
+    chunk = int(max(counts.max() if counts.size else 1, 1))
+    chunk = ((chunk + chunk_multiple - 1) // chunk_multiple) * chunk_multiple
+    src_chunks = np.zeros((n_tiles, chunk), np.int32)
+    dstl_chunks = np.full((n_tiles, chunk), -1, np.int32)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for t in range(n_tiles):
+        lo, hi = starts[t], starts[t + 1]
+        k = hi - lo
+        src_chunks[t, :k] = src_s[lo:hi]
+        dstl_chunks[t, :k] = dst_s[lo:hi] - t * dst_tile
+    return jnp.asarray(src_chunks), jnp.asarray(dstl_chunks), v_pad
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "interpret"))
+def spmv(src_chunks, dstl_chunks, contrib, num_vertices: int, *, interpret: bool = True):
+    """contrib [V] -> aggregated [num_vertices] (PR-pull inner product)."""
+    out_tiles = spmv_pallas(src_chunks, dstl_chunks, contrib, interpret=interpret)
+    return out_tiles.reshape(-1)[:num_vertices]

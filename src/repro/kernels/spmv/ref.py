@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the SpMV kernel: plain segment-sum over COO."""
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ref(src: jnp.ndarray, dst: jnp.ndarray, contrib: jnp.ndarray, num_vertices: int) -> jnp.ndarray:
+    vals = jnp.take(contrib, src)
+    return jax.ops.segment_sum(vals, dst, num_segments=num_vertices)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: tiled SpMV for PageRank-pull / GNN sum-aggregation.
+
+Format: *dst-tiled COO* built by ops.py — edges sorted by target vertex and
+bucketed into tiles of DST_TILE consecutive targets; each tile's edge chunk
+is padded to a common CHUNK length (ELL-by-tile). The kernel computes, per
+tile,
+
+    out[d] = Σ_{edges e in tile, dst_local(e)=d} contrib[src(e)]
+
+as a one-hot(dst_local) matmul against the gathered contributions — an
+MXU-shaped reduction with no scatter conflicts (each target tile is owned by
+exactly one grid step; pull = owner-computes, the paper's no-atomics path).
+
+The contribution vector is staged in VMEM whole (fits for V ≤ ~4M fp32 — the
+paper's RMAT scales; larger graphs use the segment_sum path in repro.graph).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DST_TILE = 512
+
+
+def _spmv_kernel(src_ref, dstl_ref, contrib_ref, out_ref, *, dst_tile: int):
+    src = src_ref[0, :]           # [CHUNK] int32 global source ids (pad: 0)
+    dstl = dstl_ref[0, :]         # [CHUNK] int32 local target ids (pad: -1)
+    contrib = contrib_ref[...]    # [V] f32 (full vector in VMEM)
+    vals = jnp.take(contrib, src, axis=0)                  # gather [CHUNK]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (dst_tile,), 0)
+    onehot = (dstl[:, None] == lanes[None, :]).astype(vals.dtype)
+    out_ref[0, :] = jnp.sum(onehot * vals[:, None], axis=0)  # [DST_TILE]
+
+
+def spmv_pallas(
+    src_chunks: jnp.ndarray,    # [n_tiles, CHUNK] int32
+    dstl_chunks: jnp.ndarray,   # [n_tiles, CHUNK] int32 (local ids, pad -1)
+    contrib: jnp.ndarray,       # [V] f32
+    *,
+    dst_tile: int = DST_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n_tiles, chunk = src_chunks.shape
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, dst_tile=dst_tile),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec(contrib.shape, lambda i: (0,)),  # whole vector
+        ],
+        out_specs=pl.BlockSpec((1, dst_tile), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, dst_tile), contrib.dtype),
+        interpret=interpret,
+    )(src_chunks, dstl_chunks, contrib)

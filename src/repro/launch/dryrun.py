@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on init.
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# result-shape → moved-bytes weight (per chip, ring algorithms; see
+# EXPERIMENTS.md §Roofline for the convention)
+COLLECTIVE_WEIGHT = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def shape_bytes(sig: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op collective result bytes from post-SPMD HLO text."""
+    out: dict[str, dict] = {
+        op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS
+    }
+    for sig, op in _COLL_RE.findall(hlo_text):
+        base = op.replace("-start", "")
+        b = shape_bytes(sig)
+        out[base]["count"] += 1
+        out[base]["bytes"] += b
+    out["total_weighted_bytes"] = sum(
+        v["bytes"] * COLLECTIVE_WEIGHT[k]
+        for k, v in out.items()
+        if k in COLLECTIVE_WEIGHT
+    )
+    return out
+
+
+def analyze_lowered(lowered) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = parse_collectives(txt)
+    return {
+        "compile_s": round(compile_s, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "hlo_flops": cost.get("flops"),
+        "hlo_bytes": cost.get("bytes accessed"),
+        "collectives": colls,
+        "hlo_chars": len(txt),
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, analysis: bool, variant: str | None = None) -> dict:
+    """Worker: lower+compile one cell (optionally plus trip-1/2 analysis)."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.context import unrolled_scans
+    from repro.sharding.rules import default_rules
+
+    mod = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+
+    kwargs = {}
+    if variant == "blocked":
+        kwargs["blocked"] = True
+    elif variant == "seqpar":
+        kwargs["seq_parallel"] = True
+    elif variant:
+        kwargs["dispatch"] = variant
+    cell = mod.make_cell(shape, **kwargs)
+    rules = default_rules(mesh)
+    rules.update(cell.meta.get("rules_override", {}))
+
+    record: dict = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "cell": cell.name,
+        "kind": cell.kind,
+        "variant": variant or "baseline",
+        "meta": {k: v for k, v in cell.meta.items() if not isinstance(v, dict)},
+    }
+
+    t0 = time.time()
+    lowered = cell.lower(mesh, rules)
+    record["lower_s"] = round(time.time() - t0, 2)
+    record["full"] = analyze_lowered(lowered)
+
+    if analysis and cell.kind in ("train", "prefill", "decode") and arch != "two-tower-retrieval":
+        # trip-1 / trip-2 unrolled variants for exact per-layer scaling
+        trips = {}
+        for n_l in (1, 2):
+            try:
+                c = mod.make_cell(
+                    shape, n_layers_override=n_l, microbatches_override=1, **kwargs
+                )
+            except TypeError:
+                c = mod.make_cell(shape, n_layers_override=n_l, **kwargs)
+            with unrolled_scans():
+                lw = c.lower(mesh, rules)
+            trips[n_l] = analyze_lowered(lw)
+        record["trip1"] = trips[1]
+        record["trip2"] = trips[2]
+
+    return record
+
+
+def scaled_totals(record: dict, n_layers_full: int) -> dict:
+    """fixed + per-layer × L scaling from the trip-1/2 compiles."""
+    t1, t2 = record.get("trip1"), record.get("trip2")
+    if not t1 or not t2:
+        return {}
+
+    def scale(key, sub=None):
+        def get(t):
+            v = t[key] if sub is None else t[key][sub]
+            return v or 0.0
+        per_layer = max(get(t2) - get(t1), 0.0)
+        fixed = max(get(t1) - per_layer, 0.0)
+        return fixed + per_layer * n_layers_full
+
+    out = {
+        "flops_scaled": scale("hlo_flops"),
+        "bytes_scaled": scale("hlo_bytes"),
+        "collective_bytes_scaled": scale("collectives", "total_weighted_bytes"),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--variant", default=None, help="e.g. MoE dispatch=gather")
+    ap.add_argument("--single", action="store_true", help="worker mode: run one cell in-process")
+    ap.add_argument("--all", action="store_true", help="driver: sweep all cells in subprocesses")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.single:
+        rec = run_cell(
+            args.arch, args.shape, args.mesh,
+            analysis=not args.no_analysis, variant=args.variant,
+        )
+        # attach layer scaling if trips were run
+        if "trip1" in rec:
+            from repro.configs import get_arch
+            mod = get_arch(args.arch)
+            cfg = mod.make_config() if args.arch != "schnet" else mod.make_config(args.shape)
+            try:
+                cfg = mod.make_config(args.shape)
+            except TypeError:
+                pass
+            n_l = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 1))
+            mb = getattr(cfg, "microbatches", 1) if rec["kind"] == "train" else 1
+            rec["scaled"] = scaled_totals(rec, n_l)
+            rec["n_layers_full"] = n_l
+        tag = f"{args.arch}__{args.shape}__{args.mesh}"
+        if args.variant:
+            tag += f"__{args.variant}"
+        path = outdir / (tag.replace("/", "_") + ".json")
+        path.write_text(json.dumps(rec, indent=1))
+        print(json.dumps({k: rec[k] for k in ("cell", "mesh", "lower_s")}, indent=None))
+        print(f"wrote {path}")
+        return
+
+    if args.all:
+        from repro.configs import all_cells  # light import (no jax needed)
+
+        cells = all_cells()
+        meshes = args.meshes.split(",")
+        todo = [(a, s, m) for a, s in cells for m in meshes]
+        print(f"dry-run sweep: {len(todo)} runs -> {outdir}")
+        failures = []
+        for i, (a, s, m) in enumerate(todo):
+            tag = f"{a}__{s}__{m}".replace("/", "_")
+            path = outdir / (tag + ".json")
+            if path.exists():
+                print(f"[{i+1}/{len(todo)}] {tag} (cached)")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun", "--single",
+                "--arch", a, "--shape", s, "--mesh", m, "--out", str(outdir),
+            ]
+            if m == "multi" or args.no_analysis:
+                cmd.append("--no-analysis")  # analysis on single-pod only
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            dur = time.time() - t0
+            ok = r.returncode == 0 and path.exists()
+            print(f"[{i+1}/{len(todo)}] {tag}: {'OK' if ok else 'FAIL'} ({dur:.0f}s)")
+            if not ok:
+                failures.append(tag)
+                (outdir / (tag + ".err")).write_text(
+                    r.stdout[-4000:] + "\n---\n" + r.stderr[-8000:]
+                )
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    ap.error("pass --single or --all")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Mesh construction. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (required for the dry-run's
+forced host device count to work)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production mesh: one v5e pod 16×16 (data, model), or 2 pods
+    2×16×16 (pod, data, model). Uses the first prod(shape) devices so a
+    512-device dry-run host can also build the single-pod mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_local_mesh(model: int = 1):
+    """Mesh over whatever devices exist locally (tests / CPU)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,424 @@
+"""Cell programs: (arch × shape) → a jit-able step function + abstract args +
+sharding trees. This is what the dry-run lowers and what train.py/serve.py
+execute for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tf
+from ..models import recsys as tt
+from ..optim import (
+    OptimizerConfig,
+    clip_by_global_norm,
+    make_optimizer,
+    opt_state_logical_axes,
+)
+from ..sharding.rules import default_rules, sharding_tree
+
+
+def pad_to(n: int, multiple: int = 512) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything needed to lower one (arch × shape) cell."""
+
+    name: str
+    kind: str                      # train | prefill | decode | serve | score
+    step_fn: Callable
+    abstract_args: tuple
+    axes_trees: tuple              # logical axes per argument
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def shardings(self, mesh, rules=None):
+        rules = rules or default_rules(mesh)
+        return tuple(
+            sharding_tree(a, ax, mesh, rules)
+            for a, ax in zip(self.abstract_args, self.axes_trees)
+        )
+
+    def lower(self, mesh, rules=None):
+        from ..sharding.context import activation_sharding
+
+        in_sh = self.shardings(mesh, rules)
+        with activation_sharding(mesh, rules or default_rules(mesh)):
+            jitted = jax.jit(
+                self.step_fn, in_shardings=in_sh, donate_argnums=self.donate_argnums
+            )
+            return jitted.lower(*self.abstract_args)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_train_step(cfg: tf.LMConfig, opt_cfg: OptimizerConfig):
+    _, update = make_optimizer(opt_cfg)
+
+    def step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, s = tokens.shape
+        mb = cfg.microbatches
+
+        def loss_of(p, tb, lb):
+            return tf.loss_fn(cfg, p, tb, lb)
+
+        if mb > 1:
+            toks = tokens.reshape(mb, b // mb, s)
+            labs = labels.reshape(mb, b // mb, s)
+
+            def body(carry, xs):
+                gacc, lacc = carry
+                tb, lb = xs
+                loss, g = jax.value_and_grad(loss_of)(params, tb, lb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + loss), None
+
+            from ..sharding.context import scan_unroll
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, loss), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0)), (toks, labs), unroll=scan_unroll()
+            )
+            grads = jax.tree.map(lambda x: x / mb, g)
+            loss = loss / mb
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, tokens, labels)
+
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return step
+
+
+def make_lm_cell(cfg: tf.LMConfig, shape_name: str, opt_cfg: OptimizerConfig) -> CellProgram:
+    sh = LM_SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    params_abs = tf.abstract_params(cfg)
+    p_axes = tf.logical_axes(cfg)
+
+    if sh["kind"] == "train":
+        init_opt, _ = make_optimizer(opt_cfg)
+        opt_abs = jax.eval_shape(init_opt, params_abs)
+        o_axes = opt_state_logical_axes(opt_cfg, p_axes)
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        b_axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}",
+            kind="train",
+            step_fn=lm_train_step(cfg, opt_cfg),
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            axes_trees=(p_axes, o_axes, b_axes),
+            donate_argnums=(0, 1),
+            meta=dict(
+                tokens=b * s,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+                model_flops=6.0 * cfg.active_param_count() * b * s,
+            ),
+        )
+
+    if sh["kind"] == "prefill":
+        def step(params, tokens):
+            return tf.prefill(cfg, params, tokens, max_len=s)
+
+        tok_abs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}",
+            kind="prefill",
+            step_fn=step,
+            abstract_args=(params_abs, tok_abs),
+            axes_trees=(p_axes, ("batch", "seq")),
+            meta=dict(
+                tokens=b * s,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+                model_flops=2.0 * cfg.active_param_count() * b * s,
+            ),
+        )
+
+    # decode: one token against a seq-length cache
+    def step(params, tokens, cache):
+        return tf.decode_step(cfg, params, tokens, cache)
+
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache_abs = tf.abstract_cache(cfg, b, s)
+    c_axes = tf.cache_logical_axes()
+    rules_override = {"cache_seq": ("model",)} if b > 1 else {
+        "cache_seq": ("data", "model")
+    }
+    prog = CellProgram(
+        name=f"{cfg.name}:{shape_name}",
+        kind="decode",
+        step_fn=step,
+        abstract_args=(params_abs, tok_abs, cache_abs),
+        axes_trees=(p_axes, ("batch", "seq"), c_axes),
+        donate_argnums=(2,),
+        meta=dict(
+            tokens=b,
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+            model_flops=2.0 * cfg.active_param_count() * b,
+            kv_bytes=2 * cfg.n_layers * b * s * cfg.n_kv_heads * cfg.dh * 2,
+            rules_override=rules_override,
+        ),
+    )
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_graphs=1),
+    "minibatch_lg": dict(n_nodes=169_984, n_edges=168_960, d_feat=602, n_graphs=1),
+    "ogb_products": dict(n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_graphs=1),
+    "molecule": dict(n_nodes=3840, n_edges=8192, d_feat=16, n_graphs=128),
+}
+
+
+def generic_param_axes(params) -> Any:
+    """GNN/recsys fallback: shard the last dim of every weight over 'mlp'."""
+    def one(p):
+        if p.ndim == 0:
+            return ()
+        return tuple([None] * (p.ndim - 1) + ["mlp"])
+
+    return jax.tree.map(one, params, is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def gnn_abstract_batch(shape: dict, *, d_edge: int, d_target: int, with_positions: bool, per_graph_target: bool):
+    n = pad_to(shape["n_nodes"])
+    e = pad_to(shape["n_edges"])
+    g = shape["n_graphs"]
+    batch = {
+        "nodes": jax.ShapeDtypeStruct((n, shape["d_feat"]), jnp.float32),
+        "src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_feat": jax.ShapeDtypeStruct((e, d_edge), jnp.float32),
+        "node_mask": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+        "graph_ids": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "targets": jax.ShapeDtypeStruct(
+            (g,) if per_graph_target else (n, d_target),
+            jnp.float32 if not per_graph_target or True else jnp.float32,
+        ),
+    }
+    axes = {
+        "nodes": ("nodes", None),
+        "src": ("edges",),
+        "dst": ("edges",),
+        "edge_feat": ("edges", None),
+        "node_mask": ("nodes",),
+        "edge_mask": ("edges",),
+        "graph_ids": ("nodes",),
+        "targets": (None,) if per_graph_target else ("nodes", None),
+    }
+    if with_positions:
+        batch["positions"] = jax.ShapeDtypeStruct((n, 3), jnp.float32)
+        axes["positions"] = ("nodes", None)
+    return batch, axes
+
+
+def make_gnn_cell(
+    arch: str,
+    model_mod,
+    cfg,
+    shape_name: str,
+    opt_cfg: OptimizerConfig,
+    *,
+    d_edge: int,
+    d_target: int,
+    with_positions: bool = False,
+    per_graph_target: bool = False,
+    int_targets: bool = False,
+    blocked: bool = False,
+    n_edge_blocks: int = 512,
+) -> CellProgram:
+    shape = GNN_SHAPES[shape_name]
+    params_abs = jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_axes = generic_param_axes(params_abs)
+    batch_abs, b_axes = gnn_abstract_batch(
+        shape,
+        d_edge=d_edge,
+        d_target=d_target,
+        with_positions=with_positions,
+        per_graph_target=per_graph_target,
+    )
+    if int_targets:
+        batch_abs["targets"] = jax.ShapeDtypeStruct(
+            batch_abs["targets"].shape[:1], jnp.int32
+        )
+        b_axes["targets"] = ("nodes",)
+    if blocked:
+        # owner-blocked edge layout (degree-binned packaging keeps blocks
+        # near-uniform; see repro.graph.partition): src [P, Epb] global ids,
+        # dst_local [P, Epb] within the owner's node range
+        p_blk = n_edge_blocks
+        epb = pad_to((pad_to(shape["n_edges"]) + p_blk - 1) // p_blk, 128)
+        for k in ("src", "dst", "edge_feat", "edge_mask"):
+            batch_abs.pop(k); b_axes.pop(k)
+        batch_abs["src"] = jax.ShapeDtypeStruct((p_blk, epb), jnp.int32)
+        batch_abs["dst_local"] = jax.ShapeDtypeStruct((p_blk, epb), jnp.int32)
+        batch_abs["edge_feat"] = jax.ShapeDtypeStruct((p_blk, epb, d_edge), jnp.float32)
+        batch_abs["edge_mask"] = jax.ShapeDtypeStruct((p_blk, epb), jnp.bool_)
+        b_axes["src"] = ("edge_blocks", None)
+        b_axes["dst_local"] = ("edge_blocks", None)
+        b_axes["edge_feat"] = ("edge_blocks", None, None)
+        b_axes["edge_mask"] = ("edge_blocks", None)
+    n_graphs = shape["n_graphs"]
+
+    init_opt, update = make_optimizer(opt_cfg)
+    opt_abs = jax.eval_shape(init_opt, params_abs)
+    o_axes = opt_state_logical_axes(opt_cfg, p_axes)
+
+    loss_fn = model_mod.loss_fn_blocked if blocked else model_mod.loss_fn
+
+    def step(params, opt_state, batch):
+        batch = dict(batch, n_graphs=n_graphs)
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    d_hidden = getattr(cfg, "d_hidden", 128)
+    n_layers = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 1))
+    # per message-passing layer: edge MLP + node MLP ≈ 6·E·d² + 4·N·d² MACs
+    model_flops = 6.0 * (
+        shape["n_edges"] * 6 * d_hidden**2 + shape["n_nodes"] * 4 * d_hidden**2
+    ) * n_layers / 3.0  # fwd+bwd ≈ 3× fwd: 2·MACs·3
+    return CellProgram(
+        name=f"{arch}:{shape_name}",
+        kind="train",
+        step_fn=step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        axes_trees=(p_axes, o_axes, b_axes),
+        donate_argnums=(0, 1),
+        meta=dict(
+            n_nodes=shape["n_nodes"],
+            n_edges=shape["n_edges"],
+            model_flops=model_flops,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="score", batch=1, n_candidates=1_048_576),
+}
+
+
+def _tt_feats_abs(fields, batch: int):
+    feats = {
+        f.name: jax.ShapeDtypeStruct((batch, f.multi_hot), jnp.int32) for f in fields
+    }
+    axes = {f.name: ("batch", None) for f in fields}
+    return feats, axes
+
+
+def make_recsys_cell(cfg: tt.TwoTowerConfig, shape_name: str, opt_cfg: OptimizerConfig) -> CellProgram:
+    sh = RECSYS_SHAPES[shape_name]
+    b = sh["batch"]
+    params_abs = jax.eval_shape(lambda: tt.init_params(cfg, jax.random.PRNGKey(0)))
+    p_axes = generic_param_axes(params_abs)
+    # embedding tables row-sharded
+    for side in ("user_tables", "item_tables"):
+        p_axes[side] = {k: ("rows", None) for k in p_axes[side]}
+
+    ufe, ua = _tt_feats_abs(cfg.user_fields, b)
+    ife, ia = _tt_feats_abs(cfg.item_fields, b)
+
+    table_rows = sum(f.vocab for f in cfg.user_fields + cfg.item_fields)
+    tower_macs = sum(
+        a * bb for a, bb in zip(
+            (len(cfg.user_fields) * cfg.embed_dim,) + cfg.tower_mlp[:-1], cfg.tower_mlp
+        )
+    ) * 2  # two towers
+
+    if sh["kind"] == "train":
+        init_opt, update = make_optimizer(opt_cfg)
+        opt_abs = jax.eval_shape(init_opt, params_abs)
+        o_axes = opt_state_logical_axes(opt_cfg, p_axes)
+        batch_abs = {"user": ufe, "item": ife, "log_q": jax.ShapeDtypeStruct((b,), jnp.float32)}
+        b_axes = {"user": ua, "item": ia, "log_q": ("batch",)}
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: tt.loss_fn(cfg, p, batch))(params)
+            grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+            params, opt_state = update(opt_cfg, grads, opt_state, params)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        model_flops = 6.0 * b * tower_macs + 6.0 * b * b * cfg.tower_mlp[-1]
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}",
+            kind="train",
+            step_fn=step,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            axes_trees=(p_axes, o_axes, b_axes),
+            donate_argnums=(0, 1),
+            meta=dict(batch=b, table_rows=table_rows, model_flops=model_flops),
+        )
+
+    if sh["kind"] == "serve":
+        def step(params, user, item):
+            u = tt.user_embedding(cfg, params, user, b)
+            v = tt.item_embedding(cfg, params, item, b)
+            return (u * v).sum(-1)
+
+        return CellProgram(
+            name=f"{cfg.name}:{shape_name}",
+            kind="serve",
+            step_fn=step,
+            abstract_args=(params_abs, ufe, ife),
+            axes_trees=(p_axes, ua, ia),
+            meta=dict(batch=b, model_flops=2.0 * b * tower_macs),
+        )
+
+    # retrieval scoring
+    n_cand = sh["n_candidates"]
+    cand_abs = jax.ShapeDtypeStruct((n_cand, cfg.tower_mlp[-1]), jnp.float32)
+
+    def step(params, user, cands):
+        return tt.score_candidates(cfg, params, user, cands, top_k=128)
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape_name}",
+        kind="score",
+        step_fn=step,
+        abstract_args=(params_abs, ufe, cand_abs),
+        axes_trees=(p_axes, ua, ("candidates", None)),
+        meta=dict(
+            batch=b,
+            n_candidates=n_cand,
+            model_flops=2.0 * b * (tower_macs / 2 + n_cand * cfg.tower_mlp[-1]),
+        ),
+    )

@@ -1,0 +1,207 @@
+"""Attention layers: GQA with RoPE, blocked-causal training attention
+(online-softmax over KV blocks — memory O(seq·block) instead of O(seq²)),
+and split-K decode attention against a KV cache.
+
+The blocked formulation is the pure-JAX counterpart of the Pallas flash
+kernel in ``repro.kernels.attention``; both share the same math and are
+cross-checked in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+def gqa_project(params, x):
+    """x: [B, S, D] → q: [B, S, H, Dh], k/v: [B, S, K, Dh]."""
+    q = jnp.einsum("bsd,dhq->bshq", x, params["wq"])
+    k = jnp.einsum("bsd,dkq->bskq", x, params["wk"])
+    v = jnp.einsum("bsd,dkq->bskq", x, params["wv"])
+    return q, k, v
+
+
+def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """[B, S, K, Dh] → [B, S, K·groups, Dh] by repeating each KV head."""
+    if groups == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, groups, d)).reshape(
+        b, s, kh * groups, d
+    )
+
+
+def blocked_causal_attention(
+    q: jnp.ndarray,  # [B, S, H, Dh]
+    k: jnp.ndarray,  # [B, S, H, Dh] (already GQA-expanded)
+    v: jnp.ndarray,
+    *,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """Causal attention with online softmax over KV blocks (flash-style).
+
+    Never materializes the [S, S] score matrix: peak activation is
+    [B, H, S, block_kv]."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale   # [B,H,S,Dh]
+    kt = k.transpose(0, 2, 3, 1)                                # [B,H,Dh,S]
+    vt = v.transpose(0, 2, 1, 3)                                # [B,H,S,Dh]
+
+    n_blocks = (s + block_kv - 1) // block_kv
+    pad = n_blocks * block_kv - s
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kt = kt.reshape(b, h, dh, n_blocks, block_kv).transpose(3, 0, 1, 2, 4)
+    vt = vt.reshape(b, h, n_blocks, block_kv, dh).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(s)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, blk = inputs
+        scores = jnp.einsum("bhsd,bhdk->bhsk", qt, kb.astype(jnp.float32))
+        kv_pos = blk * block_kv + jnp.arange(block_kv)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < s)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhsk,bhkd->bhsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    acc0 = jnp.zeros((b, h, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kt, vt, jnp.arange(n_blocks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,S,H,Dh]
+
+
+def blocked_causal_attention_gqa(
+    q: jnp.ndarray,  # [B, S, K, G, Dh] — query heads grouped per KV head
+    k: jnp.ndarray,  # [B, S, K, Dh]   — NOT expanded
+    v: jnp.ndarray,
+    *,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    """GQA flash attention without KV expansion (§Perf H2): the einsums carry
+    the (K, G) group structure so K/V are read once per KV head instead of
+    being materialized G× wider — for kv=1 archs (granite) this shrinks the
+    attention working set and its cross-shard traffic by n_heads×.
+
+    Returns [B, S, K·G, Dh]."""
+    b, s, kh, g, dh = q.shape
+    scale = dh ** -0.5
+    qt = q.transpose(0, 2, 3, 1, 4).astype(jnp.float32) * scale   # [B,K,G,S,Dh]
+    kt = k.transpose(0, 2, 3, 1).astype(jnp.float32)              # [B,K,Dh,S]
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)              # [B,K,S,Dh]
+
+    n_blocks = (s + block_kv - 1) // block_kv
+    pad = n_blocks * block_kv - s
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kt = kt.reshape(b, kh, dh, n_blocks, block_kv).transpose(3, 0, 1, 2, 4)
+    vt = vt.reshape(b, kh, n_blocks, block_kv, dh).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(s)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, blk = inputs                                       # [B,K,Dh,Bk]
+        scores = jnp.einsum("bkgsd,bkdt->bkgst", qt, kb)
+        kv_pos = blk * block_kv + jnp.arange(block_kv)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < s)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgst,bktd->bkgsd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, kh, g, s, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kt, vt, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                   # [B,K,G,S,Dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, kh * g, dh).astype(q.dtype)
+
+
+def full_causal_attention(q, k, v):
+    """Unblocked reference (small seqs / tests)."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # [B, 1, H, Dh] — one new token
+    k_cache: jnp.ndarray,  # [B, S, K, Dh]
+    v_cache: jnp.ndarray,  # [B, S, K, Dh]
+    cache_len: jnp.ndarray,  # [B] int32 valid lengths
+    *,
+    q_per_kv: int,
+) -> jnp.ndarray:
+    """Single-token attention over the KV cache (GQA: query heads grouped
+    onto their KV head — no cache expansion, the einsum carries the group
+    axis so the cache is read once).
+
+    Output: [B, 1, H, Dh]."""
+    b, s, kh, dh = k_cache.shape
+    scale = dh ** -0.5
+    qg = q.reshape(b, kh, q_per_kv, dh).astype(jnp.float32) * scale  # [B,K,G,Dh]
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len[:, None]            # [B,S]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, kh * q_per_kv, dh).astype(q.dtype)
+
+
+def attention_layer(
+    params,
+    x: jnp.ndarray,            # [B, S, D]
+    positions: jnp.ndarray,    # [B, S]
+    *,
+    n_kv_heads: int,
+    rope_theta: float = 10000.0,
+    block_kv: int = 512,
+    use_blocked: bool = True,
+    grouped_gqa: bool = True,
+):
+    q, k, v = gqa_project(params, x)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    groups = q.shape[2] // n_kv_heads
+    if use_blocked and grouped_gqa and groups >= 1:
+        b, s, h, dh = q.shape
+        qg = q.reshape(b, s, n_kv_heads, groups, dh)
+        attn = blocked_causal_attention_gqa(qg, k, v, block_kv=block_kv)
+    else:
+        k = repeat_kv(k, groups)
+        v = repeat_kv(v, groups)
+        attn = (
+            blocked_causal_attention(q, k, v, block_kv=block_kv)
+            if use_blocked
+            else full_causal_attention(q, k, v)
+        )
+    return jnp.einsum("bshq,hqd->bsd", attn, params["wo"])

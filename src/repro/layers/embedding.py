@@ -1,0 +1,39 @@
+"""Embedding layers, including EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the bag reduce is
+built from ``jnp.take`` + ``jax.ops.segment_sum`` (taxonomy §RecSys: "this IS
+part of the system"). A row-sharded variant for huge tables lives in
+``repro.sharding`` (mod-partition lookup + psum combine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,     # [V, D]
+    ids: jnp.ndarray,       # [N] flat multi-hot indices
+    segments: jnp.ndarray,  # [N] bag id per index
+    num_bags: int,
+    *,
+    mode: str = "sum",
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """EmbeddingBag: gather rows then segment-reduce per bag → [num_bags, D]."""
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segments, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segments, num_segments=num_bags)
+        n = jax.ops.segment_sum(jnp.ones_like(ids, dtype=rows.dtype), segments, num_segments=num_bags)
+        return s / jnp.maximum(n, 1)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segments, num_segments=num_bags)
+    raise ValueError(mode)

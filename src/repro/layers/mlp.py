@@ -1,0 +1,25 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(params, x):
+    """params: wi_gate [D,F], wi_up [D,F], wo [F,D]."""
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def mlp_2layer(params, x, *, activation=jax.nn.relu):
+    """Generic 2-layer MLP used by the GNN blocks (wi [I,H], wo [H,O])."""
+    h = activation(jnp.einsum("...i,ih->...h", x, params["wi"]) + params["bi"])
+    return jnp.einsum("...h,ho->...o", h, params["wo"]) + params["bo"]

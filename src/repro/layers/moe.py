@@ -1,0 +1,176 @@
+"""Mixture-of-Experts block (top-k routing, SwiGLU experts).
+
+Two dispatch strategies, selectable per config (and the subject of one of
+the §Perf hillclimbs):
+
+  * ``dense``  — GShard-style dispatch/combine einsum with an explicit
+    [tokens, experts, capacity] one-hot tensor. Faithful to the classic TPU
+    formulation; memory-heavy for large E (arctic: E=128).
+  * ``gather`` — capacity-bounded gather dispatch: per expert, select its
+    top-C assigned tokens (token-choice gates, capacity enforced expert-side)
+    and gather [E, C, D] directly; scatter-add the combine. Avoids the
+    T×E×C tensor entirely — the beyond-paper optimization.
+
+Both return identical outputs for tokens that fit capacity (dropped tokens
+pass through the residual only), verified in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    dispatch: str = "dense"  # "dense" | "gather"
+    # gather dispatch: number of token groups with *local* capacity. Set to
+    # the data-shard count so the gather/scatter and top-k stay shard-local
+    # (2-D data×expert MoE layout) — the §Perf H1b optimization.
+    dispatch_groups: int = 1
+    # arctic-style dense residual MLP running in parallel with the experts
+    dense_residual: bool = False
+
+
+def router_probs(params, x):
+    """x: [T, D] → probs [T, E] (fp32 router as is standard)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["w_router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def _expert_ffn(params, x):
+    """SwiGLU with stacked expert weights: x [E, C, D] → [E, C, D]."""
+    g = jnp.einsum("ecd,edf->ecf", x, params["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", x, params["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
+
+
+def moe_dense_dispatch(params, x, cfg: MoEConfig):
+    """GShard dense dispatch. x: [T, D] → ([T, D], aux_loss)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = _capacity(t, cfg)
+
+    probs = router_probs(params, x)                       # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)         # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)          # [T, k, E]
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                          # [T·k, E]
+    pos = (pos * flat).sum(-1).reshape(t, k)                       # [T, k]
+    keep = pos < c
+
+    onehot_e = jax.nn.one_hot(gate_idx, e, dtype=x.dtype)          # [T, k, E]
+    # out-of-capacity positions fall outside num_classes → all-zero rows
+    onehot_c = jax.nn.one_hot(
+        jnp.where(keep, pos, c), c, dtype=x.dtype
+    )                                                              # [T, k, C]
+    disp = jnp.einsum("tke,tkc->tkec", onehot_e, onehot_c)         # [T, k, E, C]
+    dispatch = disp.sum(1)                                         # [T, E, C]
+    combine = jnp.einsum("tk,tkec->tec", gate_vals.astype(x.dtype), disp)
+
+    from ..sharding.context import constrain
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, x)
+    expert_in = constrain(expert_in, ("experts", None, None))
+    expert_out = _expert_ffn(params, expert_in)
+    expert_out = constrain(expert_out, ("experts", None, None))
+    out = jnp.einsum("tec,ecd->td", combine, expert_out)
+
+    aux = _aux_loss(probs, gate_idx, e)
+    return out, aux
+
+
+def moe_gather_dispatch(params, x, cfg: MoEConfig):
+    """Capacity-bounded gather dispatch (no T×E×C tensor). x: [T, D].
+
+    With ``dispatch_groups`` = G > 1, tokens are split into G groups, each
+    with capacity C/G enforced locally: the top-k, gather and scatter all
+    carry G as a leading batch dim, so GSPMD keeps them shard-local when G
+    matches the data-shard count (no cross-shard token movement)."""
+    from ..sharding.context import constrain
+
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = max(int(cfg.dispatch_groups), 1)
+    if t % g != 0:
+        g = 1
+    tg = t // g
+    c = min(max(_capacity(t, cfg) // g, 1), tg)
+
+    probs = router_probs(params, x)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # affinity[t, e] = gate weight if token t chose expert e in its top-k
+    gate_per_expert = (
+        gate_vals[..., None] * (gate_idx[..., None] == jnp.arange(e))
+    ).sum(1)                                                        # [T, E]
+    affinity = gate_per_expert.reshape(g, tg, e).transpose(0, 2, 1) # [G, E, Tg]
+    affinity = constrain(affinity, ("batch", "experts", None))
+    top_gate, tok_local = jax.lax.top_k(affinity, c)                # [G, E, C]
+    valid = top_gate > 0.0
+
+    x_g = constrain(x.reshape(g, tg, d), ("batch", None, None))
+    gathered = jnp.take_along_axis(
+        x_g, tok_local.reshape(g, e * c)[..., None], axis=1
+    )                                                               # [G, E·C, D]
+    expert_in = gathered.reshape(g, e, c, d)
+    expert_in = jnp.where(valid[..., None], expert_in, 0)
+    expert_in = constrain(expert_in, ("batch", "experts", None, None))
+    expert_out = _expert_ffn_grouped(params, expert_in)
+    expert_out = constrain(expert_out, ("batch", "experts", None, None))
+
+    weighted = expert_out * (top_gate * valid).astype(x.dtype)[..., None]
+    gidx = jnp.arange(g)[:, None]
+    out_g = (
+        jnp.zeros((g, tg, d), x.dtype)
+        .at[gidx, tok_local.reshape(g, e * c)]
+        .add(weighted.reshape(g, e * c, d), mode="drop")
+    )
+    out = constrain(out_g, ("batch", None, None)).reshape(t, d)
+    aux = _aux_loss(probs, gate_idx, e)
+    return out, aux
+
+
+def _expert_ffn_grouped(params, x):
+    """SwiGLU with stacked expert weights: x [G, E, C, D] → same shape."""
+    h_g = jnp.einsum("gecd,edf->gecf", x, params["wi_gate"])
+    h_u = jnp.einsum("gecd,edf->gecf", x, params["wi_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    return jnp.einsum("gecf,efd->gecd", h, params["wo"])
+
+
+def _aux_loss(probs, gate_idx, e):
+    """Switch-style load-balancing auxiliary loss."""
+    f = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=0
+    )  # fraction routed (1st choice)
+    p = jnp.mean(probs, axis=0)
+    return e * jnp.sum(f * p)
+
+
+def moe_block(params, x, cfg: MoEConfig):
+    """x: [B, S, D] → ([B, S, D], aux). Flattens tokens for dispatch."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    fn = moe_dense_dispatch if cfg.dispatch == "dense" else moe_gather_dispatch
+    out, aux = fn(params, flat, cfg)
+    if cfg.dense_residual:
+        from .mlp import swiglu
+
+        out = out + swiglu(params["residual"], flat)
+    return out.reshape(b, s, d), aux

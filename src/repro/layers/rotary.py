@@ -1,0 +1,20 @@
+"""Rotary position embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                     # [half]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., seq, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

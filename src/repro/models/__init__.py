@@ -1,0 +1,4 @@
+from . import transformer, recsys
+from .transformer import LMConfig
+from .recsys import TwoTowerConfig, FieldSpec
+from . import gnn

@@ -1,0 +1,5 @@
+from . import common, graphcast, meshgraphnet, pna, schnet
+from .meshgraphnet import MGNConfig
+from .graphcast import GraphCastConfig, multimesh_edges
+from .pna import PNAConfig
+from .schnet import SchNetConfig

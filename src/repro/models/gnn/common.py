@@ -1,0 +1,97 @@
+"""Shared GNN machinery: batch convention, MLP builders, message passing.
+
+Message passing is built on ``jax.ops.segment_sum``/``segment_max`` over an
+edge-index scatter (JAX has no CSR SpMM) — the SpMM kernel regime of the
+taxonomy, and exactly the paper's edge-traversal workload: the scheduler's
+estimators/packaging apply to these edge lists unchanged.
+
+Batch convention (all fixed shapes; masks encode validity):
+  nodes:      [N, F] float
+  src, dst:   [E] int32 (messages flow src → dst)
+  edge_feat:  [E, Fe] float (optional)
+  node_mask:  [N] bool
+  edge_mask:  [E] bool
+  graph_ids:  [N] int32 (disjoint-union batching; 0 if single graph)
+  positions:  [N, 3] (SchNet)
+  targets:    task-dependent
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, sizes: list[int], dtype=jnp.float32, *, layernorm: bool = True) -> dict:
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        fan_in = sizes[i]
+        w = jax.random.normal(k, (sizes[i], sizes[i + 1]), dtype) * (fan_in ** -0.5)
+        b = jnp.zeros((sizes[i + 1],), dtype)
+        layers.append({"w": w, "b": b})
+    p: dict = {"layers": layers}
+    if layernorm:
+        p["ln_scale"] = jnp.ones((sizes[-1],), dtype)
+        p["ln_bias"] = jnp.zeros((sizes[-1],), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x, *, activation=jax.nn.relu) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = jnp.einsum("...i,io->...o", x, layer["w"]) + layer["b"]
+        if i < n - 1:
+            x = activation(x)
+    if "ln_scale" in params:
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+        x = x * params["ln_scale"] + params["ln_bias"]
+    return x
+
+
+def mlp_logical_axes(params: dict, prefix: tuple = ()) -> dict:
+    """Logical axes for an mlp_init pytree: hidden dims shard over 'mlp'."""
+    out: dict = {
+        "layers": [
+            {"w": prefix + ("gnn_in", "mlp"), "b": prefix + ("mlp",)}
+            for _ in params["layers"]
+        ]
+    }
+    if "ln_scale" in params:
+        out["ln_scale"] = prefix + ("mlp",)
+        out["ln_bias"] = prefix + ("mlp",)
+    return out
+
+
+def aggregate(messages, dst, num_nodes: int, how: str = "sum"):
+    if how == "sum":
+        return jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+    if how == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=num_nodes)
+        n = jax.ops.segment_sum(jnp.ones_like(dst, dtype=messages.dtype), dst, num_segments=num_nodes)
+        return s / jnp.maximum(n, 1)[:, None]
+    if how == "max":
+        m = jax.ops.segment_max(messages, dst, num_segments=num_nodes, indices_are_sorted=False)
+        return jnp.where(jnp.isfinite(m), m, 0.0)  # empty segments → -inf → 0
+    if how == "min":
+        m = -jax.ops.segment_max(-messages, dst, num_segments=num_nodes)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    raise ValueError(how)
+
+
+def masked_mse(pred, target, mask):
+    err = ((pred - target) ** 2).mean(-1)
+    return (err * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def masked_ce(logits, labels, mask):
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    ce = (logz - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,220 @@
+"""GraphCast [arXiv:2212.12794]: encoder-processor-decoder mesh GNN.
+
+Config: 16 processor layers, d_hidden=512, mesh refinement 6, 227 variables.
+
+Faithful structure: grid→mesh encoder (one interaction block over grid2mesh
+edges), a 16-layer processor on the multimesh, mesh→grid decoder. The
+multimesh for refinement R is the union of the edge sets of icosahedron
+subdivisions 0..R (``multimesh_edges``). When a batch provides a single
+generic graph (the assigned shape grid), encoder/decoder run over that
+graph's edges and the processor over the same edges — the degenerate
+single-mesh case; the full multimesh path is exercised by the graphcast
+config's own input spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import aggregate, masked_mse, mlp_apply, mlp_init
+from ...sharding.context import constrain, scan_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCastConfig:
+    name: str = "graphcast"
+    n_layers: int = 16
+    d_hidden: int = 512
+    mesh_refinement: int = 6
+    n_vars: int = 227
+    mlp_layers: int = 1
+    aggregator: str = "sum"
+    d_edge_in: int = 4
+    dtype: Any = jnp.float32
+
+
+def multimesh_edges(refinement: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """Icosahedral multimesh: union of edges of subdivisions 0..refinement.
+
+    Returns (src, dst, num_nodes). Subdivision splits each triangle in 4;
+    midpoint vertices are shared via a cache (standard icosphere)."""
+    t = (1.0 + 5 ** 0.5) / 2.0
+    verts = [
+        (-1, t, 0), (1, t, 0), (-1, -t, 0), (1, -t, 0),
+        (0, -1, t), (0, 1, t), (0, -1, -t), (0, 1, -t),
+        (t, 0, -1), (t, 0, 1), (-t, 0, -1), (-t, 0, 1),
+    ]
+    faces = [
+        (0, 11, 5), (0, 5, 1), (0, 1, 7), (0, 7, 10), (0, 10, 11),
+        (1, 5, 9), (5, 11, 4), (11, 10, 2), (10, 7, 6), (7, 1, 8),
+        (3, 9, 4), (3, 4, 2), (3, 2, 6), (3, 6, 8), (3, 8, 9),
+        (4, 9, 5), (2, 4, 11), (6, 2, 10), (8, 6, 7), (9, 8, 1),
+    ]
+    verts = [np.asarray(v, np.float64) / np.linalg.norm(v) for v in verts]
+    all_edges: set[tuple[int, int]] = set()
+
+    def add_face_edges(fs):
+        for a, b, c in fs:
+            for u, v in ((a, b), (b, c), (c, a)):
+                all_edges.add((u, v))
+                all_edges.add((v, u))
+
+    add_face_edges(faces)
+    for _ in range(refinement):
+        cache: dict[tuple[int, int], int] = {}
+
+        def midpoint(a: int, b: int) -> int:
+            key = (min(a, b), max(a, b))
+            if key not in cache:
+                m = verts[a] + verts[b]
+                verts.append(m / np.linalg.norm(m))
+                cache[key] = len(verts) - 1
+            return cache[key]
+
+        new_faces = []
+        for a, b, c in faces:
+            ab, bc, ca = midpoint(a, b), midpoint(b, c), midpoint(c, a)
+            new_faces += [(a, ab, ca), (b, bc, ab), (c, ca, bc), (ab, bc, ca)]
+        faces = new_faces
+        add_face_edges(faces)
+    src, dst = zip(*sorted(all_edges))
+    return np.asarray(src, np.int32), np.asarray(dst, np.int32), len(verts)
+
+
+def _sizes(cfg: GraphCastConfig, d_in: int, d_out: int | None = None) -> list[int]:
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers + [d_out or cfg.d_hidden]
+
+
+def init_params(cfg: GraphCastConfig, key) -> dict:
+    ks = jax.random.split(key, 8 + cfg.n_layers)
+    d = cfg.d_hidden
+    params = {
+        "grid_encoder": mlp_init(ks[0], _sizes(cfg, cfg.n_vars), cfg.dtype),
+        "edge_encoder": mlp_init(ks[1], _sizes(cfg, cfg.d_edge_in), cfg.dtype),
+        "g2m": {
+            "edge_mlp": mlp_init(ks[2], _sizes(cfg, 3 * d), cfg.dtype),
+            "node_mlp": mlp_init(ks[3], _sizes(cfg, 2 * d), cfg.dtype),
+        },
+        "m2g": {
+            "edge_mlp": mlp_init(ks[4], _sizes(cfg, 3 * d), cfg.dtype),
+            "node_mlp": mlp_init(ks[5], _sizes(cfg, 2 * d), cfg.dtype),
+        },
+        "decoder": mlp_init(ks[6], _sizes(cfg, d, cfg.n_vars), cfg.dtype, layernorm=False),
+    }
+
+    def block_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": mlp_init(k1, _sizes(cfg, 3 * d), cfg.dtype),
+            "node_mlp": mlp_init(k2, _sizes(cfg, 2 * d), cfg.dtype),
+        }
+
+    params["processor"] = jax.vmap(block_init)(jnp.stack(ks[8 : 8 + cfg.n_layers]))
+    return params
+
+
+def _interaction(params, h, e, src, dst, emask, n, aggregator):
+    h_src = constrain(h[src], ("edges", None))
+    h_dst = constrain(h[dst], ("edges", None))
+    msg_in = jnp.concatenate([e, h_src, h_dst], axis=-1)
+    e_new = e + mlp_apply(params["edge_mlp"], msg_in) * emask
+    e_new = constrain(e_new, ("edges", None))
+    agg = constrain(aggregate(e_new * emask, dst, n, aggregator), ("nodes", None))
+    h_new = h + mlp_apply(params["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+    h_new = constrain(h_new, ("nodes", None))
+    return h_new, e_new
+
+
+def _interaction_blocked(params, h, e, src, dst_local, emask, n_blocks, nodes_per_block, aggregator):
+    """Owner-blocked interaction (§Perf H3b): edges arrive pre-partitioned by
+    destination owner — src [P, Epb] global ids, dst_local [P, Epb] ∈
+    [0, N/P). The scatter becomes a *batched* segment-sum whose leading axis
+    GSPMD keeps shard-local (no cross-device combine); only the h[src]
+    gather crosses shards (one all-gather of h instead of a full-node
+    all-reduce per layer). This is the paper's cost-based edge packaging
+    applied to message passing: packages = owner-aligned edge blocks."""
+    p, epb = src.shape
+    d = h.shape[-1]
+    h_src = constrain(
+        jnp.take(h, src.reshape(-1), axis=0).reshape(p, epb, d),
+        ("edge_blocks", None, None),
+    )
+    h_flat = h.reshape(n_blocks, nodes_per_block, d)
+    h_dst = constrain(
+        jnp.take_along_axis(h_flat, dst_local[..., None], axis=1),
+        ("edge_blocks", None, None),
+    )
+    msg_in = jnp.concatenate([e, h_src, h_dst], axis=-1)
+    e_new = e + mlp_apply(params["edge_mlp"], msg_in) * emask
+    e_new = constrain(e_new, ("edge_blocks", None, None))
+
+    def seg(m, dl):
+        return jax.ops.segment_sum(m, dl, num_segments=nodes_per_block)
+
+    agg = jax.vmap(seg)(e_new * emask, dst_local)          # [P, N/P, D] local
+    agg = constrain(agg, ("edge_blocks", None, None)).reshape(-1, d)
+    h_new = h + mlp_apply(params["node_mlp"], jnp.concatenate([h, agg], axis=-1))
+    h_new = constrain(h_new, ("nodes", None))
+    return h_new, e_new
+
+
+def forward_blocked(cfg: GraphCastConfig, params, batch) -> jnp.ndarray:
+    """Owner-blocked forward: batch carries src [P, Epb], dst_local [P, Epb],
+    edge_mask [P, Epb]; nodes [N, F] with P | N."""
+    n = batch["nodes"].shape[0]
+    p = batch["src"].shape[0]
+    npb = n // p
+    src, dstl = batch["src"], batch["dst_local"]
+    emask = batch["edge_mask"][..., None].astype(cfg.dtype)
+
+    h = mlp_apply(params["grid_encoder"], batch["nodes"].astype(cfg.dtype))
+    e = mlp_apply(params["edge_encoder"], batch["edge_feat"].astype(cfg.dtype)) * emask
+    h, e = _interaction_blocked(params["g2m"], h, e, src, dstl, emask, p, npb, cfg.aggregator)
+
+    def block(carry, block_params):
+        h, e = carry
+        return _interaction_blocked(
+            block_params, h, e, src, dstl, emask, p, npb, cfg.aggregator
+        ), None
+
+    # NOTE (§Perf H3c, refuted): remat here cuts temp 84→32 GiB but raises
+    # the bound 1.51→2.82 s — the bwd replay repeats the cross-shard h[src]
+    # all-gathers. Rematerialization does not pay when the recomputed region
+    # contains collectives; bf16 activations are the right memory lever.
+    (h, e), _ = jax.lax.scan(block, (h, e), params["processor"], unroll=scan_unroll())
+    h, _ = _interaction_blocked(params["m2g"], h, e, src, dstl, emask, p, npb, cfg.aggregator)
+    return mlp_apply(params["decoder"], h)
+
+
+def loss_fn_blocked(cfg: GraphCastConfig, params, batch) -> jnp.ndarray:
+    pred = forward_blocked(cfg, params, batch)
+    return masked_mse(pred, batch["targets"], batch["node_mask"].astype(jnp.float32))
+
+
+def forward(cfg: GraphCastConfig, params, batch) -> jnp.ndarray:
+    """Single-mesh path: encoder → 16-layer processor → decoder, all on the
+    batch's edge set. → per-node [N, n_vars]."""
+    n = batch["nodes"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+
+    h = mlp_apply(params["grid_encoder"], batch["nodes"].astype(cfg.dtype))
+    e = mlp_apply(params["edge_encoder"], batch["edge_feat"].astype(cfg.dtype)) * emask
+    h, e = _interaction(params["g2m"], h, e, src, dst, emask, n, cfg.aggregator)
+
+    def block(carry, block_params):
+        h, e = carry
+        return _interaction(block_params, h, e, src, dst, emask, n, cfg.aggregator), None
+
+    (h, e), _ = jax.lax.scan(block, (h, e), params["processor"], unroll=scan_unroll())
+    h, _ = _interaction(params["m2g"], h, e, src, dst, emask, n, cfg.aggregator)
+    return mlp_apply(params["decoder"], h)
+
+
+def loss_fn(cfg: GraphCastConfig, params, batch) -> jnp.ndarray:
+    pred = forward(cfg, params, batch)
+    return masked_mse(pred, batch["targets"], batch["node_mask"].astype(jnp.float32))

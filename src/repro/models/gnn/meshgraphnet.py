@@ -1,0 +1,83 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode interaction network.
+
+Config: n_layers=15 processor blocks, d_hidden=128, sum aggregation,
+2-layer MLPs with LayerNorm (the paper's defaults).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import aggregate, masked_mse, mlp_apply, mlp_init
+from ...sharding.context import constrain, scan_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    aggregator: str = "sum"
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3
+    dtype: Any = jnp.float32
+
+
+def _mlp_sizes(cfg: MGNConfig, d_in: int, d_out: int | None = None) -> list[int]:
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers + [d_out or cfg.d_hidden]
+
+
+def init_params(cfg: MGNConfig, key) -> dict:
+    ks = jax.random.split(key, 4 + 2 * cfg.n_layers)
+    d = cfg.d_hidden
+    params = {
+        "node_encoder": mlp_init(ks[0], _mlp_sizes(cfg, cfg.d_node_in), cfg.dtype),
+        "edge_encoder": mlp_init(ks[1], _mlp_sizes(cfg, cfg.d_edge_in), cfg.dtype),
+        "decoder": mlp_init(ks[2], _mlp_sizes(cfg, d, cfg.d_out), cfg.dtype, layernorm=False),
+    }
+    # stacked processor blocks (scanned over)
+    def block_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "edge_mlp": mlp_init(k1, _mlp_sizes(cfg, 3 * d), cfg.dtype),
+            "node_mlp": mlp_init(k2, _mlp_sizes(cfg, 2 * d), cfg.dtype),
+        }
+    params["blocks"] = jax.vmap(block_init)(jnp.stack(ks[4 : 4 + cfg.n_layers]))
+    return params
+
+
+def forward(cfg: MGNConfig, params, batch) -> jnp.ndarray:
+    """→ per-node outputs [N, d_out]."""
+    n = batch["nodes"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    emask = batch["edge_mask"][:, None].astype(cfg.dtype)
+
+    h = mlp_apply(params["node_encoder"], batch["nodes"].astype(cfg.dtype))
+    e = mlp_apply(params["edge_encoder"], batch["edge_feat"].astype(cfg.dtype)) * emask
+
+    def block(carry, block_params):
+        h, e = carry
+        h_src = constrain(h[src], ("edges", None))
+        h_dst = constrain(h[dst], ("edges", None))
+        msg_in = jnp.concatenate([e, h_src, h_dst], axis=-1)
+        e_new = e + mlp_apply(block_params["edge_mlp"], msg_in) * emask
+        e_new = constrain(e_new, ("edges", None))
+        agg = constrain(aggregate(e_new * emask, dst, n, cfg.aggregator), ("nodes", None))
+        h_new = h + mlp_apply(
+            block_params["node_mlp"], jnp.concatenate([h, agg], axis=-1)
+        )
+        h_new = constrain(h_new, ("nodes", None))
+        return (h_new, e_new), None
+
+    (h, e), _ = jax.lax.scan(block, (h, e), params["blocks"], unroll=scan_unroll())
+    return mlp_apply(params["decoder"], h)
+
+
+def loss_fn(cfg: MGNConfig, params, batch) -> jnp.ndarray:
+    pred = forward(cfg, params, batch)
+    return masked_mse(pred, batch["targets"], batch["node_mask"].astype(jnp.float32))

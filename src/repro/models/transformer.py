@@ -1,0 +1,368 @@
+"""Decoder-only transformer LM (llama-family): GQA + RoPE + SwiGLU, optional
+MoE blocks (grok/arctic), scan-over-layers (compile time independent of
+depth), remat, microbatched training step, KV-cache prefill/decode.
+
+Everything is pure functions over param pytrees. ``logical_axes`` returns a
+parallel pytree of logical sharding names consumed by ``repro.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..layers.attention import attention_layer, decode_attention, gqa_project
+from ..layers.mlp import swiglu
+from ..layers.moe import MoEConfig, moe_block
+from ..layers.norms import rmsnorm, rmsnorm_init
+from ..layers.rotary import apply_rope
+from ..sharding.context import constrain, scan_unroll
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    moe: MoEConfig | None = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32   # master params
+    block_kv: int = 1024
+    remat: bool = True
+    microbatches: int = 1            # gradient-accumulation splits
+    seq_parallel: bool = False       # shard the prefill residual stream over 'model' (H2c)
+    aux_loss_weight: float = 0.01
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def param_count(self) -> int:
+        """Total parameters; for MoE also see active_param_count."""
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        h, k, dh = self.n_heads, self.n_kv_heads, self.dh
+        attn = d * h * dh + 2 * d * k * dh + h * dh * d
+        if self.moe:
+            ffn = self.moe.num_experts * 3 * d * f + d * self.moe.num_experts
+            if self.moe.dense_residual:
+                ffn += 3 * d * f
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return l * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        h, k, dh = self.n_heads, self.n_kv_heads, self.dh
+        attn = d * h * dh + 2 * d * k * dh + h * dh * d
+        ffn = self.moe.top_k * 3 * d * f + d * self.moe.num_experts
+        if self.moe.dense_residual:
+            ffn += 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return l * per_layer + 2 * v * d + d
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: LMConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    keys = jax.random.split(key, 12)
+    std = 0.02
+    p: dict = {
+        "ln1": rmsnorm_init(d, cfg.param_dtype),
+        "ln2": rmsnorm_init(d, cfg.param_dtype),
+        "attn": {
+            "wq": jax.random.normal(keys[0], (d, h, dh), cfg.param_dtype) * std,
+            "wk": jax.random.normal(keys[1], (d, k, dh), cfg.param_dtype) * std,
+            "wv": jax.random.normal(keys[2], (d, k, dh), cfg.param_dtype) * std,
+            "wo": jax.random.normal(keys[3], (h, dh, d), cfg.param_dtype) * std,
+        },
+    }
+    if cfg.moe:
+        e = cfg.moe.num_experts
+        moe = {
+            "w_router": jax.random.normal(keys[4], (d, e), cfg.param_dtype) * std,
+            "wi_gate": jax.random.normal(keys[5], (e, d, f), cfg.param_dtype) * std,
+            "wi_up": jax.random.normal(keys[6], (e, d, f), cfg.param_dtype) * std,
+            "wo": jax.random.normal(keys[7], (e, f, d), cfg.param_dtype) * std,
+        }
+        if cfg.moe.dense_residual:
+            moe["residual"] = {
+                "wi_gate": jax.random.normal(keys[8], (d, f), cfg.param_dtype) * std,
+                "wi_up": jax.random.normal(keys[9], (d, f), cfg.param_dtype) * std,
+                "wo": jax.random.normal(keys[10], (f, d), cfg.param_dtype) * std,
+            }
+        p["moe"] = moe
+    else:
+        p["mlp"] = {
+            "wi_gate": jax.random.normal(keys[5], (d, f), cfg.param_dtype) * std,
+            "wi_up": jax.random.normal(keys[6], (d, f), cfg.param_dtype) * std,
+            "wo": jax.random.normal(keys[7], (f, d), cfg.param_dtype) * std,
+        }
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda kk: _layer_init(cfg, kk))(layer_keys)
+    return {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype) * 0.02,
+        "layers": stacked,
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": jax.random.normal(k_head, (cfg.d_model, cfg.vocab), cfg.param_dtype) * 0.02,
+    }
+
+
+def abstract_params(cfg: LMConfig) -> Any:
+    """ShapeDtypeStruct pytree (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def logical_axes(cfg: LMConfig) -> Any:
+    """Pytree (same structure as params) of logical axis-name tuples."""
+    ln = {"scale": ("embed_nope",)}
+    layer = {
+        "ln1": dict(ln),
+        "ln2": dict(ln),
+        "attn": {
+            "wq": ("layers", "embed", "heads", "head_dim"),
+            "wk": ("layers", "embed", "kv_heads", "head_dim"),
+            "wv": ("layers", "embed", "kv_heads", "head_dim"),
+            "wo": ("layers", "heads", "head_dim", "embed"),
+        },
+    }
+    ln_l = {"scale": ("layers", "embed_nope")}
+    layer["ln1"] = dict(ln_l)
+    layer["ln2"] = dict(ln_l)
+    if cfg.moe:
+        moe = {
+            "w_router": ("layers", "embed", "experts_nope"),
+            "wi_gate": ("layers", "experts", "embed", "mlp"),
+            "wi_up": ("layers", "experts", "embed", "mlp"),
+            "wo": ("layers", "experts", "mlp", "embed"),
+        }
+        if cfg.moe.dense_residual:
+            moe["residual"] = {
+                "wi_gate": ("layers", "embed", "mlp"),
+                "wi_up": ("layers", "embed", "mlp"),
+                "wo": ("layers", "mlp", "embed"),
+            }
+        layer["moe"] = moe
+    else:
+        layer["mlp"] = {
+            "wi_gate": ("layers", "embed", "mlp"),
+            "wi_up": ("layers", "embed", "mlp"),
+            "wo": ("layers", "mlp", "embed"),
+        }
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": layer,
+        "final_norm": {"scale": ("embed_nope",)},
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _block(cfg: LMConfig, params, x, positions):
+    h = rmsnorm(params["ln1"], x, eps=cfg.norm_eps)
+    h = attention_layer(
+        {k: v.astype(cfg.dtype) for k, v in params["attn"].items()},
+        h.astype(cfg.dtype),
+        positions,
+        n_kv_heads=cfg.n_kv_heads,
+        rope_theta=cfg.rope_theta,
+        block_kv=cfg.block_kv,
+        use_blocked=x.shape[1] > cfg.block_kv,
+    )
+    x = x + h
+    h2 = rmsnorm(params["ln2"], x, eps=cfg.norm_eps)
+    if cfg.moe:
+        moe_params = jax.tree.map(lambda v: v.astype(cfg.dtype), params["moe"])
+        h2, aux = moe_block(moe_params, h2.astype(cfg.dtype), cfg.moe)
+    else:
+        mlp_params = jax.tree.map(lambda v: v.astype(cfg.dtype), params["mlp"])
+        h2, aux = swiglu(mlp_params, h2.astype(cfg.dtype)), jnp.float32(0.0)
+    return x + h2, aux
+
+
+def forward(cfg: LMConfig, params, tokens):
+    """tokens [B, S] → logits [B, S, V] (cfg.dtype), aux loss (fp32)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, layer_params):
+        y, aux = _block(cfg, layer_params, carry, positions)
+        y = constrain(y, ("batch", "seq", "embed_act"))
+        return y, aux
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, auxes = jax.lax.scan(body_fn, x, params["layers"], unroll=scan_unroll())
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.dtype))
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, auxes.sum()
+
+
+def loss_fn(cfg: LMConfig, params, tokens, labels):
+    """Next-token CE (labels = tokens shifted by caller; -1 = masked)."""
+    logits, aux = forward(cfg, params, tokens)
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    loss = ce.sum() / jnp.maximum(mask.sum(), 1)
+    return loss + cfg.aux_loss_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+        "len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_logical_axes():
+    return {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "len": ("batch",),
+    }
+
+
+def decode_step(cfg: LMConfig, params, tokens, cache, advance=None):
+    """One decode step. tokens [B, 1] → (logits [B, V], new cache).
+
+    ``advance`` [B] bool: slots where False neither write KV nor advance
+    their length (continuous-batching engines admit slots independently)."""
+    b = tokens.shape[0]
+    adv = jnp.ones((b,), bool) if advance is None else advance
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)  # [B,1,D]
+    positions = cache["len"][:, None]                                # [B,1]
+
+    def body(carry, scanned):
+        y = carry
+        layer_params, k_c, v_c = scanned
+        attn_p = {k: v.astype(cfg.dtype) for k, v in layer_params["attn"].items()}
+        h = rmsnorm(layer_params["ln1"], y, eps=cfg.norm_eps)
+        q, k_new, v_new = gqa_project(attn_p, h.astype(cfg.dtype))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        # write the new KV at each sequence's current length (masked slots
+        # rewrite their existing entry — a no-op)
+        bidx = jnp.arange(b)
+        k_old = k_c[bidx, cache["len"]]
+        v_old = v_c[bidx, cache["len"]]
+        k_c = k_c.at[bidx, cache["len"]].set(
+            jnp.where(adv[:, None, None], k_new[:, 0], k_old)
+        )
+        v_c = v_c.at[bidx, cache["len"]].set(
+            jnp.where(adv[:, None, None], v_new[:, 0], v_old)
+        )
+        att = decode_attention(
+            q, k_c, v_c, cache["len"] + adv.astype(jnp.int32), q_per_kv=cfg.q_per_kv
+        )
+        y = y + jnp.einsum("bshq,hqd->bsd", att, attn_p["wo"])
+        h2 = rmsnorm(layer_params["ln2"], y, eps=cfg.norm_eps)
+        if cfg.moe:
+            moe_params = jax.tree.map(lambda v: v.astype(cfg.dtype), layer_params["moe"])
+            h2, _ = moe_block(moe_params, h2.astype(cfg.dtype), cfg.moe)
+        else:
+            mlp_params = jax.tree.map(lambda v: v.astype(cfg.dtype), layer_params["mlp"])
+            h2 = swiglu(mlp_params, h2.astype(cfg.dtype))
+        return y + h2, (k_c, v_c)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]), unroll=scan_unroll()
+    )
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(cfg.dtype))[:, 0]
+    new_cache = {"k": k_all, "v": v_all, "len": cache["len"] + adv.astype(jnp.int32)}
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens, max_len: int):
+    """Full-sequence prefill returning logits for the last position + cache."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"].astype(cfg.dtype), tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, layer_params):
+        y = carry
+        attn_p = {k: v.astype(cfg.dtype) for k, v in layer_params["attn"].items()}
+        h = rmsnorm(layer_params["ln1"], y, eps=cfg.norm_eps)
+        q, k_new, v_new = gqa_project(attn_p, h.astype(cfg.dtype))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        from ..layers.attention import blocked_causal_attention_gqa
+
+        bq, sq, hq, dhq = q.shape
+        att = blocked_causal_attention_gqa(
+            q.reshape(bq, sq, cfg.n_kv_heads, cfg.q_per_kv, dhq),
+            k_new, v_new, block_kv=cfg.block_kv,
+        )
+        y = y + jnp.einsum("bshq,hqd->bsd", att, attn_p["wo"])
+        h2 = rmsnorm(layer_params["ln2"], y, eps=cfg.norm_eps)
+        if cfg.moe:
+            moe_params = jax.tree.map(lambda vv: vv.astype(cfg.dtype), layer_params["moe"])
+            h2, _ = moe_block(moe_params, h2.astype(cfg.dtype), cfg.moe)
+        else:
+            mlp_params = jax.tree.map(lambda vv: vv.astype(cfg.dtype), layer_params["mlp"])
+            h2 = swiglu(mlp_params, h2.astype(cfg.dtype))
+        k_pad = jnp.zeros((b, max_len - s) + k_new.shape[2:], k_new.dtype)
+        seq_ax = "seq_sp" if cfg.seq_parallel else "seq"
+        y = constrain(y + h2, ("batch", seq_ax, "embed_act"))
+        return y, (
+            constrain(jnp.concatenate([k_new, k_pad], axis=1), ("batch", "cache_seq", "kv_heads", "head_dim")),
+            constrain(jnp.concatenate([v_new, k_pad], axis=1), ("batch", "cache_seq", "kv_heads", "head_dim")),
+        )
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, params["layers"], unroll=scan_unroll())
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"].astype(cfg.dtype))
+    cache = {"k": k_all, "v": v_all, "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache

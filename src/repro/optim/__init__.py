@@ -1,0 +1,6 @@
+from .optimizers import (
+    OptimizerConfig, make_optimizer, adamw_init, adamw_update,
+    adafactor_init, adafactor_update, clip_by_global_norm, lr_schedule,
+    opt_state_logical_axes,
+)
+from .compression import ef_init, ef_compress, ef_decompress, compressed_bytes

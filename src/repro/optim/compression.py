@@ -1,0 +1,66 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+At 512+ chips the pod-to-pod (DCN) hop is ~8× slower per byte than ICI
+(contention.py preset); compressing the DP gradient exchange 4× (fp32→int8,
+per-tensor scale) with error feedback [Seide et al. 2014; Karimireddy et al.
+2019] keeps convergence while cutting the cross-pod collective term.
+
+Usage (launch/train.py on a multi-pod mesh):
+    state = ef_init(grads_like)
+    msg, state = ef_compress(grads, state)       # int8 payload + scales
+    msg = psum_over_pods(msg)                    # 4x fewer DCN bytes
+    grads = ef_decompress(msg, n_pods)
+The residual (quantization error) is carried in ``state`` and added to the
+next step's gradients — unbiased in the long run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(grads_template):
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_template
+    )
+
+
+def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress(grads, residuals):
+    """-> (payload {q, scale} tree, new residuals)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, scale = _quantize(x)
+        deq = q.astype(jnp.float32) * scale
+        return {"q": q, "scale": scale}, x - deq
+
+    flat = jax.tree.map(one, grads, residuals)
+    payload = jax.tree.map(
+        lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_res = jax.tree.map(
+        lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return payload, new_res
+
+
+def ef_decompress(payload):
+    """payload {q, scale} tree -> fp32 grads tree."""
+    return jax.tree.map(
+        lambda p: p["q"].astype(jnp.float32) * p["scale"],
+        payload,
+        is_leaf=lambda x: isinstance(x, dict) and "q" in x,
+    )
+
+
+def compressed_bytes(payload) -> int:
+    leaves = jax.tree.leaves(
+        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x
+    )
+    return sum(p["q"].size + 4 for p in leaves)

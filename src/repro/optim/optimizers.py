@@ -1,0 +1,176 @@
+"""Optimizers: AdamW and Adafactor (factored second moment — the memory-
+feasible choice for the 100B+ MoE configs), plus global-norm clipping and
+LR schedules. Pure pytree transforms, no external deps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.minimum(warm, 1.0) * jnp.where(step < cfg.warmup_steps, warm / jnp.maximum(warm, 1e-9), decay)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for params with ndim >= 2)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {
+                "v_row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "v_col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {
+        "v": jax.tree.map(init, params, is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8  # t^-0.8 schedule
+    eps = 1e-30
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            v_row = decay * v["v_row"] + (1 - decay) * g2.mean(axis=-1)
+            v_col = decay * v["v_col"] + (1 - decay) * g2.mean(axis=-2)
+            row_mean = v_row.mean(axis=-1, keepdims=True)
+            precond = (
+                (v_row / jnp.maximum(row_mean, eps))[..., None]
+                * v_col[..., None, :]
+            )
+            update = g32 * jax.lax.rsqrt(jnp.maximum(precond, eps))
+            new_v = {"v_row": v_row, "v_col": v_col}
+        else:
+            v_new = decay * v["v"] + (1 - decay) * g2
+            update = g32 * jax.lax.rsqrt(jnp.maximum(v_new, eps))
+            new_v = {"v": v_new}
+        # relative update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(update * update) + eps)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_v
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "v_row" in x)
+    out = jax.tree.map(
+        upd, grads, state["v"], params, is_leaf=lambda x: hasattr(x, "ndim")
+    )
+    # out leaves are tuples aligned with grads' structure
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, adamw_update
+    if cfg.name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(cfg.name)
+
+
+def opt_state_logical_axes(cfg: OptimizerConfig, params_axes):
+    """Logical axes for the optimizer state, derived from the param axes."""
+    if cfg.name == "adamw":
+        return {
+            "mu": params_axes,
+            "nu": params_axes,
+            "step": (),
+        }
+
+    def factored_axes(ax):
+        ax = tuple(ax)
+        if len(ax) >= 2:
+            return {"v_row": ax[:-1], "v_col": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+
+    return {
+        "v": jax.tree.map(
+            factored_axes, params_axes, is_leaf=lambda x: isinstance(x, tuple)
+        ),
+        "step": (),
+    }

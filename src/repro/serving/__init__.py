@@ -1,0 +1,1 @@
+from .engine import Request, ServingEngine, plan_group_width, DECODE_STEP

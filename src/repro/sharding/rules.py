@@ -1,0 +1,115 @@
+"""Logical-axis sharding rules → PartitionSpec / NamedSharding trees.
+
+Models annotate every param/activation dim with a *logical* name; a rule
+table maps logical names to mesh axes. Divisibility is checked against the
+actual dim size — an indivisible mapping silently degrades to replication
+(e.g. granite's single KV head cannot shard over a 16-way 'model' axis).
+
+Rule tables (see DESIGN.md §6):
+  batch        → (pod,) data   — data parallel
+  vocab/heads/kv_heads/mlp/experts → model — tensor/expert parallel
+  embed        → data          — FSDP (ZeRO-3) parameter + optimizer sharding
+  edges/nodes/candidates/rows  → full flatten — graph & table sharding
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def default_rules(mesh: Mesh) -> dict[str, tuple[str, ...] | None]:
+    multi_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if multi_pod else ("data",)
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        # activations
+        "batch": batch,
+        "seq": None,
+        "seq_sp": ("model",),   # sequence parallelism (H2c)
+        "cache_seq": None,
+        "embed_act": None,
+        # LM params
+        "vocab": ("model",),
+        "embed": ("data",),          # FSDP
+        "embed_nope": None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": None,
+        "mlp": ("model",),
+        "experts": ("model",),
+        "experts_nope": None,
+        "layers": None,
+        # GNN / graph engine
+        "edges": flat,
+        "edge_blocks": flat,   # owner-blocked edge partitions (H3b)
+        "nodes": flat,
+        "gnn_in": None,
+        # recsys
+        "rows": flat,                # embedding-table rows
+        "items_batch": ("model",),   # in-batch softmax column axis
+        "candidates": flat,
+        "fields": None,
+    }
+
+
+def spec_for(
+    axes: tuple | None,
+    shape: tuple[int, ...],
+    mesh: Mesh,
+    rules: dict[str, tuple[str, ...] | None],
+) -> P:
+    """PartitionSpec for one array given its logical axes and shape."""
+    if axes is None:
+        return P()
+    assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+    used: set[str] = set()
+    parts: list[Any] = []
+    for ax_name, dim in zip(axes, shape):
+        mesh_axes = rules.get(ax_name) if ax_name is not None else None
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.axis_names and a not in used)
+        if not mesh_axes:
+            parts.append(None)
+            continue
+        total = int(np.prod([mesh.shape[a] for a in mesh_axes]))
+        if dim % total != 0:
+            # try a prefix that divides
+            while mesh_axes and dim % int(np.prod([mesh.shape[a] for a in mesh_axes])) != 0:
+                mesh_axes = mesh_axes[:-1]
+            if not mesh_axes:
+                parts.append(None)
+                continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*parts)
+
+
+def sharding_tree(
+    abstract_tree: Any,
+    axes_tree: Any,
+    mesh: Mesh,
+    rules: dict | None = None,
+) -> Any:
+    """Tree of NamedSharding matching ``abstract_tree`` (ShapeDtypeStructs)."""
+    rules = rules or default_rules(mesh)
+
+    def one(leaf, axes):
+        return NamedSharding(mesh, spec_for(tuple(axes) if axes is not None else None, leaf.shape, mesh, rules))
+
+    return jax.tree.map(
+        one, abstract_tree, axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"),
+    )
+
+
+def replicated_tree(abstract_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, P()),
+        abstract_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"),
+    )

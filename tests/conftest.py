@@ -1,0 +1,21 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_rmat():
+    from repro.graph import rmat_graph
+
+    return rmat_graph(10, seed=3)
+
+
+@pytest.fixture(scope="session")
+def medium_rmat():
+    from repro.graph import rmat_graph
+
+    return rmat_graph(12, seed=3)

@@ -1,0 +1,110 @@
+"""BFS / PageRank / degree count vs independent oracles (networkx + numpy),
+executed through the full scheduling engine (all three policies)."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    BFSExecutor,
+    DegreeCountExecutor,
+    PageRankExecutor,
+    bfs_reference,
+    degree_count_reference,
+    pagerank_reference,
+)
+from repro.core import MultiQueryEngine, QueryRecord, XEON_E5_2660V4
+from repro.graph import grid_graph, rmat_graph
+
+
+def run_one(engine, ex):
+    rec = QueryRecord(0, 0, ex.desc.name)
+    engine.run_query(ex, rec)
+    return rec
+
+
+@pytest.fixture(scope="module", params=["scheduler", "sequential", "simple"])
+def engine(request):
+    return MultiQueryEngine(XEON_E5_2660V4, policy=request.param)
+
+
+def test_bfs_matches_networkx(engine, medium_rmat):
+    g = medium_rmat
+    deg = np.asarray(g.out_degrees())
+    src = int(np.argmax(deg))
+    ex = BFSExecutor(g, src)
+    rec = run_one(engine, ex)
+    lv = ex.result()
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.num_vertices))
+    G.add_edges_from(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    nxlev = nx.single_source_shortest_path_length(G, src)
+    assert {i: int(l) for i, l in enumerate(lv) if l >= 0} == dict(nxlev)
+    assert rec.edges > 0 and rec.iterations >= 2
+
+
+def test_bfs_matches_reference_on_grid(engine):
+    g = grid_graph(24)
+    ex = BFSExecutor(g, 0)
+    run_one(engine, ex)
+    assert np.array_equal(ex.result(), bfs_reference(g, 0))
+
+
+def test_pagerank_pull_and_push_agree(engine, small_rmat):
+    ref = pagerank_reference(small_rmat, iters=15)
+    for mode in ("pull", "push"):
+        ex = PageRankExecutor(small_rmat, mode=mode, max_iters=15, tol=0)
+        run_one(engine, ex)
+        np.testing.assert_allclose(ex.result(), ref, rtol=2e-4, atol=1e-8)
+
+
+def test_pagerank_sums_to_one(engine, small_rmat):
+    ex = PageRankExecutor(small_rmat, mode="pull", max_iters=25)
+    run_one(engine, ex)
+    assert ex.result().sum() == pytest.approx(1.0, rel=1e-3)
+
+
+def test_degree_count(engine, small_rmat):
+    g = small_rmat
+    ex = DegreeCountExecutor(g)
+    rec = run_one(engine, ex)
+    ref = degree_count_reference(np.asarray(g.src), np.asarray(g.dst), g.num_vertices)
+    assert np.array_equal(ex.result(), ref)
+    assert rec.edges == g.num_edges
+
+
+def test_policies_identical_results(small_rmat):
+    """Scheduling policy must never change algorithm output."""
+    outs = []
+    for policy in ("scheduler", "sequential", "simple"):
+        eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+        ex = BFSExecutor(small_rmat, 5)
+        run_one(eng, ex)
+        outs.append(ex.result())
+    assert np.array_equal(outs[0], outs[1]) and np.array_equal(outs[1], outs[2])
+
+
+def test_multi_session_throughput_ordering(medium_rmat):
+    """Paper Fig. 10–13 qualitative claim: with concurrency, the scheduler
+    beats always-sequential and naive always-parallel on modeled PEPS."""
+    g = medium_rmat
+
+    def mk(s, q):
+        return PageRankExecutor(g, mode="pull", max_iters=5, tol=0)
+
+    reports = {}
+    for policy in ("scheduler", "sequential", "simple"):
+        eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+        reports[policy] = eng.run_sessions(mk, sessions=8, queries_per_session=1)
+    peps = {k: v.throughput_modeled() for k, v in reports.items()}
+    assert peps["scheduler"] >= peps["sequential"]
+    assert peps["scheduler"] >= 0.9 * peps["simple"]
+
+
+def test_sequential_wins_on_tiny_graphs():
+    """Paper Fig. 6/8: for small graphs sequential processing is fastest and
+    the scheduler must choose it."""
+    g = rmat_graph(8, seed=1)
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    ex = PageRankExecutor(g, mode="pull", max_iters=5, tol=0)
+    rec = run_one(eng, ex)
+    assert rec.parallel_iterations == 0

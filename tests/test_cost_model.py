@@ -1,0 +1,158 @@
+"""Eq. 7–10 cost model + Algorithm 1 + contention model (Eq. 11–14)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BFS_TOP_DOWN,
+    PR_PULL,
+    PR_PUSH,
+    IterationWork,
+    TPU_V5E_POD,
+    XEON_E5_2660V4,
+    c_sub,
+    c_vertex_total,
+    calibrate_from_runs,
+    iteration_cost_ns,
+    parallel_beats_sequential,
+    thread_bounds,
+    touched_memory_bytes,
+)
+from repro.core.contention import HardwareModel, MemoryLevel
+
+
+def work(frontier, deg=16.0, touched_frac=0.8, desc=BFS_TOP_DOWN):
+    touched = frontier * deg * touched_frac
+    return IterationWork(
+        frontier=frontier,
+        edges=frontier * deg,
+        found=frontier * deg * 0.3,
+        touched=touched,
+        m_bytes=touched_memory_bytes(desc, touched, frontier),
+    )
+
+
+# ---------------- contention model ----------------
+
+def test_atomic_t1_equals_mem():
+    """§3.2 identity: L_atomic(1, M) == L_mem(M)."""
+    for m in (1e3, 1e5, 1e7, 1e9):
+        assert math.isclose(
+            XEON_E5_2660V4.l_atomic(1, m), XEON_E5_2660V4.l_mem(m), rel_tol=1e-12
+        )
+
+
+@given(m=st.floats(16, 1e11), t=st.integers(1, 56))
+@settings(max_examples=200, deadline=None)
+def test_latency_positive_and_bounded(m, t):
+    hw = XEON_E5_2660V4
+    lat = hw.l_atomic(t, m)
+    assert lat > 0
+    # never better than the fastest level at T=1, never worse than 10x DRAM contention
+    assert lat >= min(hw.lat_mem) - 1e-9
+    assert lat <= hw.lat_atomic.max() + 1e-9
+
+
+def test_latency_monotone_in_threads():
+    hw = XEON_E5_2660V4
+    for m in (1e3, 1e6, 1e8):
+        lats = [hw.l_atomic(t, m) for t in (1, 2, 4, 8, 16, 32, 56)]
+        assert all(b >= a - 1e-9 for a, b in zip(lats, lats[1:]))
+
+
+def test_interp_is_between_levels():
+    """Eq. 14 prediction lies between the enclosing level latencies."""
+    hw = XEON_E5_2660V4
+    for t in (2, 8, 28):
+        l2 = hw.lat_atomic[1]  # L2 row
+        llc = hw.lat_atomic[2]
+        m = 1 * 1024 * 1024    # between L2 (256K) and LLC (35M)
+        lat = hw.l_atomic(t, m)
+        lo = min(hw._lat_at(l2, t), hw._lat_at(llc, t))
+        hi = max(hw._lat_at(l2, t), hw._lat_at(llc, t))
+        assert lo - 1e-9 <= lat <= hi + 1e-9
+
+
+def test_oversized_m_rejected():
+    with pytest.raises(ValueError):
+        XEON_E5_2660V4.l_mem(1e15)
+
+
+def test_calibration_roundtrip(tmp_path):
+    levels = [MemoryLevel("L1", 2**15), MemoryLevel("DRAM", 2**34)]
+    sizes = [2**14, 2**30]
+    threads = [1, 2, 4]
+    measured = np.array([[1.0, 2.0, 4.0], [50.0, 55.0, 60.0]])
+    hw = calibrate_from_runs("test", levels, threads, sizes, measured)
+    assert hw.l_atomic(1, 2**13) == pytest.approx(1.0)
+    p = tmp_path / "hw.json"
+    hw.save(str(p))
+    hw2 = HardwareModel.load(str(p))
+    assert hw2.l_atomic(4, 2**20) == pytest.approx(hw.l_atomic(4, 2**20))
+
+
+# ---------------- Eq. 7/8 ----------------
+
+def test_push_costs_more_than_pull_parallel():
+    """Atomics make push pricier than pull at high T (paper §5/§6)."""
+    w_push = work(100_000, desc=PR_PUSH)
+    w_pull = work(100_000, desc=PR_PULL)
+    c_push = c_vertex_total(PR_PUSH, XEON_E5_2660V4, w_push, t=28)
+    c_pull = c_vertex_total(PR_PULL, XEON_E5_2660V4, w_pull, t=28)
+    assert c_push > c_pull
+
+
+# ---------------- Eq. 9/10 + Algorithm 1 ----------------
+
+def test_small_frontier_sequential():
+    tb = thread_bounds(BFS_TOP_DOWN, XEON_E5_2660V4, work(32))
+    assert not tb.parallel and tb.t_max == 0 and tb.n_packages == 1
+
+
+def test_large_frontier_parallel():
+    tb = thread_bounds(BFS_TOP_DOWN, XEON_E5_2660V4, work(500_000))
+    assert tb.parallel and 2 <= tb.t_min <= tb.t_max <= 56
+    assert tb.n_packages <= 8 * tb.t_max  # §4.2 cap
+    assert tb.cost_par_ns < tb.cost_seq_ns
+
+
+@given(frontier=st.integers(1, 2_000_000))
+@settings(max_examples=60, deadline=None)
+def test_bounds_invariants(frontier):
+    tb = thread_bounds(BFS_TOP_DOWN, XEON_E5_2660V4, work(frontier))
+    if tb.parallel:
+        assert 2 <= tb.t_min <= tb.t_max <= XEON_E5_2660V4.max_threads
+        assert tb.t_min & (tb.t_min - 1) == 0  # powers of two
+        assert tb.t_max & (tb.t_max - 1) == 0
+        assert tb.n_packages >= tb.t_max
+        assert tb.n_packages <= 8 * tb.t_max
+        # Eq. 10 holds at t_max
+        assert parallel_beats_sequential(
+            BFS_TOP_DOWN, XEON_E5_2660V4, work(frontier), tb.t_max
+        )
+    else:
+        assert tb.t_min == 0 and tb.t_max == 0 and tb.n_packages == 1
+
+
+def test_clamp_elastic():
+    tb = thread_bounds(BFS_TOP_DOWN, XEON_E5_2660V4, work(500_000))
+    clamped = tb.clamp(tb.t_max // 2)
+    assert clamped.t_max <= tb.t_max // 2
+    dead = tb.clamp(1)
+    assert not dead.parallel
+
+
+def test_tpu_preset_bounds():
+    """Device-group bounds on the TPU preset: parallel for big frontiers."""
+    tb = thread_bounds(BFS_TOP_DOWN, TPU_V5E_POD, work(50_000_000, deg=16))
+    assert tb.parallel and tb.t_max >= 16
+
+
+def test_iteration_cost_includes_overheads():
+    w = work(100_000)
+    seq = iteration_cost_ns(BFS_TOP_DOWN, XEON_E5_2660V4, w, 1)
+    par = iteration_cost_ns(BFS_TOP_DOWN, XEON_E5_2660V4, w, 8)
+    assert par >= XEON_E5_2660V4.c_para_startup_ns
+    assert par < seq

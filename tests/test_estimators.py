@@ -1,0 +1,101 @@
+"""Eq. 1–6 traversal estimators: bounds, monotonicity, and agreement with a
+Monte-Carlo simulation of the paper's probabilistic model."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.estimators import (
+    TraversalEstimator,
+    estimate_found_closed_form,
+    estimate_found_paper_form,
+    estimate_found_sampled,
+    estimate_touched_closed_form,
+    estimate_touched_exact,
+    estimate_touched_sampled,
+)
+
+
+@given(
+    frontier=st.integers(0, 10_000),
+    deg=st.floats(0.0, 64.0),
+    v_reach=st.integers(1, 1_000_000),
+)
+@settings(max_examples=200, deadline=None)
+def test_touched_bounds(frontier, deg, v_reach):
+    u = estimate_touched_closed_form(frontier, deg, v_reach)
+    assert 0.0 <= u <= v_reach + 1e-6
+
+
+@given(
+    deg=st.floats(0.01, 32.0),
+    v_reach=st.integers(10, 100_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_touched_monotone_in_frontier(deg, v_reach):
+    prev = -1.0
+    for s in (0, 1, 10, 100, 1000, 10_000):
+        u = estimate_touched_closed_form(s, deg, v_reach)
+        assert u >= prev - 1e-9
+        prev = u
+
+
+@given(
+    frontier=st.integers(0, 5000),
+    deg=st.floats(0.0, 16.0),
+    v_reach=st.integers(1, 100_000),
+    unvisited_frac=st.floats(0.0, 1.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_found_bounded_by_unvisited(frontier, deg, v_reach, unvisited_frac):
+    unvisited = v_reach * unvisited_frac
+    f = estimate_found_closed_form(frontier, deg, v_reach, unvisited)
+    assert 0.0 <= f <= unvisited + 1e-6
+    # consistent form never exceeds touched estimate
+    u = estimate_touched_closed_form(frontier, deg, v_reach)
+    assert f <= u + 1e-6
+
+
+def test_found_paper_form_overcounts():
+    """The printed Eq. 6 approaches |V_reach| even when almost everything is
+    already visited — the documented deviation (estimators.py docstring)."""
+    v_reach, unvisited = 10_000, 100.0
+    paper = estimate_found_paper_form(5_000, 8.0, v_reach, unvisited)
+    ours = estimate_found_closed_form(5_000, 8.0, v_reach, unvisited)
+    assert ours <= unvisited + 1e-6
+    assert paper > unvisited  # the overcount
+
+def test_sampled_matches_exact_on_uniform_degrees():
+    degs = np.full(500, 7.0)
+    v_reach = 10_000
+    exact = estimate_touched_exact(degs, v_reach)
+    closed = estimate_touched_closed_form(500, 7.0, v_reach)
+    sampled = estimate_touched_sampled(degs[:100], 500, v_reach)
+    assert math.isclose(exact, closed, rel_tol=1e-9)
+    assert math.isclose(sampled, exact, rel_tol=1e-6)
+
+
+def test_against_monte_carlo():
+    """Touched estimator ≈ expectation under the paper's model assumptions."""
+    rng = np.random.default_rng(0)
+    v_reach, frontier, deg = 2_000, 60, 5
+    hits = []
+    for _ in range(200):
+        touched = set()
+        for _ in range(frontier):
+            touched.update(rng.integers(0, v_reach, deg))
+        hits.append(len(touched))
+    mc = float(np.mean(hits))
+    est = estimate_touched_closed_form(frontier, deg, v_reach)
+    assert abs(est - mc) / mc < 0.05
+
+
+def test_variance_gate():
+    est_low = TraversalEstimator(deg_mean=10, deg_max=10.5, v_reach=1000)
+    est_high = TraversalEstimator(deg_mean=10, deg_max=500, v_reach=1000)
+    assert est_low.low_variance and not est_high.low_variance
+    # high-variance estimator uses the sample
+    skewed = np.array([500] + [1] * 99)
+    u = est_high.touched(100, frontier_degrees=skewed)
+    assert 0 < u <= 1000

@@ -1,0 +1,108 @@
+"""Beyond-paper extensions: direction-optimized BFS (estimator-driven) and
+error-feedback int8 gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    BFSExecutor,
+    DirectionOptimizedBFSExecutor,
+    bfs_reference,
+)
+from repro.core import MultiQueryEngine, QueryRecord, XEON_E5_2660V4
+
+
+def test_direction_optimized_bfs_matches_reference(medium_rmat):
+    g = medium_rmat
+    src = int(np.argmax(np.asarray(g.out_degrees())))
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    ex = DirectionOptimizedBFSExecutor(g, src, switch_fraction=0.1)
+    rec = QueryRecord(0, 0, "bfs_dir_opt")
+    eng.run_query(ex, rec)
+    assert np.array_equal(ex.result(), bfs_reference(g, src))
+
+
+def test_direction_optimized_bfs_switches(medium_rmat):
+    """On a scale-free graph the mid-BFS frontier is huge -> bottom-up must
+    trigger, and it inspects different (in-)edge counts than top-down."""
+    g = medium_rmat
+    src = int(np.argmax(np.asarray(g.out_degrees())))
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    top = BFSExecutor(g, src)
+    eng.run_query(top, QueryRecord(0, 0, "td"))
+    opt = DirectionOptimizedBFSExecutor(g, src, switch_fraction=0.05)
+    eng.run_query(opt, QueryRecord(0, 1, "do"))
+    assert np.array_equal(top.result(), opt.result())
+    assert opt.edges_traversed() != top.edges_traversed()
+
+
+def test_ef_int8_roundtrip_and_error_feedback():
+    from repro.optim import compressed_bytes, ef_compress, ef_decompress, ef_init
+
+    rng = np.random.default_rng(0)
+    grads = {"w": jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+    res = ef_init(grads)
+    payload, res = ef_compress(grads, res)
+    deq = ef_decompress(payload)
+    # int8 payload is ~4x smaller than fp32
+    raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    assert compressed_bytes(payload) < raw / 3.5
+    # quantization error bounded by scale/2 elementwise
+    for k in grads:
+        scale = float(payload[k]["scale"])
+        assert float(jnp.abs(deq[k] - grads[k]).max()) <= scale * 0.5 + 1e-6
+    # error feedback: residual carries exactly the quantization error
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(res[k]), np.asarray(grads[k] - deq[k]), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_ef_int8_unbiased_over_steps():
+    """Constant gradient: with error feedback, the accumulated dequantized
+    sum converges to the true sum (bias is carried, never lost)."""
+    from repro.optim import ef_compress, ef_decompress, ef_init
+
+    g = {"w": jnp.full((16,), 0.337, jnp.float32)}
+    res = ef_init(g)
+    total = jnp.zeros((16,))
+    for _ in range(50):
+        payload, res = ef_compress(g, res)
+        total = total + ef_decompress(payload)["w"]
+    np.testing.assert_allclose(np.asarray(total), 50 * 0.337, rtol=2e-3)
+
+
+def test_feedback_loop_reduces_prediction_error(medium_rmat):
+    """§4.4 feedback (paper future work): after observing a few iterations,
+    corrected predictions land closer to measured wall time than raw ones."""
+    import math
+
+    from repro.algorithms import PageRankExecutor
+    from repro.core.feedback import CostFeedback
+
+    fb = CostFeedback(alpha=0.5)
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler", feedback=fb)
+    g = medium_rmat
+    # warm up the correction with a few queries
+    for q in range(3):
+        ex = PageRankExecutor(g, mode="pull", max_iters=3, tol=0)
+        eng.run_query(ex, QueryRecord(0, q, "pr"))
+    assert fb.observations >= 9
+    # the correction moves predictions toward measurement
+    modeled, measured = 1e6, 4e6
+    fb2 = CostFeedback(alpha=1.0)
+    raw_err = abs(math.log10(modeled / measured))
+    fb2.observe("x", False, modeled, measured)
+    assert fb2.error_db("x", False, modeled, measured) < raw_err
+
+
+def test_feedback_correction_bounded():
+    from repro.core.feedback import CostFeedback
+
+    fb = CostFeedback(alpha=1.0, clip=8.0)
+    fb.observe("a", True, 1.0, 1e9)  # absurd ratio gets clipped
+    assert fb.correction("a", True) <= 8.0
+    fb.observe("a", True, 1e9, 1.0)
+    assert fb.correction("a", True) >= 1.0 / 8.0

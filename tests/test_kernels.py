@@ -1,0 +1,140 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention import attention_ref, flash_attention, flash_attention_pallas
+from repro.kernels.degree_count import degree_count, degree_count_ref
+from repro.kernels.embedding_bag import embedding_bag, embedding_bag_ref
+from repro.kernels.scoring import score_topk, scoring_pallas, scoring_ref, topk_ref
+from repro.kernels.spmv import build_tiles, spmv, spmv_ref
+
+
+# ---------------- degree count ----------------
+
+@pytest.mark.parametrize("v,e", [(100, 1000), (3000, 40000), (2048, 16384), (5000, 100_000)])
+def test_degree_count_shapes(v, e, rng):
+    src = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, v, e), jnp.int32)
+    out = degree_count(src, dst, v)
+    ref = degree_count_ref(jnp.concatenate([src, dst]) % v, v)
+    assert jnp.array_equal(out, ref)
+    assert int(out.sum()) == 2 * e
+
+
+def test_degree_count_modular(rng):
+    """Counter array smaller than the id space (Eq. 11: M varies freely)."""
+    ids = rng.integers(0, 100_000, 5000)
+    out = degree_count(jnp.asarray(ids, jnp.int32), jnp.asarray(ids, jnp.int32), 257)
+    ref = degree_count_ref(jnp.asarray(ids % 257, jnp.int32), 257) * 2
+    assert jnp.array_equal(out, ref)
+
+
+# ---------------- spmv ----------------
+
+@pytest.mark.parametrize("v,e", [(100, 500), (2000, 30000), (513, 7000)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spmv_shapes(v, e, dtype, rng):
+    src = rng.integers(0, v, e)
+    dst = rng.integers(0, v, e)
+    contrib = jnp.asarray(rng.normal(size=v).astype(dtype))
+    sc, dc, _ = build_tiles(src, dst, v)
+    out = spmv(sc, dc, contrib, v)
+    ref = spmv_ref(jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32), contrib, v)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_spmv_empty_rows(rng):
+    v = 600
+    src = rng.integers(0, v, 100)
+    dst = np.full(100, 3)  # everything lands on one vertex
+    contrib = jnp.ones(v, jnp.float32)
+    sc, dc, _ = build_tiles(src, dst, v)
+    out = spmv(sc, dc, contrib, v)
+    assert float(out[3]) == pytest.approx(100.0)
+    assert float(out.sum()) == pytest.approx(100.0)
+
+
+# ---------------- scoring ----------------
+
+@pytest.mark.parametrize("b,n,d", [(1, 4096, 64), (4, 5000, 32), (8, 2048, 128)])
+def test_scoring_topk(b, n, d, rng):
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    v, i = score_topk(q, c, k=16)
+    rv, ri = topk_ref(q, c, 16)
+    np.testing.assert_allclose(v, rv, rtol=1e-5, atol=1e-5)
+    assert jnp.array_equal(i, ri)
+
+
+def test_scoring_matmul_only(rng):
+    q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(4096, 16)).astype(np.float32))
+    out = scoring_pallas(q, c)
+    np.testing.assert_allclose(out, scoring_ref(q, c), rtol=1e-5, atol=1e-5)
+
+
+# ---------------- embedding bag ----------------
+
+@pytest.mark.parametrize("v,d,n,b", [(500, 32, 200, 16), (100, 8, 50, 7), (1000, 64, 400, 32)])
+def test_embedding_bag_shapes(v, d, n, b, rng):
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, v, n), jnp.int32)
+    segs = jnp.asarray(rng.integers(0, b, n), jnp.int32)
+    out = embedding_bag(table, ids, segs, b)
+    ref = embedding_bag_ref(table, ids, segs, jnp.ones(n), b)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_empty_bags_zero(rng):
+    table = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    ids = jnp.asarray([1, 2], jnp.int32)
+    segs = jnp.asarray([0, 0], jnp.int32)
+    out = embedding_bag(table, ids, segs, 5)
+    assert jnp.allclose(out[1:], 0.0)
+
+
+def test_embedding_bag_weighted(rng):
+    table = jnp.asarray(rng.normal(size=(200, 16)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 200, 64), jnp.int32)
+    segs = jnp.asarray(rng.integers(0, 8, 64), jnp.int32)
+    w = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    out = embedding_bag(table, ids, segs, 8, weights=w)
+    ref = embedding_bag_ref(table, ids, segs, w, 8)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------- flash attention ----------------
+
+@pytest.mark.parametrize("s,d,bq,bk", [(128, 32, 32, 32), (256, 64, 64, 32), (256, 32, 128, 64)])
+def test_flash_attention_shapes(s, d, bq, bk, rng):
+    q = jnp.asarray(rng.normal(size=(2, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, s, d)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(out, attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bshd_wrapper(rng):
+    b, s, h, d = 2, 128, 4, 32
+    mk = lambda: jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    q, k, v = mk(), mk(), mk()
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref = attention_ref(fold(q), fold(k), fold(v)).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_blocked_jax_twin(rng):
+    """Kernel and the pure-JAX blocked attention share their math."""
+    from repro.layers.attention import blocked_causal_attention
+
+    q = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 128, 32)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, block_q=32, block_k=32)
+    tw = blocked_causal_attention(
+        q[:, :, None, :], k[:, :, None, :], v[:, :, None, :], block_kv=32
+    )[:, :, 0, :]
+    np.testing.assert_allclose(out, tw, rtol=2e-5, atol=2e-5)

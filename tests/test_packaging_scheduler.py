@@ -1,0 +1,164 @@
+"""§4.2 work packaging + §4.3 selective sequential execution."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BFS_TOP_DOWN,
+    IterationWork,
+    PackageScheduler,
+    ThreadBounds,
+    WorkerPool,
+    XEON_E5_2660V4,
+    make_packages,
+    packages_to_table,
+    prepare_iteration,
+    touched_memory_bytes,
+)
+from repro.graph.structure import GraphStats
+
+
+def bounds(parallel=True, t_min=2, t_max=8, n_packages=32):
+    return ThreadBounds(
+        t_min=t_min, t_max=t_max, n_packages=n_packages, v_min_parallel=10,
+        parallel=parallel, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+
+
+@given(
+    n=st.integers(1, 5000),
+    npkg=st.integers(2, 64),
+    seed=st.integers(0, 100),
+    ratio=st.floats(1.0, 50.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_packages_partition_exactly(n, npkg, seed, ratio):
+    rng = np.random.default_rng(seed)
+    degrees = rng.zipf(1.5, size=n).clip(0, 10_000)
+    pkgs = make_packages(degrees, bounds(n_packages=npkg), variance_ratio=ratio)
+    assert pkgs.covers(n)
+    assert (np.diff(pkgs.bounds) > 0).all()
+    assert sorted(pkgs.order.tolist()) == list(range(pkgs.n_packages))
+    # reconstructing coverage from ordered packages partitions [0, n)
+    seen = np.zeros(n, bool)
+    for p in pkgs.order:
+        lo, hi = pkgs.bounds[p], pkgs.bounds[p + 1]
+        assert not seen[lo:hi].any()
+        seen[lo:hi] = True
+    assert seen.all()
+
+
+def test_cost_based_balances_work():
+    rng = np.random.default_rng(1)
+    degrees = rng.zipf(1.6, size=2000).clip(0, 5000)
+    pkgs = make_packages(degrees, bounds(n_packages=16), variance_ratio=100.0)
+    assert pkgs.mode == "cost_based"
+    work = [degrees[a:b].sum() for a, b in zip(pkgs.bounds[:-1], pkgs.bounds[1:])]
+    # heavy-first ordering
+    ordered = [work[p] for p in pkgs.order]
+    assert ordered[0] == max(work)
+    # degree-balanced: no package more than ~a heavy vertex above the mean
+    assert max(work) <= degrees.sum() / pkgs.n_packages + degrees.max()
+
+
+def test_static_mode_for_low_variance():
+    degrees = np.full(10_000, 8)
+    pkgs = make_packages(degrees, bounds(n_packages=16), variance_ratio=1.05)
+    assert pkgs.mode == "static"
+    sizes = pkgs.sizes()
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_sample_degrees_force_static():
+    """A degree *sample* shorter than the frontier cannot drive cost-based
+    packaging (the paper walks real degrees only for small frontiers)."""
+    pkgs = make_packages(
+        np.array([100, 1, 1]), bounds(n_packages=8), variance_ratio=50.0,
+        frontier_size=1000,
+    )
+    assert pkgs.mode == "static"
+    assert pkgs.covers(1000)
+
+
+def test_single_package_when_sequential():
+    pkgs = make_packages(np.arange(100), bounds(parallel=False), variance_ratio=2.0)
+    assert pkgs.mode == "single" and pkgs.n_packages == 1
+
+
+def test_packages_to_table_fixed_shape():
+    degrees = np.random.default_rng(0).integers(1, 50, 300)
+    pkgs = make_packages(degrees, bounds(n_packages=16), variance_ratio=1.0)
+    starts, sizes = packages_to_table(pkgs, max_packages=64)
+    assert starts.shape == (64,) and sizes.shape == (64,)
+    assert sizes[: pkgs.n_packages].sum() == 300
+    assert (sizes[pkgs.n_packages :] == 0).all()
+
+
+# ---------------- scheduler (§4.3) ----------------
+
+def run_sched(pool, b, n=8):
+    degrees = np.full(200, 4)
+    pkgs = make_packages(degrees, b, variance_ratio=1.0)
+    ran = {"par": [], "seq": []}
+    sched = PackageScheduler(pool, seq_package_limit=2)
+    trace = sched.run(
+        pkgs, b,
+        lambda batch, t: ran["par"].extend((int(p), t) for p in batch),
+        lambda batch: ran["seq"].extend(int(p) for p in batch),
+    )
+    return ran, trace, pkgs
+
+
+def test_parallel_when_workers_available():
+    pool = WorkerPool(16)
+    ran, trace, pkgs = run_sched(pool, bounds(t_min=2, t_max=8, n_packages=8))
+    assert len(ran["par"]) == pkgs.n_packages and not ran["seq"]
+    assert trace.max_workers == 8
+    assert pool.available == 16  # everything released
+
+
+def test_sequential_fallback_under_contention():
+    pool = WorkerPool(16)
+    taken = pool.request(15)  # other queries hold almost everything
+    ran, trace, pkgs = run_sched(pool, bounds(t_min=4, t_max=8, n_packages=8))
+    # below T_min: sequential packages then early release (§4.3 last step)
+    assert ran["seq"] and not ran["par"]
+    assert trace.released_early
+    pool.release(taken)
+    assert pool.available == 16
+
+
+def test_mid_run_reevaluation_picks_up_freed_workers():
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = bounds(t_min=4, t_max=8, n_packages=8)
+    degrees = np.full(200, 4)
+    pkgs = make_packages(degrees, b, variance_ratio=1.0)
+    sched = PackageScheduler(pool, seq_package_limit=4)
+    ran = {"par": 0, "seq": 0}
+
+    def seq(batch):
+        ran["seq"] += len(batch)
+        pool.release(taken) if pool.available == 0 else None  # free mid-run once
+
+    trace = sched.run(pkgs, b, lambda batch, t: ran.__setitem__("par", ran["par"] + len(batch)), seq)
+    # after the first sequential package the freed workers enable parallel
+    assert ran["seq"] >= 1 and ran["par"] >= 1
+
+
+def test_sequential_task_takes_one_worker():
+    pool = WorkerPool(4)
+    ran, trace, _ = run_sched(pool, bounds(parallel=False, t_min=0, t_max=0, n_packages=1))
+    assert not ran["par"] and ran["seq"]
+    assert pool.available == 4
+
+
+def test_prepare_iteration_end_to_end(small_rmat):
+    stats = small_rmat.stats
+    prep = prepare_iteration(
+        BFS_TOP_DOWN, XEON_E5_2660V4, stats, 500,
+        frontier_degrees=np.asarray(small_rmat.out_degrees())[:500],
+        unvisited=stats.v_reach,
+    )
+    assert prep.work.edges > 0
+    assert prep.packages.covers(500)
