@@ -62,14 +62,32 @@ def run_single_query(algorithm: str, graph, policy: str) -> tuple[float, float, 
     return us, measured_eps, modeled_eps
 
 
-def run_sessions(algorithm: str, graph, policy: str, sessions: int) -> tuple[float, float]:
-    """-> (us_total, modeled_aggregate_eps) for N concurrent sessions."""
+def run_sessions(
+    algorithm: str,
+    graph,
+    policy: str,
+    sessions: int,
+    *,
+    queries_per_session: int = 1,
+    arrivals=None,
+    priorities=None,
+):
+    """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
+
+    ``arrivals``/``priorities`` pass through to the engine so figures can
+    model open-loop (bursty) traffic and mixed priority classes."""
     eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
 
     def mk(s, q):
         return make_executor(algorithm, graph, seed=s)
 
     t0 = time.perf_counter_ns()
-    rep = eng.run_sessions(mk, sessions=sessions, queries_per_session=1)
+    rep = eng.run_sessions(
+        mk,
+        sessions=sessions,
+        queries_per_session=queries_per_session,
+        arrivals=arrivals,
+        priorities=priorities,
+    )
     us = (time.perf_counter_ns() - t0) / 1e3
-    return us, rep.throughput_modeled()
+    return us, rep.throughput_modeled(), rep

@@ -11,6 +11,13 @@ def run() -> list[Row]:
     rows: list[Row] = []
     for policy in ("sequential", "simple", "scheduler"):
         for n in SESSIONS:
-            us, peps = run_sessions("pr_pull", g, policy, n)
+            us, peps, rep = run_sessions("pr_pull", g, policy, n)
             rows.append((f"fig10/pr_pull/sf13/{policy}/s{n}", us, peps))
+            rows.append(
+                (
+                    f"fig10/pr_pull/sf13/{policy}/s{n}/p95_latency_us",
+                    us,
+                    rep.latency_percentiles()["p95"] / 1e3,
+                )
+            )
     return rows

@@ -11,6 +11,13 @@ def run() -> list[Row]:
     rows: list[Row] = []
     for policy in ("sequential", "simple", "scheduler"):
         for n in SESSIONS:
-            us, teps = run_sessions("bfs", g, policy, n)
+            us, teps, rep = run_sessions("bfs", g, policy, n)
             rows.append((f"fig11/bfs/sf13/{policy}/s{n}", us, teps))
+            rows.append(
+                (
+                    f"fig11/bfs/sf13/{policy}/s{n}/p95_latency_us",
+                    us,
+                    rep.latency_percentiles()["p95"] / 1e3,
+                )
+            )
     return rows

@@ -10,6 +10,6 @@ def run() -> list[Row]:
         g = load_dataset(name, scale_div=512)
         for policy in ("sequential", "scheduler"):
             for n in (1, 8):
-                us, peps = run_sessions("pr_pull", g, policy, n)
+                us, peps, _ = run_sessions("pr_pull", g, policy, n)
                 rows.append((f"fig12/pr_pull/{name}/{policy}/s{n}", us, peps))
     return rows

@@ -10,6 +10,6 @@ def run() -> list[Row]:
         g = load_dataset(name, scale_div=512)
         for policy in ("sequential", "simple", "scheduler"):
             for n in (1, 8):
-                us, teps = run_sessions("bfs", g, policy, n)
+                us, teps, _ = run_sessions("bfs", g, policy, n)
                 rows.append((f"fig13/bfs/{name}/{policy}/s{n}", us, teps))
     return rows

@@ -17,7 +17,6 @@ per-family formulas otherwise (see launch/steps.py meta).
 from __future__ import annotations
 
 import json
-import sys
 from pathlib import Path
 
 PEAK_FLOPS = 197e12      # bf16 / chip

@@ -1,9 +1,13 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
+# and, for the concurrent-session figures, writes ``BENCH_sessions.json`` —
+# the machine-readable modeled PEPS/TEPS-vs-session-count trajectory that
+# future PRs diff against.
 from __future__ import annotations
 
+import json
+import re
 import sys
 import time
-
 
 MODULES = [
     "fig04_contention",
@@ -18,18 +22,60 @@ MODULES = [
     "fig13_bfs_sessions_real",
 ]
 
+SESSIONS_JSON = "BENCH_sessions.json"
+
+
+def sessions_json_rows(rows: list[tuple[str, float, float]]) -> list[dict]:
+    """Parse ``figNN/<workload>/<dataset>/<policy>/sN`` throughput rows."""
+    out = []
+    for name, us, derived in rows:
+        parts = name.split("/")
+        m = re.fullmatch(r"s(\d+)", parts[-1])
+        if m is None or len(parts) < 5:
+            continue  # latency or non-session rows ride along in the CSV only
+        out.append(
+            {
+                "name": name,
+                "figure": parts[0],
+                "workload": parts[1],
+                "dataset": parts[2],
+                "policy": parts[3],
+                "sessions": int(m.group(1)),
+                "us_per_call": round(us, 1),
+                "modeled_eps": derived,
+            }
+        )
+    return out
+
 
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
+    session_rows: list[dict] = []
     for mod_name in MODULES:
         if only and only not in mod_name:
             continue
         t0 = time.time()
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-        for name, us, derived in mod.run():
+        rows = mod.run()
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.6g}")
+        if "sessions" in mod_name:
+            session_rows.extend(sessions_json_rows(rows))
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if session_rows:
+        # merge with any existing baseline so a filtered run (e.g. `run fig10`)
+        # refreshes its own rows without dropping the other figures'
+        merged: dict[str, dict] = {}
+        try:
+            with open(SESSIONS_JSON) as f:
+                merged = {r["name"]: r for r in json.load(f).get("rows", [])}
+        except (OSError, ValueError):
+            pass
+        merged.update({r["name"]: r for r in session_rows})
+        with open(SESSIONS_JSON, "w") as f:
+            json.dump({"rows": sorted(merged.values(), key=lambda r: r["name"])}, f, indent=2)
+        print(f"# wrote {SESSIONS_JSON} ({len(merged)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

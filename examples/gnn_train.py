@@ -5,7 +5,6 @@ GNN family the scheduler's edge-traversal estimators apply to natively.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import GraphBatchStream
 from repro.graph import rmat_graph

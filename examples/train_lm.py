@@ -4,7 +4,6 @@ hundred steps on CPU with checkpointing enabled.
     PYTHONPATH=src python examples/train_lm.py [--steps 200]
 """
 import argparse
-import dataclasses
 
 import jax.numpy as jnp
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

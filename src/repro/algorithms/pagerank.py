@@ -26,7 +26,7 @@ import numpy as np
 
 from ..core.descriptors import PR_PULL, PR_PUSH
 from ..graph.structure import Graph, GraphStats
-from .common import EdgeArrays, member_mask_from_slots, merge_ranges
+from .common import EdgeArrays, merge_ranges
 
 DAMPING = 0.85
 

@@ -5,7 +5,7 @@ Note: 56 heads are not divisible by the 16-way 'model' axis — attention
 weights replicate across 'model' (see EXPERIMENTS.md §Dry-run notes)."""
 from ..layers.moe import MoEConfig
 from ..models.transformer import LMConfig
-from .lm_common import SHAPES, lm_cell, smoke_lm
+from .lm_common import SHAPES as SHAPES, lm_cell, smoke_lm
 
 ARCH_ID = "arctic-480b"
 FAMILY = "lm"

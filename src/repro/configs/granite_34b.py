@@ -1,7 +1,7 @@
 """granite-34b [arXiv:2405.04324; hf]: dense llama-arch code model.
 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152."""
 from ..models.transformer import LMConfig
-from .lm_common import SHAPES, lm_cell, smoke_lm
+from .lm_common import SHAPES as SHAPES, lm_cell, smoke_lm
 
 ARCH_ID = "granite-34b"
 FAMILY = "lm"

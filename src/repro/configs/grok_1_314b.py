@@ -2,7 +2,7 @@
 64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072."""
 from ..layers.moe import MoEConfig
 from ..models.transformer import LMConfig
-from .lm_common import SHAPES, lm_cell, smoke_lm
+from .lm_common import SHAPES as SHAPES, lm_cell, smoke_lm
 
 ARCH_ID = "grok-1-314b"
 FAMILY = "lm"

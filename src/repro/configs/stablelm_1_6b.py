@@ -1,7 +1,7 @@
 """stablelm-1.6b [hf:stabilityai/stablelm-2-1_6b; unverified]: dense MHA
 (kv=32 == heads). 24L d_model=2048 32H d_ff=5632 vocab=100352."""
 from ..models.transformer import LMConfig
-from .lm_common import SHAPES, lm_cell, smoke_lm
+from .lm_common import SHAPES as SHAPES, lm_cell, smoke_lm
 
 ARCH_ID = "stablelm-1.6b"
 FAMILY = "lm"

@@ -39,8 +39,22 @@ from .cost_model import (
 from .bounds import ThreadBounds, parallel_beats_sequential, thread_bounds, v_min_for_parallel
 from .packaging import WorkPackages, make_packages, packages_to_table
 from .autotuner import PreparedIteration, prepare_iteration
-from .scheduler import PackageScheduler, ScheduleTrace, WorkerPool, largest_pow2_leq
-from .session import EngineReport, MultiQueryEngine, QueryExecutor, QueryRecord
+from .scheduler import (
+    PackageScheduler,
+    ScheduleRun,
+    ScheduleStep,
+    ScheduleTrace,
+    WorkerPool,
+    largest_pow2_leq,
+)
+from .session import (
+    AdmissionController,
+    EngineReport,
+    MultiQueryEngine,
+    PoissonArrivals,
+    QueryExecutor,
+    QueryRecord,
+)
 from .feedback import CostFeedback
 
 __all__ = [
@@ -56,7 +70,9 @@ __all__ = [
     "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",
     "WorkPackages", "make_packages", "packages_to_table",
     "PreparedIteration", "prepare_iteration",
-    "PackageScheduler", "ScheduleTrace", "WorkerPool", "largest_pow2_leq",
-    "EngineReport", "MultiQueryEngine", "QueryExecutor", "QueryRecord",
+    "PackageScheduler", "ScheduleRun", "ScheduleStep", "ScheduleTrace",
+    "WorkerPool", "largest_pow2_leq",
+    "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
+    "QueryExecutor", "QueryRecord",
     "CostFeedback",
 ]

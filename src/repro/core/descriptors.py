@@ -10,7 +10,7 @@ vertex).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal
+from typing import Literal
 
 ItemKind = Literal["v", "e", "f"]
 

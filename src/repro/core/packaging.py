@@ -102,7 +102,6 @@ def make_packages(
     if not keep.all():
         starts = pkg_bounds[:-1][keep]
         pkg_bounds = np.concatenate([starts, [pkg_bounds[-1]]])
-        work = None
         if mode == "cost_based":
             order = heavy_first_order(degrees, pkg_bounds)
         else:

@@ -16,6 +16,21 @@ The pool abstracts the machine: CPU threads in the paper, TPU device groups
 here. The scheduler is deliberately decentralized — no central task scheduler
 needs to understand graph queries (paper: avoids a central scheduler that
 deals with many short heterogeneous tasks).
+
+The protocol is exposed in two forms:
+
+  * :meth:`PackageScheduler.run` — synchronous: execute every package of one
+    iteration now (used by ``MultiQueryEngine.run_query`` and by direct
+    callers / tests);
+  * :meth:`PackageScheduler.begin` → :class:`ScheduleRun` — *stepwise*: each
+    :meth:`ScheduleRun.next_step` returns the next batch of packages plus the
+    execution mode, holding the worker grant between steps. The discrete-event
+    loop in ``MultiQueryEngine.run_sessions`` drives this form so that modeled
+    time can pass between packages and grant re-evaluation (§4.3 step 4)
+    observes workers freed by other sessions in the meantime.
+
+Both forms share the same state machine, so a single query and a concurrent
+session make identical decisions under identical pool states.
 """
 from __future__ import annotations
 
@@ -35,19 +50,29 @@ class WorkerPool:
     Capacity = P (cores / devices). Thread-safe so concurrent sessions can
     contend for workers, which is what produces the paper's inter-query
     behaviour (under load, grants shrink and queries fall back to sequential
-    execution)."""
+    execution).
 
-    def __init__(self, capacity: int):
+    ``high_priority_reserve`` workers are withheld from normal-priority
+    requests: a request with ``priority >= 1`` may drain the pool completely,
+    while ``priority 0`` requests can only draw down to the reserve floor.
+    This gives latency-sensitive queries a guaranteed slice of the machine
+    without a central scheduler."""
+
+    def __init__(self, capacity: int, *, high_priority_reserve: int = 0):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if not 0 <= high_priority_reserve < capacity:
+            raise ValueError("high_priority_reserve must be in [0, capacity)")
         self.capacity = int(capacity)
+        self.high_priority_reserve = int(high_priority_reserve)
         self._available = int(capacity)
         self._lock = threading.Lock()
 
-    def request(self, n: int) -> int:
+    def request(self, n: int, *, priority: int = 0) -> int:
         """Grant up to n workers (at least 0); non-blocking."""
         with self._lock:
-            grant = max(min(n, self._available), 0)
+            floor = 0 if priority >= 1 else self.high_priority_reserve
+            grant = max(min(n, self._available - floor), 0)
             self._available -= grant
             return grant
 
@@ -60,12 +85,22 @@ class WorkerPool:
         with self._lock:
             return self._available
 
+    @property
+    def in_use(self) -> int:
+        with self._lock:
+            return self.capacity - self._available
+
     def resize(self, new_capacity: int) -> None:
         """Elastic scaling: grow/shrink the machine (node join/loss)."""
+        if new_capacity < 1:
+            raise ValueError("capacity must be >= 1")
         with self._lock:
             delta = int(new_capacity) - self.capacity
             self.capacity = int(new_capacity)
             self._available = max(min(self._available + delta, self.capacity), 0)
+            # keep the reserve invariant (< capacity) so a shrink can never
+            # permanently starve normal-priority requests
+            self.high_priority_reserve = min(self.high_priority_reserve, self.capacity - 1)
 
 
 @dataclasses.dataclass
@@ -94,10 +129,113 @@ class ScheduleTrace:
         return max((r.workers for r in self.runs), default=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleStep:
+    """One executable unit handed out by :class:`ScheduleRun`.
+
+    ``batch`` holds the package ids to run now; ``workers`` is the group size
+    (1 for sequential execution)."""
+
+    batch: np.ndarray
+    mode: Literal["parallel", "sequential"]
+    workers: int
+
+
 def largest_pow2_leq(n: int) -> int:
     if n < 1:
         return 0
     return 1 << (int(n).bit_length() - 1)
+
+
+class ScheduleRun:
+    """Resumable §4.3 protocol over one task's package list.
+
+    Holds its worker grant between :meth:`next_step` calls; every call
+    re-requests up to T_max first (grant re-evaluation), so workers freed by
+    other sessions while the previous step executed are picked up. The caller
+    must :meth:`close` the run (release the grant) when done — ``next_step``
+    returning ``None`` means all packages have been handed out."""
+
+    def __init__(
+        self,
+        pool: WorkerPool,
+        packages: WorkPackages,
+        bounds: ThreadBounds,
+        *,
+        seq_package_limit: int = 4,
+        priority: int = 0,
+    ):
+        self.pool = pool
+        self.bounds = bounds
+        self.seq_package_limit = seq_package_limit
+        self.priority = priority
+        self._order = packages.order[: packages.n_packages]
+        self._cursor = 0
+        self._seq_done = 0
+        self._closed = False
+        # preparation already decided sequential → take one worker at most
+        self._simple_seq = not bounds.parallel or packages.n_packages <= 1
+        self._requested = 1 if self._simple_seq else bounds.t_max
+        self._granted = pool.request(self._requested, priority=priority)
+        self.trace = ScheduleTrace(requested=self._requested)
+
+    @property
+    def done(self) -> bool:
+        return self._cursor >= len(self._order)
+
+    def next_step(self) -> ScheduleStep | None:
+        if self.done:
+            return None
+        order = self._order
+        if self._simple_seq:
+            batch = order[self._cursor :]
+            self._cursor = len(order)
+            self.trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in batch)
+            return ScheduleStep(batch, "sequential", 1)
+
+        # §4.3 step 4: re-evaluate the grant — workers may have been freed
+        # (or arrived) while the previous package executed.
+        if self._granted < self._requested:
+            self._granted += self.pool.request(
+                self._requested - self._granted, priority=self.priority
+            )
+        usable = largest_pow2_leq(self._granted)
+        if usable >= max(self.bounds.t_min, 2):
+            # parallel phase: hand the remaining packages to the group; the
+            # non-power-of-2 surplus is unusable — return it to the pool now
+            # rather than holding it for the whole step
+            if self._granted > usable:
+                self.pool.release(self._granted - usable)
+                self._granted = usable
+            batch = order[self._cursor :]
+            self._cursor = len(order)
+            self.trace.runs.extend(PackageRun(int(p), "parallel", usable) for p in batch)
+            return ScheduleStep(batch, "parallel", usable)
+        if self._seq_done < self.seq_package_limit:
+            # below the parallel boundary: one worker runs one package, the
+            # rest wait; re-evaluate on the next call
+            batch = order[self._cursor : self._cursor + 1]
+            self._cursor += 1
+            self._seq_done += 1
+            self.trace.runs.append(PackageRun(int(batch[0]), "sequential", 1))
+            return ScheduleStep(batch, "sequential", 1)
+        # give up on parallelism: release all but one worker and finish the
+        # whole task sequentially (§4.3 last step)
+        if self._granted > 1:
+            self.pool.release(self._granted - 1)
+            self._granted = 1
+        batch = order[self._cursor :]
+        self._cursor = len(order)
+        self.trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in batch)
+        self.trace.released_early = True
+        return ScheduleStep(batch, "sequential", 1)
+
+    def close(self) -> None:
+        """Return the held grant to the pool (idempotent)."""
+        if not self._closed:
+            self.pool.release(self._granted)
+            self._granted = 0
+            self._closed = True
 
 
 class PackageScheduler:
@@ -108,9 +246,21 @@ class PackageScheduler:
         pool: WorkerPool,
         *,
         seq_package_limit: int = 4,
+        priority: int = 0,
     ):
         self.pool = pool
         self.seq_package_limit = seq_package_limit
+        self.priority = priority
+
+    def begin(self, packages: WorkPackages, bounds: ThreadBounds) -> ScheduleRun:
+        """Start a stepwise run (requests the initial grant now)."""
+        return ScheduleRun(
+            self.pool,
+            packages,
+            bounds,
+            seq_package_limit=self.seq_package_limit,
+            priority=self.priority,
+        )
 
     def run(
         self,
@@ -119,65 +269,19 @@ class PackageScheduler:
         execute_parallel: Callable[[np.ndarray, int], None],
         execute_sequential: Callable[[np.ndarray], None],
     ) -> ScheduleTrace:
-        """Execute all packages of one iteration.
+        """Execute all packages of one iteration synchronously.
 
         execute_parallel(package_ids, t): run the given packages with t-way
         parallelism (device group of size t / t threads).
         execute_sequential(package_ids): run the given packages on one worker.
         """
-        order = packages.order[: packages.n_packages]
-        if not bounds.parallel or packages.n_packages <= 1:
-            # preparation already decided sequential: take one worker at most
-            granted = self.pool.request(1)
-            trace = ScheduleTrace(requested=1)
-            try:
-                execute_sequential(order)
-                trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in order)
-            finally:
-                self.pool.release(granted)
-            return trace
-
-        requested = bounds.t_max
-        granted = self.pool.request(requested)
-        trace = ScheduleTrace(requested=requested)
+        srun = self.begin(packages, bounds)
         try:
-            cursor = 0
-            seq_done = 0
-            n = len(order)
-            while cursor < n:
-                usable = largest_pow2_leq(granted)
-                if usable >= max(bounds.t_min, 2):
-                    # parallel phase: hand the remaining packages to the group
-                    batch = order[cursor:]
-                    execute_parallel(batch, usable)
-                    trace.runs.extend(
-                        PackageRun(int(p), "parallel", usable) for p in batch
-                    )
-                    cursor = n
-                elif seq_done < self.seq_package_limit:
-                    # below the parallel boundary: one worker runs one package,
-                    # the rest wait; re-evaluate afterwards (workers may have
-                    # freed up or new ones may have arrived)
-                    pkg = order[cursor : cursor + 1]
-                    execute_sequential(pkg)
-                    trace.runs.append(PackageRun(int(pkg[0]), "sequential", 1))
-                    cursor += 1
-                    seq_done += 1
-                    extra = self.pool.request(requested - granted)
-                    granted += extra
+            while (step := srun.next_step()) is not None:
+                if step.mode == "parallel":
+                    execute_parallel(step.batch, step.workers)
                 else:
-                    # give up on parallelism: release all but one worker and
-                    # finish sequentially (§4.3 last step)
-                    if granted > 1:
-                        self.pool.release(granted - 1)
-                        granted = 1
-                    batch = order[cursor:]
-                    execute_sequential(batch)
-                    trace.runs.extend(
-                        PackageRun(int(p), "sequential", 1) for p in batch
-                    )
-                    trace.released_early = True
-                    cursor = n
+                    execute_sequential(step.batch)
         finally:
-            self.pool.release(granted)
-        return trace
+            srun.close()
+        return srun.trace

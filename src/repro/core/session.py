@@ -13,13 +13,30 @@ Two clocks are kept:
     simulation so that worker contention between sessions is honoured. The
     modeled clock is what reproduces the paper's PEPS/TEPS concurrency
     figures on hardware we don't physically have.
+
+``run_query`` and ``run_sessions`` share one per-iteration execution path
+(prepare → decide → schedule → account → feedback); the only difference is
+who advances the clock. ``run_query`` drives the stepwise
+:class:`~.scheduler.ScheduleRun` to completion immediately, while
+``run_sessions`` interleaves the steps of many sessions on the modeled
+timeline, so the §4.3 protocol — grant re-evaluation after each sequential
+package, the ``seq_package_limit`` fallback, early release — runs with real
+inter-session contention.
+
+On top of the unified loop the engine provides the inter-query controls a
+multi-tenant deployment needs: an :class:`AdmissionController` that caps
+in-flight sessions by pool pressure, open-loop :class:`PoissonArrivals`
+session streams, per-query priority levels honoured by
+``WorkerPool.request``, and an :class:`EngineReport` with latency
+percentiles and a pool-utilization timeline.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import time
-from typing import Any, Callable, Iterable, Protocol
+from typing import Any, Callable, Protocol, Sequence
 
 import numpy as np
 
@@ -30,7 +47,14 @@ from .contention import HardwareModel
 from .cost_model import iteration_cost_ns
 from .descriptors import AlgorithmDescriptor
 from .packaging import WorkPackages
-from .scheduler import PackageScheduler, ScheduleTrace, WorkerPool, largest_pow2_leq
+from .scheduler import (
+    PackageScheduler,
+    ScheduleRun,
+    ScheduleStep,
+    ScheduleTrace,
+    WorkerPool,
+    largest_pow2_leq,
+)
 
 
 class QueryExecutor(Protocol):
@@ -40,6 +64,7 @@ class QueryExecutor(Protocol):
 
     def start(self) -> None: ...
     def finished(self) -> bool: ...
+    def graph_stats(self) -> Any: ...
     def frontier(self) -> tuple[int, np.ndarray | None, float]:
         """(frontier_size, frontier_degrees|None, unvisited_estimate)"""
         ...
@@ -53,12 +78,28 @@ class QueryRecord:
     session: int
     query: int
     algorithm: str
+    priority: int = 0
     iterations: int = 0
     parallel_iterations: int = 0
     edges: float = 0.0
     modeled_ns: float = 0.0
     measured_ns: float = 0.0
+    submitted_ns: float = 0.0     # modeled clock: query entered the system
+    started_ns: float = 0.0       # modeled clock: first iteration began
+    finished_ns: float = 0.0      # modeled clock: query completed
     traces: list[ScheduleTrace] = dataclasses.field(default_factory=list)
+
+    @property
+    def latency_ns(self) -> float:
+        """Modeled end-to-end latency including admission wait."""
+        return max(self.finished_ns - self.submitted_ns, 0.0)
+
+
+def _percentiles(latencies_ns: Sequence[float]) -> dict[str, float]:
+    if not latencies_ns:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    arr = np.asarray(latencies_ns, dtype=np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in (50, 95, 99)}
 
 
 @dataclasses.dataclass
@@ -67,6 +108,11 @@ class EngineReport:
     makespan_modeled_ns: float
     makespan_measured_ns: float
     pool_capacity: int
+    admission_cap: int | None = None
+    # (modeled time_ns, workers in use) samples, one per scheduling event
+    utilization: list[tuple[float, int]] = dataclasses.field(default_factory=list)
+    # (modeled time_ns, sessions in flight) samples, one per admission change
+    inflight: list[tuple[float, int]] = dataclasses.field(default_factory=list)
 
     @property
     def total_edges(self) -> float:
@@ -83,6 +129,120 @@ class EngineReport:
             return 0.0
         return self.total_edges / (self.makespan_measured_ns * 1e-9)
 
+    # -------------------------------------------------- latency + utilization
+    def latency_percentiles(self) -> dict[str, float]:
+        """p50/p95/p99 modeled query latency across all sessions (ns)."""
+        return _percentiles([r.latency_ns for r in self.records if r.finished_ns > 0])
+
+    def latency_percentiles_by_session(self) -> dict[int, dict[str, float]]:
+        by_session: dict[int, list[float]] = collections.defaultdict(list)
+        for r in self.records:
+            if r.finished_ns > 0:
+                by_session[r.session].append(r.latency_ns)
+        return {sid: _percentiles(lats) for sid, lats in sorted(by_session.items())}
+
+    def mean_utilization(self) -> float:
+        """Time-weighted mean fraction of the pool in use (modeled clock)."""
+        if len(self.utilization) < 2 or self.pool_capacity <= 0:
+            return 0.0
+        ts = np.asarray([t for t, _ in self.utilization])
+        us = np.asarray([u for _, u in self.utilization], dtype=np.float64)
+        span = ts[-1] - ts[0]
+        if span <= 0:
+            return float(us.mean() / self.pool_capacity)
+        return float(np.sum(us[:-1] * np.diff(ts)) / (span * self.pool_capacity))
+
+    @property
+    def max_inflight(self) -> int:
+        return max((n for _, n in self.inflight), default=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Open-loop session arrival stream: exponential inter-arrival times with
+    a deterministic seed, so bursty-traffic benchmarks are reproducible.
+
+    ``rate_per_s`` is on the *modeled* clock (sessions per modeled second)."""
+
+    rate_per_s: float
+    seed: int = 0
+
+    def times_ns(self, n: int) -> np.ndarray:
+        if self.rate_per_s <= 0:
+            raise ValueError("rate_per_s must be positive")
+        rng = np.random.default_rng(self.seed)
+        gaps = rng.exponential(1e9 / self.rate_per_s, size=n)
+        return np.cumsum(gaps)
+
+
+class AdmissionController:
+    """Caps concurrently running sessions by pool pressure.
+
+    Reuses the queue-depth fairness idea of ``serving.engine.plan_group_width``
+    in reverse: instead of shrinking a request's width so P is shared among
+    queued requests, it bounds the number of *admitted* sessions so that each
+    can still be guaranteed ``target_share`` workers — ``cap = max(P //
+    target_share, 1)``, optionally clamped by ``max_inflight``. Sessions over
+    the cap wait in FIFO order and are admitted as running sessions drain."""
+
+    def __init__(self, *, target_share: int = 1, max_inflight: int | None = None):
+        if target_share < 1:
+            raise ValueError("target_share must be >= 1")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.target_share = target_share
+        self.max_inflight = max_inflight
+        self.inflight = 0
+        # (-priority, fifo_seq, session): highest priority first, FIFO within
+        # a class — a latency-sensitive session must not queue behind the
+        # whole low-priority backlog
+        self._waiting: list[tuple[int, int, Any]] = []
+        self._enqueued = 0
+
+    def cap(self, pool: WorkerPool) -> int:
+        derived = max(pool.capacity // self.target_share, 1)
+        if self.max_inflight is not None:
+            derived = min(derived, self.max_inflight)
+        return derived
+
+    def try_admit(self, pool: WorkerPool) -> bool:
+        if self.inflight < self.cap(pool):
+            self.inflight += 1
+            return True
+        return False
+
+    def enqueue(self, session: Any) -> None:
+        prio = int(getattr(session, "priority", 0))
+        heapq.heappush(self._waiting, (-prio, self._enqueued, session))
+        self._enqueued += 1
+
+    def release(self, pool: WorkerPool) -> Any | None:
+        """A session finished: admit (and return) the next waiter, if any."""
+        self.inflight = max(self.inflight - 1, 0)
+        if self._waiting and self.inflight < self.cap(pool):
+            self.inflight += 1
+            return heapq.heappop(self._waiting)[2]
+        return None
+
+    def reset(self) -> None:
+        """Drop all admission state (run teardown / crash recovery)."""
+        self.inflight = 0
+        self._waiting.clear()
+        self._enqueued = 0
+
+
+@dataclasses.dataclass
+class _SessionState:
+    sid: int
+    priority: int = 0
+    next_query: int = 0
+    executor: QueryExecutor | None = None
+    record: QueryRecord | None = None
+    prep: PreparedIteration | None = None
+    srun: ScheduleRun | None = None
+    iter_modeled_ns: float = 0.0
+    iter_measured_ns: float = 0.0
+
 
 class MultiQueryEngine:
     """Gang-scheduling engine for concurrent graph queries."""
@@ -95,17 +255,25 @@ class MultiQueryEngine:
         seq_package_limit: int = 4,
         policy: str = "scheduler",
         feedback: CostFeedback | None = None,
+        admission: AdmissionController | None = None,
+        high_priority_reserve: int = 0,
     ):
         if policy not in ("scheduler", "sequential", "simple"):
             raise ValueError(f"unknown policy {policy!r}")
         self.hw = hw
-        self.pool = WorkerPool(pool_capacity or hw.max_threads)
+        self.pool = WorkerPool(
+            pool_capacity or hw.max_threads,
+            high_priority_reserve=high_priority_reserve,
+        )
         self.seq_package_limit = seq_package_limit
         self.policy = policy
         # §4.4 feedback loop (paper future work): measured package costs
         # correct subsequent predictions
         self.feedback = feedback
+        self.admission = admission or AdmissionController()
 
+    # ------------------------------------------------------------------
+    # shared per-iteration path (both run_query and run_sessions)
     # ------------------------------------------------------------------
     def _decide(self, prep: PreparedIteration) -> ThreadBounds:
         """Apply the engine policy: the paper's baselines override bounds."""
@@ -125,6 +293,87 @@ class MultiQueryEngine:
             )
         return b
 
+    def _prepare(
+        self,
+        executor: QueryExecutor,
+        prev: PreparedIteration | None,
+        fsize: int,
+        fdeg: np.ndarray | None,
+        unvisited: float,
+    ) -> PreparedIteration:
+        """Preparation step; topology-centric algorithms prepare once (§4.5)."""
+        if prev is not None and executor.desc.kind != "data_driven":
+            return prev
+        return prepare_iteration(
+            executor.desc,
+            self.hw,
+            executor.graph_stats(),
+            fsize,
+            frontier_degrees=fdeg,
+            unvisited=unvisited,
+            p=self.pool.capacity,
+        )
+
+    def _execute_step(
+        self, executor: QueryExecutor, prep: PreparedIteration, step: ScheduleStep
+    ) -> float:
+        """Run one schedule step's packages for real; returns measured ns."""
+        t0 = time.perf_counter_ns()
+        parallel = step.mode == "parallel"
+        executor.run_packages(
+            step.batch, prep.packages, step.workers if parallel else 1, parallel=parallel
+        )
+        return float(time.perf_counter_ns() - t0)
+
+    def _step_cost_ns(
+        self, desc: AlgorithmDescriptor, prep: PreparedIteration, step: ScheduleStep
+    ) -> float:
+        """Modeled duration of one step: the iteration cost at the step's
+        parallelism, scaled by the fraction of packages it covers."""
+        n_pkg = max(prep.packages.n_packages, 1)
+        t = step.workers if step.mode == "parallel" else 1
+        return iteration_cost_ns(desc, self.hw, prep.work, t=t) * (len(step.batch) / n_pkg)
+
+    def _account_iteration(
+        self,
+        executor: QueryExecutor,
+        record: QueryRecord,
+        trace: ScheduleTrace,
+        modeled_ns: float,
+        measured_ns: float,
+    ) -> None:
+        """Book one finished iteration into the record + feedback loop."""
+        record.modeled_ns += modeled_ns
+        record.measured_ns += measured_ns
+        record.iterations += 1
+        par_mode = any(r.mode == "parallel" for r in trace.runs)
+        if par_mode:
+            record.parallel_iterations += 1
+        record.traces.append(trace)
+        if self.feedback is not None:
+            self.feedback.observe(executor.desc.name, par_mode, modeled_ns, measured_ns)
+
+    def _run_iteration(
+        self,
+        executor: QueryExecutor,
+        record: QueryRecord,
+        prep: PreparedIteration,
+        scheduler: PackageScheduler,
+    ) -> ScheduleTrace:
+        """Execute one full iteration synchronously (run_query path)."""
+        bounds = self._decide(prep)
+        srun = scheduler.begin(prep.packages, bounds)
+        modeled = 0.0
+        measured = 0.0
+        try:
+            while (step := srun.next_step()) is not None:
+                measured += self._execute_step(executor, prep, step)
+                modeled += self._step_cost_ns(executor.desc, prep, step)
+        finally:
+            srun.close()
+        self._account_iteration(executor, record, srun.trace, modeled, measured)
+        return srun.trace
+
     # ------------------------------------------------------------------
     def run_query(self, executor: QueryExecutor, record: QueryRecord) -> None:
         """Execute a single query to completion against the live pool.
@@ -132,65 +381,18 @@ class MultiQueryEngine:
         Updates ``record`` with measured/modeled time and decision traces.
         """
         executor.start()
-        scheduler = PackageScheduler(self.pool, seq_package_limit=self.seq_package_limit)
+        scheduler = PackageScheduler(
+            self.pool,
+            seq_package_limit=self.seq_package_limit,
+            priority=record.priority,
+        )
         prep: PreparedIteration | None = None
-        stats = executor.graph_stats()  # type: ignore[attr-defined]
-
         while not executor.finished():
             fsize, fdeg, unvisited = executor.frontier()
             if fsize <= 0:
                 break
-            if prep is None or executor.desc.kind == "data_driven":
-                prep = prepare_iteration(
-                    executor.desc,
-                    self.hw,
-                    stats,
-                    fsize,
-                    frontier_degrees=fdeg,
-                    unvisited=unvisited,
-                    p=self.pool.capacity,
-                )
-            bounds = self._decide(prep)
-            packages = prep.packages
-
-            t0 = time.perf_counter_ns()
-
-            def _par(batch: np.ndarray, t: int) -> None:
-                executor.run_packages(batch, packages, t, parallel=True)
-
-            def _seq(batch: np.ndarray) -> None:
-                executor.run_packages(batch, packages, 1, parallel=False)
-
-            t_iter0 = time.perf_counter_ns()
-            trace = scheduler.run(packages, bounds, _par, _seq)
-            iter_measured = time.perf_counter_ns() - t_iter0
-            record.measured_ns += iter_measured
-
-            # modeled time: split package work by the modes actually chosen
-            n_pkg = max(packages.n_packages, 1)
-            seq_pkgs = sum(r.mode == "sequential" for r in trace.runs)
-            par_pkgs = len(trace.runs) - seq_pkgs
-            t_used = trace.max_workers
-            seq_cost = iteration_cost_ns(executor.desc, self.hw, prep.work, t=1)
-            record.modeled_ns += seq_cost * (seq_pkgs / n_pkg)
-            if par_pkgs:
-                par_cost = iteration_cost_ns(
-                    executor.desc, self.hw, prep.work, t=max(t_used, 2)
-                )
-                record.modeled_ns += par_cost * (par_pkgs / n_pkg)
-                record.parallel_iterations += 1
-
-            record.iterations += 1
-            record.traces.append(trace)
-            if self.feedback is not None:
-                par_mode = any(r.mode == "parallel" for r in trace.runs)
-                seq_cost_iter = iteration_cost_ns(
-                    executor.desc, self.hw, prep.work, t=max(trace.max_workers, 1)
-                )
-                self.feedback.observe(
-                    executor.desc.name, par_mode, seq_cost_iter, iter_measured
-                )
-
+            prep = self._prepare(executor, prep, fsize, fdeg, unvisited)
+            self._run_iteration(executor, record, prep, scheduler)
         record.edges = float(executor.edges_traversed())
 
     # ------------------------------------------------------------------
@@ -200,108 +402,183 @@ class MultiQueryEngine:
         *,
         sessions: int,
         queries_per_session: int,
+        priorities: Sequence[int] | Callable[[int], int] | None = None,
+        arrivals: PoissonArrivals | Sequence[float] | None = None,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
-        Discrete-event simulation on the modeled clock: at each event a
-        session prepares its next iteration, requests workers from the shared
-        pool, *holds the grant for the iteration's modeled duration*, and the
-        real JAX compute for the iteration is executed inline (measured
-        clock). Worker contention between sessions — the paper's inter-query
-        dimension — is therefore honoured exactly: when many sessions are in
-        flight, grants shrink below T_min and queries selectively fall back
-        to sequential execution."""
+        Discrete-event simulation on the modeled clock. Sessions arrive at
+        t=0 (closed loop) or along an open-loop arrival stream; the admission
+        controller bounds how many run at once. Each admitted session drives
+        the full §4.3 protocol stepwise: a schedule step executes the real
+        JAX compute inline (measured clock) and occupies the granted workers
+        for its modeled duration, after which the grant is re-evaluated — so
+        when many sessions are in flight, grants shrink below T_min and
+        queries selectively fall back to sequential execution, with
+        ``seq_package_limit`` / early release honoured mid-iteration."""
+        if priorities is None:
+            prio = [0] * sessions
+        elif callable(priorities):
+            prio = [int(priorities(s)) for s in range(sessions)]
+        else:
+            prio = [int(p) for p in priorities]
+            if len(prio) != sessions:
+                raise ValueError("priorities must have one entry per session")
+
+        if arrivals is None:
+            arrival_ns = np.zeros(sessions)
+        elif isinstance(arrivals, PoissonArrivals):
+            arrival_ns = arrivals.times_ns(sessions)
+        else:
+            arrival_ns = np.asarray(list(arrivals), dtype=np.float64)
+            if arrival_ns.shape != (sessions,):
+                raise ValueError("arrivals must have one entry per session")
+
         records: list[QueryRecord] = []
+        report = EngineReport(
+            records=records,
+            makespan_modeled_ns=0.0,
+            makespan_measured_ns=0.0,
+            pool_capacity=self.pool.capacity,
+            admission_cap=self.admission.cap(self.pool),
+        )
         t_start = time.perf_counter_ns()
+        states = [_SessionState(sid=s, priority=prio[s]) for s in range(sessions)]
 
-        @dataclasses.dataclass
-        class _SessionState:
-            sid: int
-            next_query: int = 0
-            executor: QueryExecutor | None = None
-            record: QueryRecord | None = None
-            prep: PreparedIteration | None = None
-
-        states = [_SessionState(sid=s) for s in range(sessions)]
-        # (time_ns, seq, kind, payload); kind 0 = release, kind 1 = step
-        heap: list[tuple[float, int, int, Any]] = []
+        EV_ARRIVE, EV_STEP = 0, 1
+        heap: list[tuple[float, int, int, _SessionState]] = []
         seq = 0
-        for st in states:
-            heapq.heappush(heap, (0.0, seq, 1, st))
-            seq += 1
         clock = 0.0
 
-        def _next_executor(st: _SessionState) -> bool:
+        def _push(t_ev: float, kind: int, state: _SessionState) -> None:
+            nonlocal seq
+            heapq.heappush(heap, (t_ev, seq, kind, state))
+            seq += 1
+
+        for st in states:
+            _push(float(arrival_ns[st.sid]), EV_ARRIVE, st)
+
+        def _sample(t: float) -> None:
+            u = self.pool.in_use
+            if not report.utilization or report.utilization[-1][1] != u:
+                report.utilization.append((t, u))
+
+        def _sample_inflight(t: float) -> None:
+            n = self.admission.inflight
+            if not report.inflight or report.inflight[-1][1] != n:
+                report.inflight.append((t, n))
+
+        def _begin_query(st: _SessionState, t: float) -> bool:
+            """Move the session to its next query; False → session exhausted."""
             if st.next_query >= queries_per_session:
                 return False
             st.executor = make_executor(st.sid, st.next_query)
             st.executor.start()
             st.record = QueryRecord(
-                session=st.sid, query=st.next_query, algorithm=st.executor.desc.name
+                session=st.sid,
+                query=st.next_query,
+                algorithm=st.executor.desc.name,
+                priority=st.priority,
             )
+            # closed loop within a session: the next query is submitted the
+            # moment the previous one finishes. The first query inherits the
+            # session's arrival time so admission wait counts into latency.
+            st.record.submitted_ns = float(arrival_ns[st.sid]) if st.next_query == 0 else t
             records.append(st.record)
             st.prep = None
             st.next_query += 1
             return True
 
-        while heap:
-            t, _, kind, payload = heapq.heappop(heap)
-            clock = max(clock, t)
-            if kind == 0:  # release a held grant
-                self.pool.release(payload)
-                continue
-            st: _SessionState = payload
-            if st.executor is None or st.executor.finished():
-                if st.executor is not None and st.record is not None:
-                    st.record.edges = float(st.executor.edges_traversed())
-                if not _next_executor(st):
-                    continue
-            ex, rec = st.executor, st.record
-            assert ex is not None and rec is not None
-            fsize, fdeg, unvisited = ex.frontier()
-            if fsize <= 0:
-                rec.edges = float(ex.edges_traversed())
-                st.executor = None
-                heapq.heappush(heap, (t, seq, 1, st)); seq += 1
-                continue
-            if st.prep is None or ex.desc.kind == "data_driven":
-                st.prep = prepare_iteration(
-                    ex.desc, self.hw, ex.graph_stats(), fsize,
-                    frontier_degrees=fdeg, unvisited=unvisited,
-                    p=self.pool.capacity,
-                )
-            bounds = self._decide(st.prep)
-            request = bounds.t_max if bounds.parallel else 1
-            granted = self.pool.request(max(request, 1))
-            usable = largest_pow2_leq(granted)
-            go_parallel = bounds.parallel and usable >= max(bounds.t_min, 2)
-            t_used = usable if go_parallel else 1
-            hold = t_used if granted else 0
-            if granted > hold:  # release surplus immediately
-                self.pool.release(granted - hold)
-
-            m0 = time.perf_counter_ns()
-            order = st.prep.packages.order[: st.prep.packages.n_packages]
-            ex.run_packages(order, st.prep.packages, max(t_used, 1), parallel=go_parallel)
-            rec.measured_ns += time.perf_counter_ns() - m0
-
-            d = iteration_cost_ns(ex.desc, self.hw, st.prep.work, t=t_used)
-            rec.modeled_ns += d
-            rec.iterations += 1
-            if go_parallel:
-                rec.parallel_iterations += 1
-            if hold:
-                heapq.heappush(heap, (t + d, seq, 0, hold)); seq += 1
-            heapq.heappush(heap, (t + d, seq, 1, st)); seq += 1
-
-        for st in states:  # flush edge counts of final queries
+        def _finish_query(st: _SessionState, t: float) -> None:
             if st.executor is not None and st.record is not None:
                 st.record.edges = float(st.executor.edges_traversed())
+                st.record.finished_ns = t
+            st.executor = None
 
-        makespan_measured = time.perf_counter_ns() - t_start
-        return EngineReport(
-            records=records,
-            makespan_modeled_ns=clock,
-            makespan_measured_ns=float(makespan_measured),
-            pool_capacity=self.pool.capacity,
-        )
+        try:
+            while heap:
+                t, _, kind, st = heapq.heappop(heap)
+                clock = max(clock, t)
+
+                if kind == EV_ARRIVE:
+                    if self.admission.try_admit(self.pool):
+                        _sample_inflight(t)
+                        _push(t, EV_STEP, st)
+                    else:
+                        self.admission.enqueue(st)
+                    continue
+
+                # EV_STEP: advance one session by one schedule step
+                if st.srun is None:
+                    # between iterations: finish queries / start the next one
+                    while True:
+                        if st.executor is None:
+                            if not _begin_query(st, t):
+                                # session drained → hand the slot to a waiter
+                                nxt = self.admission.release(self.pool)
+                                _sample_inflight(t)
+                                if nxt is not None:
+                                    _push(t, EV_STEP, nxt)
+                                st = None
+                                break
+                        ex = st.executor
+                        assert ex is not None
+                        if ex.finished():
+                            _finish_query(st, t)
+                            continue
+                        fsize, fdeg, unvisited = ex.frontier()
+                        if fsize <= 0:
+                            _finish_query(st, t)
+                            continue
+                        break
+                    if st is None:
+                        continue
+                    rec = st.record
+                    assert rec is not None
+                    if rec.started_ns == 0.0 and rec.iterations == 0:
+                        rec.started_ns = t
+                    st.prep = self._prepare(ex, st.prep, fsize, fdeg, unvisited)
+                    bounds = self._decide(st.prep)
+                    scheduler = PackageScheduler(
+                        self.pool,
+                        seq_package_limit=self.seq_package_limit,
+                        priority=st.priority,
+                    )
+                    st.srun = scheduler.begin(st.prep.packages, bounds)
+                    st.iter_modeled_ns = 0.0
+                    st.iter_measured_ns = 0.0
+
+                step = st.srun.next_step()
+                if step is None:
+                    # iteration complete: release the grant, book it, loop on
+                    trace = st.srun.trace
+                    st.srun.close()
+                    st.srun = None
+                    assert st.executor is not None and st.record is not None
+                    self._account_iteration(
+                        st.executor, st.record, trace, st.iter_modeled_ns, st.iter_measured_ns
+                    )
+                    _sample(t)
+                    _push(t, EV_STEP, st)
+                    continue
+
+                assert st.executor is not None and st.prep is not None
+                st.iter_measured_ns += self._execute_step(st.executor, st.prep, step)
+                step_ns = self._step_cost_ns(st.executor.desc, st.prep, step)
+                st.iter_modeled_ns += step_ns
+                _sample(t)
+                _push(t + step_ns, EV_STEP, st)
+
+        finally:
+            # an exception in executor code must not leak held grants or
+            # admission slots on the shared engine state
+            for s in states:
+                if s.srun is not None:
+                    s.srun.close()
+                    s.srun = None
+            self.admission.reset()
+
+        _sample(clock)
+        report.makespan_modeled_ns = clock
+        report.makespan_measured_ns = float(time.perf_counter_ns() - t_start)
+        return report

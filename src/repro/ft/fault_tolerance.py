@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 import numpy as np
 

@@ -23,7 +23,6 @@ import math
 from .rmat import grid_graph, rmat_edges
 from .structure import Graph, build_graph
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,7 +28,6 @@ def rmat_edges(
     rng = np.random.default_rng(seed)
     n_vertices = 1 << scale
     n_edges = n_vertices * edge_factor
-    d = 1.0 - a - b - c
     src = np.zeros(n_edges, dtype=np.int64)
     dst = np.zeros(n_edges, dtype=np.int64)
     ab, abc = a + b, a + b + c

@@ -8,8 +8,6 @@ algorithm lowers to a static XLA program.
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

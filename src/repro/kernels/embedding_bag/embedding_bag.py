@@ -16,7 +16,6 @@ are consecutive — ops.py sorts and also pre-scales weighted bags.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -4,9 +4,7 @@ bags (rows never visited stay zero only if some step initializes them —
 ops pre-zeroes by scattering one weight-0 sentinel per empty bag)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .embedding_bag import embedding_bag_pallas
 

@@ -12,7 +12,6 @@ is small — the fusion the taxonomy §RecSys calls for.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax-importing import: jax locks the device count on init.
 
 import argparse
-import dataclasses
 import json
 import re
 import subprocess
@@ -92,7 +91,6 @@ def analyze_lowered(lowered) -> dict:
 
 def run_cell(arch: str, shape: str, mesh_kind: str, *, analysis: bool, variant: str | None = None) -> dict:
     """Worker: lower+compile one cell (optionally plus trip-1/2 analysis)."""
-    import jax
 
     from repro.configs import get_arch
     from repro.launch.mesh import make_production_mesh
@@ -202,7 +200,6 @@ def main() -> None:
             except TypeError:
                 pass
             n_l = getattr(cfg, "n_layers", getattr(cfg, "n_interactions", 1))
-            mb = getattr(cfg, "microbatches", 1) if rec["kind"] == "train" else 1
             rec["scaled"] = scaled_totals(rec, n_l)
             rec["n_layers_full"] = n_l
         tag = f"{args.arch}__{args.shape}__{args.mesh}"

@@ -5,12 +5,10 @@ execute for real.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..models import transformer as tf
 from ..models import recsys as tt

@@ -9,12 +9,10 @@ a TPU slice the same entry point runs the production mesh.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def build_small_lm(arch: str, *, scale: str = "smoke"):

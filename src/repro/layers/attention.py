@@ -8,7 +8,6 @@ cross-checked in tests.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ pass through the residual only), verified in tests.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,6 @@ Batch convention (all fixed shapes; masks encode validity):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

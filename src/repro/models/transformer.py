@@ -8,12 +8,10 @@ parallel pytree of logical sharding names consumed by ``repro.sharding``.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..layers.attention import attention_layer, decode_attention, gqa_project
 from ..layers.mlp import swiglu

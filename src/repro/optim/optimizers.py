@@ -5,7 +5,6 @@ LR schedules. Pure pytree transforms, no external deps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -131,7 +130,6 @@ def adafactor_update(cfg: OptimizerConfig, grads, state, params):
         new_p = p.astype(jnp.float32) - lr * (update + cfg.weight_decay * p.astype(jnp.float32))
         return new_p.astype(p.dtype), new_v
 
-    is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "v_row" in x)
     out = jax.tree.map(
         upd, grads, state["v"], params, is_leaf=lambda x: hasattr(x, "ndim")
     )

@@ -1,0 +1,78 @@
+"""Property-test shim: use hypothesis when available, fall back to fixed
+deterministic examples otherwise.
+
+The CI dev environment installs hypothesis (``pip install -e .[dev]``), but
+the suite must also collect and pass in minimal environments (the paper-repro
+container bakes only jax/numpy/pytest). When hypothesis is missing, ``given``
+degrades to running the test body over a deterministic grid per strategy:
+both bounds plus seeded random draws — the same shrunk corners hypothesis
+tends to find first.
+
+Only the strategy surface this suite uses is emulated (``st.integers`` and
+``st.floats`` with positional/keyword bounds, keyword-only ``given``).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which branch imports
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import itertools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 12  # random draws per strategy, plus the two bounds
+
+    class _Strategy:
+        def __init__(self, lo, hi, integer: bool):
+            self.lo = lo
+            self.hi = hi
+            self.integer = integer
+
+        def examples(self, rng: "np.random.Generator") -> list:
+            if self.integer:
+                draws = rng.integers(self.lo, self.hi, size=_FALLBACK_EXAMPLES, endpoint=True)
+                vals = [int(self.lo), int(self.hi), *map(int, draws)]
+            else:
+                draws = rng.uniform(self.lo, self.hi, size=_FALLBACK_EXAMPLES)
+                vals = [float(self.lo), float(self.hi), *map(float, draws)]
+            return vals
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(min_value, max_value, integer=True)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(min_value, max_value, integer=False)
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+            # not the strategy parameters (it would resolve them as fixtures).
+            def wrapper():
+                rng = np.random.default_rng(0)
+                names = list(strategies)
+                columns = [strategies[n].examples(rng) for n in names]
+                # all example lists share one length, so zip is exhaustive
+                for values in itertools.zip_longest(*columns):
+                    fn(**dict(zip(names, values)))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

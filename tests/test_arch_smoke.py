@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, get_arch
+from repro.configs import get_arch
 
 LM_ARCHS = ["granite-34b", "tinyllama-1.1b", "stablelm-1.6b", "grok-1-314b", "arctic-480b"]
 GNN_ARCHS = ["meshgraphnet", "graphcast", "pna", "schnet"]
@@ -16,6 +16,7 @@ def _finite(tree) -> bool:
     return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_smoke_train_step(arch):
     from repro.launch.steps import lm_train_step
@@ -74,6 +75,7 @@ def _gnn_batch(rng, n=48, e=160, d_feat=16, d_edge=8, n_graphs=4):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", GNN_ARCHS)
 def test_gnn_smoke_forward_and_grad(arch, rng):
     mod = get_arch(arch)

@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     BFS_TOP_DOWN,
@@ -12,7 +12,6 @@ from repro.core import (
     IterationWork,
     TPU_V5E_POD,
     XEON_E5_2660V4,
-    c_sub,
     c_vertex_total,
     calibrate_from_runs,
     iteration_cost_ns,

@@ -3,14 +3,12 @@ Monte-Carlo simulation of the paper's probabilistic model."""
 import math
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.estimators import (
     TraversalEstimator,
     estimate_found_closed_form,
     estimate_found_paper_form,
-    estimate_found_sampled,
     estimate_touched_closed_form,
     estimate_touched_exact,
     estimate_touched_sampled,

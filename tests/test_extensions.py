@@ -3,7 +3,6 @@ error-feedback int8 gradient compression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.algorithms import (
     BFSExecutor,

@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,270 @@
+"""Unified multi-query runtime: run_query/run_sessions parity, the full §4.3
+protocol under the discrete-event loop, admission control, open-loop
+arrivals, priorities, and the extended EngineReport."""
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    AdmissionController,
+    MultiQueryEngine,
+    PoissonArrivals,
+    QueryRecord,
+    WorkerPool,
+    XEON_E5_2660V4,
+)
+
+
+def _mk_pr(graph, max_iters=3):
+    return lambda s, q: PageRankExecutor(graph, mode="pull", max_iters=max_iters, tol=0)
+
+
+# ---------------- one shared iteration path ----------------
+
+@pytest.mark.parametrize("policy", ["scheduler", "sequential", "simple"])
+def test_run_query_and_single_session_traces_identical(medium_rmat, policy):
+    """run_query and a 1-session run_sessions must make identical scheduling
+    decisions on the same seed — they share one iteration-execution path."""
+    eng_q = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+    ex = PageRankExecutor(medium_rmat, mode="pull", max_iters=5, tol=0)
+    rec = QueryRecord(0, 0, "pr")
+    eng_q.run_query(ex, rec)
+
+    eng_s = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+    rep = eng_s.run_sessions(
+        _mk_pr(medium_rmat, max_iters=5), sessions=1, queries_per_session=1
+    )
+    assert len(rep.records) == 1
+    assert rec.traces == rep.records[0].traces
+    assert rec.iterations == rep.records[0].iterations
+    assert rec.modeled_ns == pytest.approx(rep.records[0].modeled_ns)
+    assert rec.edges == rep.records[0].edges
+
+
+def test_single_session_throughput_matches_run_query(medium_rmat):
+    """Unsaturated 1-session aggregate throughput equals the single-query
+    modeled number (the seed's closed-loop reference)."""
+    eng_q = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    ex = PageRankExecutor(medium_rmat, mode="pull", max_iters=5, tol=0)
+    rec = QueryRecord(0, 0, "pr")
+    eng_q.run_query(ex, rec)
+    ref_eps = rec.edges / (rec.modeled_ns * 1e-9)
+
+    eng_s = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    rep = eng_s.run_sessions(
+        _mk_pr(medium_rmat, max_iters=5), sessions=1, queries_per_session=1
+    )
+    assert rep.throughput_modeled() == pytest.approx(ref_eps, rel=0.10)
+
+
+# ---------------- full §4.3 protocol under saturation ----------------
+
+def test_saturated_pool_shows_fallback_and_early_release(medium_rmat):
+    """16 sessions on a 4-worker pool: session traces must contain
+    sequential-fallback package runs and early releases — the §4.3 protocol
+    the old one-shot grant path never reached."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=16, queries_per_session=1)
+
+    traces = [tr for r in rep.records for tr in r.traces]
+    seq_runs = sum(
+        any(run.mode == "sequential" for run in tr.runs) for tr in traces
+    )
+    assert seq_runs > 0, "no sequential fallback under a saturated pool"
+    assert any(tr.released_early for tr in traces), "seq_package_limit never hit"
+    assert eng.pool.available == eng.pool.capacity  # no grant leaked
+
+
+def test_admission_keeps_inflight_below_cap(medium_rmat):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=16, queries_per_session=1)
+    assert rep.admission_cap == 4
+    assert 0 < rep.max_inflight <= 4
+    assert len(rep.records) == 16  # every session still ran to completion
+
+
+def test_admission_cap_derives_from_target_share():
+    ctrl = AdmissionController(target_share=2)
+    pool = WorkerPool(8)
+    assert ctrl.cap(pool) == 4
+    assert AdmissionController(target_share=1, max_inflight=3).cap(pool) == 3
+    admitted = [ctrl.try_admit(pool) for _ in range(6)]
+    assert admitted == [True] * 4 + [False] * 2
+
+
+def test_admission_waiters_pop_by_priority():
+    """A latency-sensitive waiter must not queue behind the low-prio backlog."""
+    from types import SimpleNamespace
+
+    ctrl = AdmissionController(max_inflight=1)
+    pool = WorkerPool(4)
+    assert ctrl.try_admit(pool)
+    low_a, low_b = SimpleNamespace(priority=0), SimpleNamespace(priority=0)
+    high = SimpleNamespace(priority=1)
+    ctrl.enqueue(low_a)
+    ctrl.enqueue(low_b)
+    ctrl.enqueue(high)
+    assert ctrl.release(pool) is high
+    assert ctrl.release(pool) is low_a  # FIFO within a class
+    assert ctrl.release(pool) is low_b
+
+
+def test_resize_clamps_priority_reserve():
+    pool = WorkerPool(8, high_priority_reserve=4)
+    pool.resize(2)
+    assert pool.high_priority_reserve < pool.capacity
+    assert pool.request(2, priority=0) >= 1  # normals not starved after shrink
+    with pytest.raises(ValueError):
+        pool.resize(0)
+
+
+def test_parallel_phase_releases_unusable_surplus(medium_rmat):
+    """A non-power-of-2 grant's surplus returns to the pool when the run
+    commits to parallel execution, instead of being held for the step."""
+    from repro.core import PackageScheduler, ThreadBounds, make_packages
+    import numpy as np
+
+    pool = WorkerPool(16)
+    taken = pool.request(10)  # 6 left: usable 4, surplus 2
+    b = ThreadBounds(
+        t_min=2, t_max=8, n_packages=8, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool).begin(pkgs, b)
+    step = srun.next_step()
+    assert step.mode == "parallel" and step.workers == 4
+    assert pool.available == 2  # the 2 unusable workers came back mid-run
+    srun.close()
+    pool.release(taken)
+    assert pool.available == 16
+
+
+def test_executor_exception_does_not_leak_engine_state(medium_rmat):
+    """An executor crash mid-iteration must not leak worker grants or
+    admission slots; the engine stays usable."""
+
+    class BoomExecutor:
+        def __init__(self, inner):
+            self.inner = inner
+            self.desc = inner.desc
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+        def run_packages(self, *a, **kw):
+            raise RuntimeError("boom")
+
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    with pytest.raises(RuntimeError, match="boom"):
+        eng.run_sessions(
+            lambda s, q: BoomExecutor(
+                PageRankExecutor(medium_rmat, mode="pull", max_iters=2, tol=0)
+            ),
+            sessions=6,
+            queries_per_session=1,
+        )
+    assert eng.pool.available == eng.pool.capacity
+    assert eng.admission.inflight == 0
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=4, queries_per_session=1)
+    assert len(rep.records) == 4 and rep.total_edges > 0
+
+
+# ---------------- open-loop arrivals ----------------
+
+def test_poisson_arrivals_deterministic_and_positive():
+    a = PoissonArrivals(rate_per_s=1e4, seed=42)
+    t1, t2 = a.times_ns(100), a.times_ns(100)
+    assert np.array_equal(t1, t2)
+    assert (np.diff(t1) > 0).all() and t1[0] > 0
+    assert not np.array_equal(t1, PoissonArrivals(rate_per_s=1e4, seed=43).times_ns(100))
+
+
+def test_open_loop_arrivals_shift_latency(medium_rmat):
+    """Open-loop sessions arrive over time; the makespan extends past the
+    last arrival and per-query submission times follow the stream."""
+    arr = PoissonArrivals(rate_per_s=5_000.0, seed=1)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, arrivals=arr
+    )
+    times = arr.times_ns(6)
+    submitted = sorted(r.submitted_ns for r in rep.records)
+    assert submitted == pytest.approx(sorted(times))
+    assert rep.makespan_modeled_ns >= times.max()
+    assert all(r.finished_ns >= r.submitted_ns for r in rep.records)
+
+
+# ---------------- priorities ----------------
+
+def test_high_priority_reserve_honoured():
+    pool = WorkerPool(8, high_priority_reserve=2)
+    assert pool.request(8, priority=0) == 6  # reserve withheld from normals
+    pool.release(6)
+    assert pool.request(8, priority=1) == 8  # high priority drains the pool
+    pool.release(8)
+
+
+def test_high_priority_session_gets_more_parallelism(medium_rmat):
+    """Under saturation, the high-priority session should see at least as
+    many parallel iterations as the best low-priority one."""
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=4,
+        policy="scheduler",
+        high_priority_reserve=2,
+    )
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat),
+        sessions=8,
+        queries_per_session=1,
+        priorities=lambda sid: 1 if sid == 0 else 0,
+    )
+    by_prio = {0: [], 1: []}
+    for r in rep.records:
+        by_prio[r.priority].append(r.parallel_iterations)
+    assert by_prio[1], "high-priority session missing from the report"
+    assert max(by_prio[1]) >= max(by_prio[0])
+
+
+# ---------------- extended report ----------------
+
+def test_report_latency_percentiles_and_utilization(medium_rmat):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=8, queries_per_session=2)
+    pct = rep.latency_percentiles()
+    assert 0 < pct["p50"] <= pct["p95"] <= pct["p99"]
+    per_session = rep.latency_percentiles_by_session()
+    assert set(per_session) == set(range(8))
+    assert all(p["p50"] > 0 for p in per_session.values())
+    assert 0.0 < rep.mean_utilization() <= 1.0
+    # utilization samples are on the modeled timeline and bounded by capacity
+    assert all(0 <= u <= 4 for _, u in rep.utilization)
+    ts = [t for t, _ in rep.utilization]
+    assert ts == sorted(ts)
+
+
+def test_feedback_observed_in_run_sessions(medium_rmat):
+    """CostFeedback must see run_sessions iterations, not just run_query."""
+    from repro.core.feedback import CostFeedback
+
+    fb = CostFeedback(alpha=0.5)
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler", feedback=fb)
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=3, queries_per_session=1)
+    total_iters = sum(r.iterations for r in rep.records)
+    assert total_iters > 0
+    assert fb.observations == total_iters
+
+
+def test_bfs_sessions_still_complete(medium_rmat):
+    """Data-driven queries (per-iteration prepare) through the unified loop."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+
+    def mk(s, q):
+        return BFSExecutor(medium_rmat, (s * 37 + q) % medium_rmat.num_vertices)
+
+    rep = eng.run_sessions(mk, sessions=6, queries_per_session=2)
+    assert len(rep.records) == 12
+    assert rep.total_edges > 0
+    assert all(r.finished_ns > 0 for r in rep.records)
+    assert eng.pool.available == eng.pool.capacity

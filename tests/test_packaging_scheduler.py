@@ -1,11 +1,9 @@
 """§4.2 work packaging + §4.3 selective sequential execution."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     BFS_TOP_DOWN,
-    IterationWork,
     PackageScheduler,
     ThreadBounds,
     WorkerPool,
@@ -13,9 +11,7 @@ from repro.core import (
     make_packages,
     packages_to_table,
     prepare_iteration,
-    touched_memory_bytes,
 )
-from repro.graph.structure import GraphStats
 
 
 def bounds(parallel=True, t_min=2, t_max=8, n_packages=32):
@@ -141,7 +137,7 @@ def test_mid_run_reevaluation_picks_up_freed_workers():
         ran["seq"] += len(batch)
         pool.release(taken) if pool.available == 0 else None  # free mid-run once
 
-    trace = sched.run(pkgs, b, lambda batch, t: ran.__setitem__("par", ran["par"] + len(batch)), seq)
+    sched.run(pkgs, b, lambda batch, t: ran.__setitem__("par", ran["par"] + len(batch)), seq)
     # after the first sequential package the freed workers enable parallel
     assert ran["seq"] >= 1 and ran["par"] >= 1
 

@@ -1,12 +1,11 @@
 """Substrate tests: optimizer, checkpoint, data pipeline, FT, serving,
 graph substrate, sampler."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 # ---------------- optimizers ----------------
 
@@ -156,7 +155,8 @@ def test_sampler_capacity_and_validity(batch, f1, f2):
     assert (d >= 0).all() and (d < block.num_nodes).all()
     # edges exist in the original graph (spot check)
     nodes = block.nodes
-    indptr = np.asarray(g.csr.indptr); indices = np.asarray(g.csr.indices)
+    indptr = np.asarray(g.csr.indptr)
+    indices = np.asarray(g.csr.indices)
     for k in range(min(10, block.num_edges)):
         u, v = int(nodes[d[k]]), int(nodes[s[k]])
         assert v in indices[indptr[u]:indptr[u + 1]]
@@ -170,7 +170,8 @@ def test_heartbeat_and_rejoin():
     t = [0.0]
     hm = HeartbeatMonitor(["a", "b", "c"], timeout_s=5, clock=lambda: t[0])
     t[0] = 3.0
-    hm.beat("a"); hm.beat("b")
+    hm.beat("a")
+    hm.beat("b")
     t[0] = 7.0
     assert hm.check() == ["c"]
     hm.beat("c")  # beats from dead nodes ignored

@@ -7,11 +7,10 @@ import sys
 import textwrap
 from pathlib import Path
 
-import numpy as np
 import pytest
 
 from repro.algorithms import BFSExecutor, PageRankExecutor
-from repro.core import MultiQueryEngine, WorkerPool, XEON_E5_2660V4
+from repro.core import MultiQueryEngine, XEON_E5_2660V4
 
 
 def test_concurrent_sessions_report(medium_rmat):
