@@ -1,0 +1,83 @@
+"""BENCH_sessions.json trend gate (ROADMAP item).
+
+Compares a freshly generated session trajectory against the committed
+baseline and fails (exit 1) when the *modeled* PEPS/TEPS of any shared row
+regresses by more than the threshold. Only ``modeled_eps`` is gated — it is
+produced by the deterministic discrete-event simulation, so a >10% move is a
+scheduling change, not host noise; ``us_per_call`` (real wall time) is
+reported but never gated.
+
+Usage:
+    cp BENCH_sessions.json /tmp/baseline.json
+    rm BENCH_sessions.json   # so the fresh file holds only regenerated rows
+    python -m benchmarks.run fig10
+    python benchmarks/check_trend.py /tmp/baseline.json BENCH_sessions.json
+
+Remove the committed file before regenerating: run.py merges new rows into
+an existing file, so figures you did *not* rerun would be compared against
+byte-identical copies of themselves and report a meaningless +0.0%.
+
+Rows present on only one side (new figures, renamed policies) are reported
+but do not fail the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_sessions.json")
+    ap.add_argument("fresh", help="freshly generated BENCH_sessions.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="max allowed fractional modeled_eps regression (default 0.10)",
+    )
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print("trend gate: no shared rows to compare", file=sys.stderr)
+        return 1
+
+    failures = []
+    print(f"{'row':60s} {'baseline':>12s} {'fresh':>12s} {'delta':>8s}")
+    for name in shared:
+        b, f = base[name]["modeled_eps"], fresh[name]["modeled_eps"]
+        if b <= 0:
+            continue
+        delta = (f - b) / b
+        flag = ""
+        if delta < -args.threshold:
+            failures.append((name, delta))
+            flag = "  << REGRESSION"
+        print(f"{name:60s} {b:12.4g} {f:12.4g} {delta:+7.1%}{flag}")
+    for name in sorted(set(base) ^ set(fresh)):
+        side = "baseline-only" if name in base else "fresh-only"
+        print(f"{name:60s} ({side}; not gated)")
+
+    if failures:
+        print(
+            f"\ntrend gate FAILED: {len(failures)} row(s) regressed more than "
+            f"{args.threshold:.0%}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\ntrend gate OK: {len(shared)} rows within {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,11 @@ from repro.core import MultiQueryEngine, QueryRecord, XEON_E5_2660V4
 
 Row = tuple[str, float, float]
 
+# Default for inter-session work-stealing in the session figures; run.py's
+# --steal/--no-steal flags override it. --no-steal reproduces the pre-stealing
+# scheduling behaviour for apples-to-apples trajectory comparisons.
+STEAL = True
+
 
 def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall time in µs."""
@@ -71,11 +76,13 @@ def run_sessions(
     queries_per_session: int = 1,
     arrivals=None,
     priorities=None,
+    steal: bool | None = None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
     ``arrivals``/``priorities`` pass through to the engine so figures can
-    model open-loop (bursty) traffic and mixed priority classes."""
+    model open-loop (bursty) traffic and mixed priority classes. ``steal``
+    defaults to the module-level toggle (run.py --steal/--no-steal)."""
     eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
 
     def mk(s, q):
@@ -88,6 +95,7 @@ def run_sessions(
         queries_per_session=queries_per_session,
         arrivals=arrivals,
         priorities=priorities,
+        steal=STEAL if steal is None else steal,
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep.throughput_modeled(), rep

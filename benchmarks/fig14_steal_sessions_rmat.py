@@ -1,0 +1,56 @@
+"""Fig. 14 (beyond the paper): the work-stealing win under skewed load.
+
+1 heavy PageRank session + 7 short BFS sessions on P=16 — the paper's "few
+large + many small queries" extreme. Without stealing the drained BFS
+sessions leave the pool half idle while the width-capped PageRank grinds at
+its own T_max; with stealing they claim its trailing packages over the victim
+fence and run a second gang. Both variants are always emitted (the run.py
+--steal/--no-steal toggle only affects fig10–13), so BENCH_sessions.json
+carries the comparison.
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import rmat_graph
+
+from .common import Row
+
+SESSIONS = 8
+POOL = 16
+PR_ITERS = 6
+
+
+def _make_mk(graph):
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 8]))
+
+    return mk
+
+
+def run() -> list[Row]:
+    g = rmat_graph(13, seed=3)
+    mk = _make_mk(g)
+    rows: list[Row] = []
+    for label, steal in (("steal", True), ("nosteal", False)):
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
+        t0 = time.perf_counter_ns()
+        rep = eng.run_sessions(
+            mk, sessions=SESSIONS, queries_per_session=1, steal=steal
+        )
+        us = (time.perf_counter_ns() - t0) / 1e3
+        base = f"fig14/skew_mix/sf13/{label}/s{SESSIONS}"
+        rows.append((base, us, rep.throughput_modeled()))
+        rows.append((f"{base}/mean_util", us, rep.mean_utilization()))
+        rows.append((f"{base}/stolen_packages", us, float(rep.total_stolen)))
+        rows.append(
+            (f"{base}/p95_latency_us", us, rep.latency_percentiles()["p95"] / 1e3)
+        )
+    return rows

@@ -1,7 +1,15 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV
 # and, for the concurrent-session figures, writes ``BENCH_sessions.json`` —
 # the machine-readable modeled PEPS/TEPS-vs-session-count trajectory that
-# future PRs diff against.
+# future PRs diff against (benchmarks/check_trend.py gates >10% regressions
+# of the modeled numbers in CI).
+#
+# Usage: python -m benchmarks.run [filter] [--steal|--no-steal]
+#   --steal / --no-steal toggle inter-session work-stealing for the session
+#   figures (fig10-13; default: steal). fig14 always emits both variants.
+#   The committed BENCH_sessions.json trajectory is produced with the
+#   default; use --no-steal for apples-to-apples pre-stealing comparisons,
+#   but do not commit its numbers over the gated baseline.
 from __future__ import annotations
 
 import json
@@ -20,6 +28,7 @@ MODULES = [
     "fig11_bfs_sessions_rmat",
     "fig12_pr_sessions_real",
     "fig13_bfs_sessions_real",
+    "fig14_steal_sessions_rmat",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
@@ -49,7 +58,13 @@ def sessions_json_rows(rows: list[tuple[str, float, float]]) -> list[dict]:
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    if "--steal" in args or "--no-steal" in args:
+        from . import common
+
+        common.STEAL = "--steal" in args
+        args = [a for a in args if a not in ("--steal", "--no-steal")]
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     session_rows: list[dict] = []
     for mod_name in MODULES:

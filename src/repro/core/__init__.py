@@ -40,6 +40,8 @@ from .bounds import ThreadBounds, parallel_beats_sequential, thread_bounds, v_mi
 from .packaging import WorkPackages, make_packages, packages_to_table
 from .autotuner import PreparedIteration, prepare_iteration
 from .scheduler import (
+    STALL_STEP,
+    PackageRun,
     PackageScheduler,
     ScheduleRun,
     ScheduleStep,
@@ -47,6 +49,7 @@ from .scheduler import (
     WorkerPool,
     largest_pow2_leq,
 )
+from .stealing import StealEntry, StealRegistry
 from .session import (
     AdmissionController,
     EngineReport,
@@ -70,8 +73,9 @@ __all__ = [
     "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",
     "WorkPackages", "make_packages", "packages_to_table",
     "PreparedIteration", "prepare_iteration",
-    "PackageScheduler", "ScheduleRun", "ScheduleStep", "ScheduleTrace",
-    "WorkerPool", "largest_pow2_leq",
+    "PackageRun", "PackageScheduler", "ScheduleRun", "ScheduleStep",
+    "ScheduleTrace", "STALL_STEP", "WorkerPool", "largest_pow2_leq",
+    "StealEntry", "StealRegistry",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
     "QueryExecutor", "QueryRecord",
     "CostFeedback",

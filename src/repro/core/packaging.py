@@ -112,10 +112,19 @@ def make_packages(
 
 def packages_to_table(pkgs: WorkPackages, max_packages: int) -> tuple[np.ndarray, np.ndarray]:
     """Fixed-shape (starts, sizes) table (padded with zero-size packages) for
-    device-side consumption — XLA needs static shapes."""
+    device-side consumption — XLA needs static shapes.
+
+    A package list larger than the table is an error: silently truncating
+    would drop frontier ranges on the device (silent work loss)."""
+    if pkgs.n_packages > max_packages:
+        raise ValueError(
+            f"{pkgs.n_packages} packages exceed the device table "
+            f"(max_packages={max_packages}); repackage with fewer packages "
+            "or grow the table"
+        )
     starts = np.zeros(max_packages, dtype=np.int32)
     sizes = np.zeros(max_packages, dtype=np.int32)
-    n = min(pkgs.n_packages, max_packages)
+    n = pkgs.n_packages
     ordered = pkgs.order[:n]
     starts[:n] = pkgs.bounds[:-1][ordered]
     sizes[:n] = np.diff(pkgs.bounds)[ordered]

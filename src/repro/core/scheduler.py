@@ -52,6 +52,14 @@ class WorkerPool:
     behaviour (under load, grants shrink and queries fall back to sequential
     execution).
 
+    Accounting is by *outstanding grants*: ``request`` checks workers out,
+    ``release`` returns them, and ``available`` is derived as
+    ``capacity - outstanding``. A shrink under load therefore becomes debt —
+    ``in_use`` keeps reporting every worker still checked out (possibly above
+    the new capacity) and no new grant is handed out until the debt has
+    drained through releases. Outside a shrink window ``in_use <= capacity``
+    always holds.
+
     ``high_priority_reserve`` workers are withheld from normal-priority
     requests: a request with ``priority >= 1`` may drain the pool completely,
     while ``priority 0`` requests can only draw down to the reserve floor.
@@ -65,39 +73,51 @@ class WorkerPool:
             raise ValueError("high_priority_reserve must be in [0, capacity)")
         self.capacity = int(capacity)
         self.high_priority_reserve = int(high_priority_reserve)
-        self._available = int(capacity)
+        self._outstanding = 0  # grants checked out and not yet returned
         self._lock = threading.Lock()
 
     def request(self, n: int, *, priority: int = 0) -> int:
         """Grant up to n workers (at least 0); non-blocking."""
         with self._lock:
             floor = 0 if priority >= 1 else self.high_priority_reserve
-            grant = max(min(n, self._available - floor), 0)
-            self._available -= grant
+            free = self.capacity - self._outstanding
+            grant = max(min(n, free - floor), 0)
+            self._outstanding += grant
             return grant
 
     def release(self, n: int) -> None:
         with self._lock:
-            self._available = min(self._available + n, self.capacity)
+            self._outstanding = max(self._outstanding - int(n), 0)
 
     @property
     def available(self) -> int:
         with self._lock:
-            return self._available
+            return max(self.capacity - self._outstanding, 0)
 
     @property
     def in_use(self) -> int:
+        """Workers currently checked out. Exceeds ``capacity`` only while a
+        shrink's debt is draining (see :attr:`shrink_debt`)."""
         with self._lock:
-            return self.capacity - self._available
+            return self._outstanding
+
+    @property
+    def shrink_debt(self) -> int:
+        """Grants above the current capacity (only non-zero after a shrink
+        under load); drains to zero as the outstanding grants are released."""
+        with self._lock:
+            return max(self._outstanding - self.capacity, 0)
 
     def resize(self, new_capacity: int) -> None:
-        """Elastic scaling: grow/shrink the machine (node join/loss)."""
+        """Elastic scaling: grow/shrink the machine (node join/loss).
+
+        Outstanding grants are untouched: a shrink below ``in_use`` leaves
+        the overhang as debt that blocks new grants until released, instead
+        of silently minting capacity."""
         if new_capacity < 1:
             raise ValueError("capacity must be >= 1")
         with self._lock:
-            delta = int(new_capacity) - self.capacity
             self.capacity = int(new_capacity)
-            self._available = max(min(self._available + delta, self.capacity), 0)
             # keep the reserve invariant (< capacity) so a shrink can never
             # permanently starve normal-priority requests
             self.high_priority_reserve = min(self.high_priority_reserve, self.capacity - 1)
@@ -106,7 +126,7 @@ class WorkerPool:
 @dataclasses.dataclass
 class PackageRun:
     package: int
-    mode: Literal["parallel", "sequential"]
+    mode: Literal["parallel", "sequential", "stolen"]
     workers: int
 
 
@@ -117,12 +137,16 @@ class ScheduleTrace:
     requested: int
     runs: list[PackageRun] = dataclasses.field(default_factory=list)
     released_early: bool = False
+    # packages ceded to thieves over the victim fence (work-stealing)
+    stolen_packages: int = 0
 
     @property
     def parallel_fraction(self) -> float:
+        """Fraction of packages executed by a multi-worker gang — the
+        victim's own, or a thief's gang running stolen packages."""
         if not self.runs:
             return 0.0
-        return sum(r.mode == "parallel" for r in self.runs) / len(self.runs)
+        return sum(r.workers >= 2 or r.mode == "parallel" for r in self.runs) / len(self.runs)
 
     @property
     def max_workers(self) -> int:
@@ -134,11 +158,18 @@ class ScheduleStep:
     """One executable unit handed out by :class:`ScheduleRun`.
 
     ``batch`` holds the package ids to run now; ``workers`` is the group size
-    (1 for sequential execution)."""
+    (1 for sequential execution). A ``"stalled"`` step carries no work: the
+    run could not check out even one worker, and the caller must wait for a
+    release before calling :meth:`ScheduleRun.next_step` again — executing
+    work without a held worker would oversubscribe the pool."""
 
     batch: np.ndarray
-    mode: Literal["parallel", "sequential"]
+    mode: Literal["parallel", "sequential", "stalled"]
     workers: int
+
+
+#: Sentinel step returned while the pool cannot spare a single worker.
+STALL_STEP = ScheduleStep(batch=np.empty(0, dtype=np.int64), mode="stalled", workers=0)
 
 
 def largest_pow2_leq(n: int) -> int:
@@ -154,7 +185,21 @@ class ScheduleRun:
     re-requests up to T_max first (grant re-evaluation), so workers freed by
     other sessions while the previous step executed are picked up. The caller
     must :meth:`close` the run (release the grant) when done — ``next_step``
-    returning ``None`` means all packages have been handed out."""
+    returning ``None`` means all packages have been handed out.
+
+    A step is only handed out while the run holds at least one granted
+    worker; if the pool cannot spare even one, :data:`STALL_STEP` is returned
+    and the caller must wait for a release (the discrete-event loop parks the
+    session). This keeps ``in_use <= capacity``: no work ever executes
+    without occupying a worker.
+
+    With ``stealable=True`` the run additionally maintains a *victim fence*
+    for inter-session work-stealing: undispatched packages live in
+    ``[cursor, fence)``, a thief claims trailing packages by moving the fence
+    down (:meth:`donate`), and the sequential tail is dispatched one package
+    per step (instead of as one batch) so the remainder stays claimable while
+    the victim grinds. ``next_step`` never crosses the fence, so a claim can
+    never race the victim's own dispatch."""
 
     def __init__(
         self,
@@ -164,13 +209,18 @@ class ScheduleRun:
         *,
         seq_package_limit: int = 4,
         priority: int = 0,
+        stealable: bool = False,
     ):
         self.pool = pool
         self.bounds = bounds
         self.seq_package_limit = seq_package_limit
         self.priority = priority
+        self.stealable = stealable
         self._order = packages.order[: packages.n_packages]
         self._cursor = 0
+        self._fence = len(self._order)  # thieves claim from the tail down
+        self._donations = 0             # claimed batches not yet executed
+        self._steal_lock = threading.Lock()
         self._seq_done = 0
         self._closed = False
         # preparation already decided sequential → take one worker at most
@@ -181,17 +231,90 @@ class ScheduleRun:
 
     @property
     def done(self) -> bool:
-        return self._cursor >= len(self._order)
+        """All packages dispatched or donated (donations may still be
+        executing on the thief — see :attr:`outstanding_donations`)."""
+        return self._cursor >= self._fence
+
+    @property
+    def outstanding_donations(self) -> int:
+        """Donated batches a thief has claimed but not yet finished; the
+        iteration must not be accounted until this returns to zero."""
+        return self._donations
+
+    @property
+    def grinding(self) -> bool:
+        """True while the run is committed to (or stuck in) sequential
+        execution — the saturation state the paper's protocol shrinks into."""
+        return self._simple_seq or self._seq_done > 0 or self.trace.released_early
+
+    @property
+    def width_capped(self) -> bool:
+        """True when the run already holds its full T_max — it cannot absorb
+        more workers itself, so only a second gang can use idle capacity."""
+        return self._granted >= max(self.bounds.t_max, 1)
+
+    @property
+    def stealable_backlog(self) -> int:
+        """Packages a thief may claim right now. Backlog is published while
+        the run grinds sequentially (a thief halves the grind) or while it is
+        width-capped at T_max (a thief's second gang uses workers the victim
+        is not allowed to take) — a parallel run that could still widen keeps
+        its packages, since its own grant re-evaluation absorbs freed workers
+        faster than a steal round-trip."""
+        if not self.stealable or self._closed:
+            return 0
+        if not (self.grinding or self.width_capped):
+            return 0
+        return max(self._fence - self._cursor, 0)
+
+    def donate(self, k: int, *, workers: int = 1) -> np.ndarray:
+        """Thief-side claim: atomically cede up to ``k`` trailing undispatched
+        packages over the fence. Returns the claimed package ids (possibly
+        empty). ``workers`` is recorded in the trace for the stolen runs."""
+        with self._steal_lock:
+            k = min(int(k), self.stealable_backlog)
+            if k <= 0:
+                return np.empty(0, dtype=np.int64)
+            self._fence -= k
+            batch = self._order[self._fence : self._fence + k]
+            self._donations += 1
+            self.trace.stolen_packages += k
+            self.trace.runs.extend(PackageRun(int(p), "stolen", workers) for p in batch)
+            return batch
+
+    def donation_done(self) -> None:
+        """Thief-side completion signal for one claimed batch."""
+        with self._steal_lock:
+            self._donations = max(self._donations - 1, 0)
+
+    def _seq_tail(self) -> ScheduleStep:
+        """Dispatch the committed-sequential remainder: the whole tail at
+        once normally, or one package per step when stealable (so the tail
+        stays claimable between steps)."""
+        end = min(self._cursor + 1, self._fence) if self.stealable else self._fence
+        batch = self._order[self._cursor : end]
+        self._cursor = end
+        self.trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in batch)
+        return ScheduleStep(batch, "sequential", 1)
 
     def next_step(self) -> ScheduleStep | None:
+        # the fence lock makes dispatch atomic against a concurrent donate():
+        # cursor and fence can never cross mid-claim, so no package is ever
+        # handed out twice (the DES is single-threaded, but the run keeps the
+        # WorkerPool's thread-safety contract)
+        with self._steal_lock:
+            return self._next_step_locked()
+
+    def _next_step_locked(self) -> ScheduleStep | None:
         if self.done:
             return None
-        order = self._order
-        if self._simple_seq:
-            batch = order[self._cursor :]
-            self._cursor = len(order)
-            self.trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in batch)
-            return ScheduleStep(batch, "sequential", 1)
+        # pool integrity: a step may never execute without holding a worker
+        if self._granted <= 0:
+            self._granted = self.pool.request(1, priority=self.priority)
+            if self._granted <= 0:
+                return STALL_STEP
+        if self._simple_seq or self.trace.released_early:
+            return self._seq_tail()
 
         # §4.3 step 4: re-evaluate the grant — workers may have been freed
         # (or arrived) while the previous package executed.
@@ -203,18 +326,25 @@ class ScheduleRun:
         if usable >= max(self.bounds.t_min, 2):
             # parallel phase: hand the remaining packages to the group; the
             # non-power-of-2 surplus is unusable — return it to the pool now
-            # rather than holding it for the whole step
+            # rather than holding it for the whole step. A stealable run
+            # dispatches one package per worker per step so the tail stays
+            # behind the fence (claimable by a thief's second gang) and the
+            # grant keeps re-evaluating between chunks. Recovering to
+            # parallel ends any sequential grind — the run is no longer
+            # ``grinding`` and thieves treat it as full-width again.
+            self._seq_done = 0
             if self._granted > usable:
                 self.pool.release(self._granted - usable)
                 self._granted = usable
-            batch = order[self._cursor :]
-            self._cursor = len(order)
+            end = min(self._cursor + usable, self._fence) if self.stealable else self._fence
+            batch = self._order[self._cursor : end]
+            self._cursor = end
             self.trace.runs.extend(PackageRun(int(p), "parallel", usable) for p in batch)
             return ScheduleStep(batch, "parallel", usable)
         if self._seq_done < self.seq_package_limit:
             # below the parallel boundary: one worker runs one package, the
             # rest wait; re-evaluate on the next call
-            batch = order[self._cursor : self._cursor + 1]
+            batch = self._order[self._cursor : self._cursor + 1]
             self._cursor += 1
             self._seq_done += 1
             self.trace.runs.append(PackageRun(int(batch[0]), "sequential", 1))
@@ -224,11 +354,8 @@ class ScheduleRun:
         if self._granted > 1:
             self.pool.release(self._granted - 1)
             self._granted = 1
-        batch = order[self._cursor :]
-        self._cursor = len(order)
-        self.trace.runs.extend(PackageRun(int(p), "sequential", 1) for p in batch)
         self.trace.released_early = True
-        return ScheduleStep(batch, "sequential", 1)
+        return self._seq_tail()
 
     def close(self) -> None:
         """Return the held grant to the pool (idempotent)."""
@@ -252,7 +379,9 @@ class PackageScheduler:
         self.seq_package_limit = seq_package_limit
         self.priority = priority
 
-    def begin(self, packages: WorkPackages, bounds: ThreadBounds) -> ScheduleRun:
+    def begin(
+        self, packages: WorkPackages, bounds: ThreadBounds, *, stealable: bool = False
+    ) -> ScheduleRun:
         """Start a stepwise run (requests the initial grant now)."""
         return ScheduleRun(
             self.pool,
@@ -260,6 +389,7 @@ class PackageScheduler:
             bounds,
             seq_package_limit=self.seq_package_limit,
             priority=self.priority,
+            stealable=stealable,
         )
 
     def run(
@@ -278,6 +408,13 @@ class PackageScheduler:
         srun = self.begin(packages, bounds)
         try:
             while (step := srun.next_step()) is not None:
+                if step.mode == "stalled":
+                    # the synchronous path has no event loop to wait in — a
+                    # fully drained pool here is a caller bug, not a state to
+                    # execute through with phantom workers
+                    raise RuntimeError(
+                        "worker pool exhausted: a schedule step must hold >= 1 worker"
+                    )
                 if step.mode == "parallel":
                     execute_parallel(step.batch, step.workers)
                 else:

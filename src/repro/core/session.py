@@ -55,6 +55,12 @@ from .scheduler import (
     WorkerPool,
     largest_pow2_leq,
 )
+from .stealing import StealRegistry
+
+# packages a thief claims per granted worker in one steal chunk; small enough
+# that the victim's own grant re-evaluation keeps mattering, large enough to
+# amortize the claim
+STEAL_CHUNK = 4
 
 
 class QueryExecutor(Protocol):
@@ -87,6 +93,8 @@ class QueryRecord:
     submitted_ns: float = 0.0     # modeled clock: query entered the system
     started_ns: float = 0.0       # modeled clock: first iteration began
     finished_ns: float = 0.0      # modeled clock: query completed
+    # packages of this query executed by thief sessions (work-stealing)
+    stolen_packages: int = 0
     traces: list[ScheduleTrace] = dataclasses.field(default_factory=list)
 
     @property
@@ -113,6 +121,10 @@ class EngineReport:
     utilization: list[tuple[float, int]] = dataclasses.field(default_factory=list)
     # (modeled time_ns, sessions in flight) samples, one per admission change
     inflight: list[tuple[float, int]] = dataclasses.field(default_factory=list)
+    # (modeled time_ns, thief session, victim session, packages) per steal
+    steal_events: list[tuple[float, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def total_edges(self) -> float:
@@ -155,6 +167,27 @@ class EngineReport:
     @property
     def max_inflight(self) -> int:
         return max((n for _, n in self.inflight), default=0)
+
+    # -------------------------------------------------- work-stealing
+    @property
+    def total_stolen(self) -> int:
+        """Packages executed by a session other than their query's own."""
+        return sum(k for _, _, _, k in self.steal_events)
+
+    def steal_timeline(self) -> list[tuple[float, int]]:
+        """Cumulative stolen packages over the modeled clock."""
+        out: list[tuple[float, int]] = []
+        total = 0
+        for t, _, _, k in self.steal_events:
+            total += k
+            out.append((t, total))
+        return out
+
+    def steal_rate(self) -> float:
+        """Stolen packages per modeled second across the whole run."""
+        if self.makespan_modeled_ns <= 0:
+            return 0.0
+        return self.total_stolen / (self.makespan_modeled_ns * 1e-9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,18 +244,41 @@ class AdmissionController:
             return True
         return False
 
+    @property
+    def has_waiters(self) -> bool:
+        return bool(self._waiting)
+
     def enqueue(self, session: Any) -> None:
         prio = int(getattr(session, "priority", 0))
         heapq.heappush(self._waiting, (-prio, self._enqueued, session))
         self._enqueued += 1
 
-    def release(self, pool: WorkerPool) -> Any | None:
-        """A session finished: admit (and return) the next waiter, if any."""
-        self.inflight = max(self.inflight - 1, 0)
-        if self._waiting and self.inflight < self.cap(pool):
+    def submit(self, session: Any, pool: WorkerPool) -> list[Any]:
+        """Arrival path: strictly priority-FIFO. The arrival queues behind
+        already-waiting sessions of >= priority instead of jumping the line
+        (calling ``try_admit`` directly admitted a fresh priority-0 arrival
+        ahead of a waiting high-priority session). Returns every session
+        admitted now — possibly including the arrival itself."""
+        self.enqueue(session)
+        return self.drain(pool)
+
+    def drain(self, pool: WorkerPool) -> list[Any]:
+        """Admit eligible waiters up to ``cap(pool)`` in priority-FIFO order.
+        Call after anything that raises the cap (a ``pool.resize`` grow, a
+        ``max_inflight`` change) — waiters must not stay stranded until some
+        unrelated session happens to finish."""
+        admitted: list[Any] = []
+        cap = self.cap(pool)
+        while self._waiting and self.inflight < cap:
             self.inflight += 1
-            return heapq.heappop(self._waiting)[2]
-        return None
+            admitted.append(heapq.heappop(self._waiting)[2])
+        return admitted
+
+    def release(self, pool: WorkerPool) -> list[Any]:
+        """A session finished: drain every now-eligible waiter (not just one —
+        a grown pool or raised ``max_inflight`` may have room for several)."""
+        self.inflight = max(self.inflight - 1, 0)
+        return self.drain(pool)
 
     def reset(self) -> None:
         """Drop all admission state (run teardown / crash recovery)."""
@@ -242,6 +298,30 @@ class _SessionState:
     srun: ScheduleRun | None = None
     iter_modeled_ns: float = 0.0
     iter_measured_ns: float = 0.0
+    # work-stealing: identity of the graph this session last executed on
+    # (locality preference persists after the session drains), the steal job
+    # currently in flight, and whether the session is waiting for donated
+    # packages to return before accounting its iteration
+    graph_key: Any = None
+    steal: "_StealJob | None" = None
+    joining: bool = False
+
+
+@dataclasses.dataclass
+class _StealJob:
+    """One in-flight stolen batch: a thief executing victim packages.
+
+    Victim-side objects are captured at claim time — the victim cannot move
+    to its next iteration/query until the donation returns, but capturing
+    makes that independence explicit."""
+
+    victim: _SessionState
+    run: ScheduleRun
+    record: QueryRecord | None
+    batch: np.ndarray
+    workers: int
+    modeled_ns: float
+    measured_ns: float
 
 
 class MultiQueryEngine:
@@ -346,7 +426,9 @@ class MultiQueryEngine:
         record.modeled_ns += modeled_ns
         record.measured_ns += measured_ns
         record.iterations += 1
-        par_mode = any(r.mode == "parallel" for r in trace.runs)
+        # an iteration counts as parallel when any gang ran multi-worker —
+        # including a thief's gang executing stolen packages
+        par_mode = any(r.mode == "parallel" or r.workers >= 2 for r in trace.runs)
         if par_mode:
             record.parallel_iterations += 1
         record.traces.append(trace)
@@ -367,6 +449,12 @@ class MultiQueryEngine:
         measured = 0.0
         try:
             while (step := srun.next_step()) is not None:
+                if step.mode == "stalled":
+                    # no event loop to wait in: a synchronous iteration on a
+                    # drained pool cannot proceed without phantom workers
+                    raise RuntimeError(
+                        "worker pool exhausted: a schedule step must hold >= 1 worker"
+                    )
                 measured += self._execute_step(executor, prep, step)
                 modeled += self._step_cost_ns(executor.desc, prep, step)
         finally:
@@ -404,6 +492,7 @@ class MultiQueryEngine:
         queries_per_session: int,
         priorities: Sequence[int] | Callable[[int], int] | None = None,
         arrivals: PoissonArrivals | Sequence[float] | None = None,
+        steal: bool = False,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
@@ -415,7 +504,17 @@ class MultiQueryEngine:
         for its modeled duration, after which the grant is re-evaluated — so
         when many sessions are in flight, grants shrink below T_min and
         queries selectively fall back to sequential execution, with
-        ``seq_package_limit`` / early release honoured mid-iteration."""
+        ``seq_package_limit`` / early release honoured mid-iteration.
+
+        With ``steal=True`` sessions also cooperate across query boundaries:
+        every iteration's :class:`~.scheduler.ScheduleRun` publishes its
+        undispatched backlog in a :class:`~.stealing.StealRegistry`, and a
+        session that drained its own queries (or sits between queries while
+        the pool has spare workers) claims trailing packages from the most
+        attractive victim — same-graph first, then priority, then backlog —
+        and executes them through the victim's executor. The victim's
+        iteration is accounted only after all donations return, so modeled
+        time, edges, and convergence stay exact."""
         if priorities is None:
             prio = [0] * sessions
         elif callable(priorities):
@@ -444,8 +543,10 @@ class MultiQueryEngine:
         )
         t_start = time.perf_counter_ns()
         states = [_SessionState(sid=s, priority=prio[s]) for s in range(sessions)]
+        registry: StealRegistry | None = StealRegistry() if steal else None
+        stalled: list[_SessionState] = []
 
-        EV_ARRIVE, EV_STEP = 0, 1
+        EV_ARRIVE, EV_STEP, EV_STEAL = 0, 1, 2
         heap: list[tuple[float, int, int, _SessionState]] = []
         seq = 0
         clock = 0.0
@@ -468,12 +569,30 @@ class MultiQueryEngine:
             if not report.inflight or report.inflight[-1][1] != n:
                 report.inflight.append((t, n))
 
+        def _wake_stalled(t: float) -> None:
+            """Re-schedule parked sessions that could now get a worker (their
+            priority class sees capacity above the reserve floor)."""
+            if not stalled:
+                return
+            avail = self.pool.available
+            if avail <= 0:
+                return
+            still: list[_SessionState] = []
+            for s in stalled:
+                floor = 0 if s.priority >= 1 else self.pool.high_priority_reserve
+                if avail > floor:
+                    _push(t, EV_STEP, s)
+                else:
+                    still.append(s)
+            stalled[:] = still
+
         def _begin_query(st: _SessionState, t: float) -> bool:
             """Move the session to its next query; False → session exhausted."""
             if st.next_query >= queries_per_session:
                 return False
             st.executor = make_executor(st.sid, st.next_query)
             st.executor.start()
+            st.graph_key = id(getattr(st.executor, "graph", None))
             st.record = QueryRecord(
                 session=st.sid,
                 query=st.next_query,
@@ -495,17 +614,100 @@ class MultiQueryEngine:
                 st.record.finished_ns = t
             st.executor = None
 
+        def _try_steal(thief: _SessionState, t: float) -> bool:
+            """Claim a batch from the best victim and start executing it.
+            Returns True when a steal job was launched (EV_STEAL pushed).
+            Victims are tried in rank order: the top pick may be unusable
+            right now (its priority class sees no workers past the reserve
+            floor, or its backlog vanished) without shadowing the next one."""
+            if registry is None or not len(registry):
+                return False
+            tried: set = set()
+            while True:
+                entry = registry.pick_victim(
+                    thief_key=thief.sid, graph_key=thief.graph_key, exclude=tried
+                )
+                if entry is None:
+                    return False
+                tried.add(entry.key)
+                victim: _SessionState = entry.payload
+                # the stolen packages belong to the victim's query class, so
+                # the request may use the victim's priority (its reserve slice)
+                got = self.pool.request(
+                    max(entry.run.bounds.t_max, 1),
+                    priority=max(thief.priority, entry.priority),
+                )
+                usable = largest_pow2_leq(got)
+                if usable < 1:
+                    if got:
+                        self.pool.release(got)
+                    continue
+                if got > usable:
+                    self.pool.release(got - usable)
+                # a grinding victim moves at 1-wide, so take a few packages
+                # per thief worker; a width-capped parallel victim still
+                # moves at T_max, so take only one per worker to stay
+                # load-balanced
+                chunk = usable * (STEAL_CHUNK if entry.run.grinding else 1)
+                batch = entry.run.donate(chunk, workers=usable)
+                if batch.size == 0:
+                    self.pool.release(usable)
+                    continue
+                break
+            assert victim.executor is not None and victim.prep is not None
+            step = ScheduleStep(
+                batch, "parallel" if usable >= 2 else "sequential", usable
+            )
+            measured = self._execute_step(victim.executor, victim.prep, step)
+            step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
+            thief.steal = _StealJob(
+                victim=victim,
+                run=entry.run,
+                record=victim.record,
+                batch=batch,
+                workers=usable,
+                modeled_ns=step_ns,
+                measured_ns=measured,
+            )
+            report.steal_events.append((t, thief.sid, victim.sid, int(batch.size)))
+            _sample(t)
+            _push(t + step_ns, EV_STEAL, thief)
+            return True
+
         try:
             while heap:
                 t, _, kind, st = heapq.heappop(heap)
                 clock = max(clock, t)
 
                 if kind == EV_ARRIVE:
-                    if self.admission.try_admit(self.pool):
-                        _sample_inflight(t)
-                        _push(t, EV_STEP, st)
-                    else:
-                        self.admission.enqueue(st)
+                    # strict priority-FIFO: the arrival queues behind waiting
+                    # sessions of >= priority instead of being admitted
+                    # directly past them
+                    for adm in self.admission.submit(st, self.pool):
+                        _push(t, EV_STEP, adm)
+                    _sample_inflight(t)
+                    continue
+
+                if kind == EV_STEAL:
+                    # a thief finished executing a stolen batch
+                    job = st.steal
+                    st.steal = None
+                    assert job is not None
+                    job.run.donation_done()
+                    victim = job.victim
+                    # the stolen work is the victim's: its busy time and
+                    # package count book into the victim's iteration/record
+                    victim.iter_modeled_ns += job.modeled_ns
+                    victim.iter_measured_ns += job.measured_ns
+                    if job.record is not None:
+                        job.record.stolen_packages += int(job.batch.size)
+                    self.pool.release(job.workers)
+                    _sample(t)
+                    if victim.joining and job.run.outstanding_donations == 0:
+                        victim.joining = False
+                        _push(t, EV_STEP, victim)
+                    _push(t, EV_STEP, st)
+                    _wake_stalled(t)
                     continue
 
                 # EV_STEP: advance one session by one schedule step
@@ -514,21 +716,46 @@ class MultiQueryEngine:
                     while True:
                         if st.executor is None:
                             if not _begin_query(st, t):
-                                # session drained → hand the slot to a waiter
-                                nxt = self.admission.release(self.pool)
-                                _sample_inflight(t)
-                                if nxt is not None:
+                                # session drained: help a backlogged victim
+                                # before giving the slot up — but never while
+                                # an admitted-work waiter needs the slot
+                                if (
+                                    steal
+                                    and not self.admission.has_waiters
+                                    and _try_steal(st, t)
+                                ):
+                                    st = None
+                                    break
+                                for nxt in self.admission.release(self.pool):
                                     _push(t, EV_STEP, nxt)
+                                _sample_inflight(t)
                                 st = None
                                 break
                         ex = st.executor
                         assert ex is not None
+                        # idle between queries: lend spare machine capacity
+                        # to a backlogged victim before starting the next
+                        # query — but only with queries of our own left; a
+                        # drained session must fall through to the drained
+                        # branch, whose waiter guard hands the admission slot
+                        # over instead of stealing while others queue
+                        can_mid_steal = (
+                            steal
+                            and st.next_query < queries_per_session
+                            and self.pool.available >= 2
+                        )
                         if ex.finished():
                             _finish_query(st, t)
+                            if can_mid_steal and _try_steal(st, t):
+                                st = None
+                                break
                             continue
                         fsize, fdeg, unvisited = ex.frontier()
                         if fsize <= 0:
                             _finish_query(st, t)
+                            if can_mid_steal and _try_steal(st, t):
+                                st = None
+                                break
                             continue
                         break
                     if st is None:
@@ -544,15 +771,42 @@ class MultiQueryEngine:
                         seq_package_limit=self.seq_package_limit,
                         priority=st.priority,
                     )
-                    st.srun = scheduler.begin(st.prep.packages, bounds)
+                    # only parallel-capable runs are published for stealing:
+                    # a run the cost model (or baseline policy) decided to
+                    # execute sequentially carries tiny iterations, and
+                    # fencing it would fragment its tail into per-package
+                    # dispatches for no possible gain
+                    st.srun = scheduler.begin(
+                        st.prep.packages, bounds, stealable=steal and bounds.parallel
+                    )
+                    if registry is not None and st.srun.stealable:
+                        registry.publish(
+                            st.sid,
+                            st.srun,
+                            priority=st.priority,
+                            graph_key=st.graph_key,
+                            payload=st,
+                        )
                     st.iter_modeled_ns = 0.0
                     st.iter_measured_ns = 0.0
 
                 step = st.srun.next_step()
                 if step is None:
-                    # iteration complete: release the grant, book it, loop on
-                    trace = st.srun.trace
+                    # all packages dispatched: release the grant right away —
+                    # donated batches still executing on thieves run on the
+                    # *thief's* workers, so holding the victim's would idle
+                    # them for the whole join
+                    if registry is not None:
+                        registry.withdraw(st.sid)
                     st.srun.close()
+                    if st.srun.outstanding_donations > 0:
+                        # wait for the donations to return before accounting
+                        # the iteration (the thief's EV_STEAL re-pushes us)
+                        _sample(t)
+                        _wake_stalled(t)
+                        st.joining = True
+                        continue
+                    trace = st.srun.trace
                     st.srun = None
                     assert st.executor is not None and st.record is not None
                     self._account_iteration(
@@ -560,6 +814,13 @@ class MultiQueryEngine:
                     )
                     _sample(t)
                     _push(t, EV_STEP, st)
+                    _wake_stalled(t)
+                    continue
+
+                if step.mode == "stalled":
+                    # pool integrity: no worker, no execution — park until a
+                    # release frees capacity for this session's class
+                    stalled.append(st)
                     continue
 
                 assert st.executor is not None and st.prep is not None
@@ -568,7 +829,14 @@ class MultiQueryEngine:
                 st.iter_modeled_ns += step_ns
                 _sample(t)
                 _push(t + step_ns, EV_STEP, st)
+                # grant re-evaluation inside next_step may have released
+                # surplus workers (parallel rounding, early release)
+                _wake_stalled(t)
 
+            if stalled:
+                raise RuntimeError(
+                    f"{len(stalled)} session(s) deadlocked waiting for workers"
+                )
         finally:
             # an exception in executor code must not leak held grants or
             # admission slots on the shared engine state
@@ -576,6 +844,9 @@ class MultiQueryEngine:
                 if s.srun is not None:
                     s.srun.close()
                     s.srun = None
+                if s.steal is not None:
+                    self.pool.release(s.steal.workers)
+                    s.steal = None
             self.admission.reset()
 
         _sample(clock)

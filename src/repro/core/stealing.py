@@ -1,0 +1,125 @@
+"""Inter-session work-stealing (ROADMAP top item).
+
+The §4.3 protocol only ever *shrinks* a saturated query — sequential
+fallback, early release — but never lets idle capacity absorb another
+session's backlog. Under skewed concurrent load (one heavy PageRank, many
+short BFS) that leaves granted workers idle while a saturated session grinds
+its remaining packages one by one. Q-Graph (arXiv:1805.11900) and the
+two-level scheduler of arXiv:1806.00777 both redistribute work *between*
+concurrent graph queries to keep utilization high; :class:`StealRegistry` is
+the decentralized analogue for this runtime.
+
+Protocol:
+
+  * a :class:`~.scheduler.ScheduleRun` started with ``stealable=True``
+    publishes itself here for the duration of its iteration; its
+    *stealable backlog* is the undispatched package range behind the victim
+    fence, and is only non-zero once the run is grinding in (or committed
+    to) sequential execution — a healthy parallel run keeps its packages;
+  * a session with idle capacity (drained of its own queries, or between
+    queries while the pool has spare workers) picks a victim and claims
+    trailing packages via :meth:`~.scheduler.ScheduleRun.donate`, which moves
+    the fence down atomically so the claim can never race the victim's own
+    ``next_step`` dispatch;
+  * the thief executes the claimed packages through the *victim's* executor
+    and signals :meth:`~.scheduler.ScheduleRun.donation_done`; the victim's
+    iteration is not accounted until every donation has returned.
+
+Victim selection is locality- and priority-aware: prefer victims running on
+the thief's graph (the Q-Graph co-location argument — the thief's devices
+already hold that graph's arrays), then higher-priority victims, then the
+largest backlog. Ties keep the earliest-published victim, so selection is
+deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Iterator
+
+from .scheduler import ScheduleRun
+
+
+@dataclasses.dataclass
+class StealEntry:
+    """One published victim: a session's active stealable run."""
+
+    key: Hashable              # victim session id
+    run: ScheduleRun
+    priority: int = 0
+    graph_key: Hashable = None  # identity of the graph the run traverses
+    payload: Any = None         # opaque engine-side state (session record)
+
+    @property
+    def backlog(self) -> int:
+        return self.run.stealable_backlog
+
+
+class StealRegistry:
+    """Where active runs publish their undispatched package ranges.
+
+    Deliberately decentralized (like the §4.3 scheduler itself): the registry
+    holds no scheduling logic beyond victim ranking — fences and donation
+    accounting live on the runs, so no central component needs to understand
+    query internals."""
+
+    def __init__(self) -> None:
+        self._entries: dict[Hashable, StealEntry] = {}
+
+    def publish(
+        self,
+        key: Hashable,
+        run: ScheduleRun,
+        *,
+        priority: int = 0,
+        graph_key: Hashable = None,
+        payload: Any = None,
+    ) -> StealEntry:
+        entry = StealEntry(
+            key=key, run=run, priority=priority, graph_key=graph_key, payload=payload
+        )
+        self._entries[key] = entry
+        return entry
+
+    def withdraw(self, key: Hashable) -> None:
+        self._entries.pop(key, None)
+
+    def entry(self, key: Hashable) -> StealEntry | None:
+        return self._entries.get(key)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self) -> Iterator[StealEntry]:
+        return iter(self._entries.values())
+
+    def total_backlog(self) -> int:
+        return sum(e.backlog for e in self._entries.values())
+
+    def pick_victim(
+        self,
+        *,
+        thief_key: Hashable = None,
+        graph_key: Hashable = None,
+        min_backlog: int = 1,
+        exclude: "set[Hashable] | None" = None,
+    ) -> StealEntry | None:
+        """Rank victims: same-graph first (locality), then priority (help the
+        latency-sensitive query first), then the most backlogged. Returns
+        ``None`` when nothing claimable is published. ``exclude`` skips keys
+        a thief already tried and found unusable this round."""
+        best: StealEntry | None = None
+        best_rank: tuple[bool, int, int] | None = None
+        for e in self._entries.values():
+            if e.key == thief_key or (exclude is not None and e.key in exclude):
+                continue
+            backlog = e.backlog
+            if backlog < min_backlog:
+                continue
+            rank = (
+                graph_key is not None and e.graph_key == graph_key,
+                e.priority,
+                backlog,
+            )
+            if best_rank is None or rank > best_rank:
+                best, best_rank = e, rank
+        return best

@@ -60,10 +60,15 @@ def test_single_session_throughput_matches_run_query(medium_rmat):
 # ---------------- full §4.3 protocol under saturation ----------------
 
 def test_saturated_pool_shows_fallback_and_early_release(medium_rmat):
-    """16 sessions on a 4-worker pool: session traces must contain
+    """16 sessions on a 5-worker pool: session traces must contain
     sequential-fallback package runs and early releases — the §4.3 protocol
-    the old one-shot grant path never reached."""
-    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    the old one-shot grant path never reached.
+
+    The pool is deliberately non-power-of-2: fallback needs *partial* grants
+    (0 < usable < T_min). Since the zero-grant fix, a session granted nothing
+    stalls instead of phantom-grinding, so on a power-of-2 pool the freed
+    workers always arrive in parallel-sized chunks and fallback never fires."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=5, policy="scheduler")
     rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=16, queries_per_session=1)
 
     traces = [tr for r in rep.records for tr in r.traces]
@@ -104,9 +109,9 @@ def test_admission_waiters_pop_by_priority():
     ctrl.enqueue(low_a)
     ctrl.enqueue(low_b)
     ctrl.enqueue(high)
-    assert ctrl.release(pool) is high
-    assert ctrl.release(pool) is low_a  # FIFO within a class
-    assert ctrl.release(pool) is low_b
+    assert ctrl.release(pool) == [high]
+    assert ctrl.release(pool) == [low_a]  # FIFO within a class
+    assert ctrl.release(pool) == [low_b]
 
 
 def test_resize_clamps_priority_reserve():
@@ -116,6 +121,123 @@ def test_resize_clamps_priority_reserve():
     assert pool.request(2, priority=0) >= 1  # normals not starved after shrink
     with pytest.raises(ValueError):
         pool.resize(0)
+
+
+# ---------------- pool / admission accounting regressions (ISSUE 2) ----------------
+
+def test_arrival_queues_behind_waiting_higher_priority():
+    """Regression: an arriving priority-0 session must not be admitted ahead
+    of a higher-priority session already waiting. The pre-fix engine called
+    ``try_admit`` directly on arrival, so whenever free slots coexisted with
+    waiters (e.g. after a pool grow), the newcomer jumped the line."""
+    from types import SimpleNamespace
+
+    ctrl = AdmissionController()
+    pool = WorkerPool(2)
+    assert ctrl.try_admit(pool) and ctrl.try_admit(pool)  # cap=2 full
+    high = SimpleNamespace(priority=1)
+    ctrl.enqueue(high)
+    pool.resize(6)  # cap grows to 6; `high` is stranded until something drains
+    low = SimpleNamespace(priority=0)
+    admitted = ctrl.submit(low, pool)
+    assert admitted[0] is high  # the waiter goes first
+    assert low in admitted      # room for both here — but strictly after
+
+
+def test_release_drains_all_eligible_waiters():
+    """Regression: ``release`` admitted at most one waiter, so when the cap
+    rose by more than one (pool grow / raised max_inflight), eligible waiters
+    stayed stranded until unrelated sessions finished."""
+    from types import SimpleNamespace
+
+    ctrl = AdmissionController()
+    pool = WorkerPool(2)
+    assert ctrl.try_admit(pool) and ctrl.try_admit(pool)
+    waiters = [SimpleNamespace(priority=0) for _ in range(3)]
+    for w in waiters:
+        ctrl.enqueue(w)
+    pool.resize(8)  # cap is now 8: all three waiters are eligible
+    admitted = ctrl.release(pool)
+    assert admitted == waiters  # pre-fix: a single waiter
+    assert ctrl.inflight == 4
+    assert not ctrl.has_waiters
+
+
+def test_zero_grant_step_stalls_instead_of_phantom_execution():
+    """Regression: a run granted zero workers dispatched sequential steps
+    with ``workers=1`` anyway, so under saturation work proceeded while
+    occupying no worker — oversubscribing the pool and undercounting
+    utilization. A step must hold >= 1 granted worker; with none available
+    the run reports a stall for the event loop to wait out."""
+    from repro.core import PackageScheduler, ThreadBounds, make_packages
+
+    pool = WorkerPool(2)
+    hold = pool.request(2)  # drained by other queries
+    b = ThreadBounds(
+        t_min=2, t_max=2, n_packages=4, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+    pkgs = make_packages(np.full(100, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool).begin(pkgs, b)
+    step = srun.next_step()
+    assert step is not None and step.mode == "stalled"
+    assert step.workers == 0 and step.batch.size == 0
+    assert pool.in_use <= pool.capacity
+    assert not srun.done  # nothing was handed out
+    pool.release(hold)
+    step = srun.next_step()  # worker available again → real execution resumes
+    assert step.mode in ("parallel", "sequential") and step.workers >= 1
+    assert pool.in_use >= step.workers  # the step holds its grant
+    srun.close()
+    assert pool.available == pool.capacity
+
+
+def test_sync_run_on_drained_pool_raises():
+    """The synchronous path has no event loop to park in — executing through
+    a stall with phantom workers is the bug; it must raise instead."""
+    from repro.core import PackageScheduler, ThreadBounds, make_packages
+
+    pool = WorkerPool(2)
+    pool.request(2)
+    b = ThreadBounds(
+        t_min=2, t_max=2, n_packages=4, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+    pkgs = make_packages(np.full(100, 4), b, variance_ratio=1.0)
+    with pytest.raises(RuntimeError, match="hold >= 1 worker"):
+        PackageScheduler(pool).run(pkgs, b, lambda *a: None, lambda *a: None)
+
+
+def test_stalled_sessions_complete_without_oversubscription(medium_rmat):
+    """Engine-level: on a tiny pool every session completes (stall/wake is
+    live) and every executed package run held at least one worker."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep = eng.run_sessions(_mk_pr(medium_rmat), sessions=8, queries_per_session=1)
+    assert len(rep.records) == 8
+    assert all(r.finished_ns > 0 for r in rep.records)
+    runs = [run for r in rep.records for tr in r.traces for run in tr.runs]
+    assert runs and all(run.workers >= 1 for run in runs)
+    assert all(0 <= u <= 2 for _, u in rep.utilization)
+    assert eng.pool.available == eng.pool.capacity
+
+
+def test_resize_shrink_keeps_outstanding_grant_debt():
+    """Regression: shrinking below ``in_use`` clamped availability and then
+    let ``release`` mint capacity against the clamp, while ``in_use``
+    under-reported the workers actually checked out."""
+    pool = WorkerPool(8)
+    assert pool.request(6) == 6
+    pool.resize(4)
+    assert pool.in_use == 6        # truthful: 6 are still checked out (was: 4)
+    assert pool.shrink_debt == 2
+    assert pool.available == 0
+    assert pool.request(1) == 0    # debt blocks new grants
+    pool.release(3)
+    assert pool.in_use == 3 and pool.shrink_debt == 0
+    assert pool.available == 1     # was: 3 — capacity minted out of thin air
+    assert pool.request(2) == 1    # only the real remainder is grantable
+    pool.release(4)
+    assert pool.available == pool.capacity == 4
 
 
 def test_parallel_phase_releases_unusable_surplus(medium_rmat):

@@ -90,6 +90,21 @@ def test_packages_to_table_fixed_shape():
     assert (sizes[pkgs.n_packages :] == 0).all()
 
 
+def test_packages_to_table_rejects_overflow():
+    """Regression (ISSUE 2): packages beyond max_packages were silently
+    dropped — frontier ranges lost on the device. Overflow must raise."""
+    import pytest
+
+    degrees = np.random.default_rng(0).integers(1, 50, 300)
+    pkgs = make_packages(degrees, bounds(n_packages=16), variance_ratio=1.0)
+    assert pkgs.n_packages == 16
+    with pytest.raises(ValueError, match="exceed"):
+        packages_to_table(pkgs, max_packages=8)
+    # the exact-fit boundary still works
+    starts, sizes = packages_to_table(pkgs, max_packages=16)
+    assert sizes.sum() == 300
+
+
 # ---------------- scheduler (§4.3) ----------------
 
 def run_sched(pool, b, n=8):

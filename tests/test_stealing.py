@@ -1,0 +1,309 @@
+"""Inter-session work-stealing: StealRegistry, the victim fence on
+ScheduleRun, and engine integration (skewed-load win, uniform neutrality,
+exact work conservation)."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    MultiQueryEngine,
+    PackageScheduler,
+    QueryRecord,
+    StealRegistry,
+    ThreadBounds,
+    WorkerPool,
+    XEON_E5_2660V4,
+    make_packages,
+)
+
+
+def _bounds(t_min=4, t_max=8, n_packages=8):
+    return ThreadBounds(
+        t_min=t_min, t_max=t_max, n_packages=n_packages, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+
+
+def _fake_run(backlog, grinding=True):
+    return SimpleNamespace(stealable_backlog=backlog, grinding=grinding)
+
+
+# ---------------- StealRegistry ----------------
+
+def test_registry_publish_pick_withdraw():
+    reg = StealRegistry()
+    assert reg.pick_victim() is None
+    reg.publish(0, _fake_run(5), priority=0, graph_key="g1")
+    reg.publish(1, _fake_run(9), priority=0, graph_key="g2")
+    assert len(reg) == 2 and reg.total_backlog() == 14
+    # most backlogged wins absent locality/priority signals
+    assert reg.pick_victim().key == 1
+    # a thief never picks itself
+    assert reg.pick_victim(thief_key=1).key == 0
+    reg.withdraw(1)
+    assert reg.pick_victim().key == 0
+    reg.withdraw(0)
+    assert reg.pick_victim() is None
+    reg.withdraw(42)  # idempotent
+
+
+def test_registry_ignores_empty_backlogs():
+    reg = StealRegistry()
+    reg.publish(0, _fake_run(0))
+    assert reg.pick_victim() is None
+    reg.publish(1, _fake_run(2))
+    assert reg.pick_victim(min_backlog=3) is None
+    assert reg.pick_victim(min_backlog=2).key == 1
+
+
+def test_registry_prefers_same_graph_victims():
+    """Q-Graph locality: a victim on the thief's graph beats a more
+    backlogged victim on a different graph."""
+    reg = StealRegistry()
+    reg.publish(0, _fake_run(50), graph_key="other")
+    reg.publish(1, _fake_run(3), graph_key="mine")
+    assert reg.pick_victim(graph_key="mine").key == 1
+    # no locality hint → backlog decides
+    assert reg.pick_victim().key == 0
+
+
+def test_registry_prefers_high_priority_victims():
+    reg = StealRegistry()
+    reg.publish(0, _fake_run(50), priority=0)
+    reg.publish(1, _fake_run(3), priority=1)
+    assert reg.pick_victim().key == 1  # help the latency-sensitive query first
+    # locality still outranks priority
+    reg.publish(2, _fake_run(2), priority=0, graph_key="mine")
+    assert reg.pick_victim(graph_key="mine").key == 2
+
+
+# ---------------- victim fence on ScheduleRun ----------------
+
+def test_donate_claims_tail_and_fences_victim():
+    """A thief claims trailing undispatched packages; the victim never hands
+    them out again and the claimed+dispatched sets partition the order."""
+    pool = WorkerPool(8)
+    taken = pool.request(7)  # 1 worker left → sequential grind
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=True)
+    first = srun.next_step()
+    assert first.mode == "sequential"
+    assert srun.grinding
+    assert srun.stealable_backlog == pkgs.n_packages - 1
+    stolen = srun.donate(3, workers=2)
+    assert stolen.size == 3 and srun.outstanding_donations == 1
+    assert srun.trace.stolen_packages == 3
+    order = [int(p) for p in pkgs.order[: pkgs.n_packages]]
+    assert [int(p) for p in stolen] == order[-3:]  # the trailing packages
+    handed = [int(p) for p in first.batch]
+    while (s := srun.next_step()) is not None:
+        assert s.mode != "stalled"
+        handed.extend(int(p) for p in s.batch)
+    assert set(handed).isdisjoint(int(p) for p in stolen)
+    assert len(handed) + stolen.size == pkgs.n_packages  # exactly-once
+    srun.donation_done()
+    assert srun.outstanding_donations == 0
+    srun.close()
+    pool.release(taken)
+    assert pool.available == 8
+
+
+def test_donate_never_exceeds_backlog():
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=True)
+    srun.next_step()
+    stolen = srun.donate(100)
+    assert stolen.size == srun.trace.stolen_packages <= pkgs.n_packages - 1
+    assert srun.stealable_backlog == 0
+    assert srun.donate(1).size == 0  # nothing left to claim
+    srun.close()
+    pool.release(taken)
+
+
+def test_grinding_resets_on_parallel_recovery():
+    """A run that fell into sequential grind but then recovered to parallel
+    width is no longer ``grinding`` — thieves must not treat it as a 1-wide
+    victim (and over-claim with the grind chunk multiplier)."""
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=True)
+    assert srun.next_step().mode == "sequential"
+    assert srun.grinding
+    pool.release(taken)  # the pool frees up mid-iteration
+    step = srun.next_step()  # grant re-evaluation recovers full width
+    assert step.mode == "parallel"
+    assert not srun.grinding
+    srun.close()
+
+
+def test_donations_outlive_close():
+    """The victim releases its grant (close) while a thief still executes a
+    donated batch — the join must survive the close, and a closed run must
+    publish no further backlog."""
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=True)
+    srun.next_step()
+    assert srun.donate(3).size == 3
+    srun.close()
+    assert srun.outstanding_donations == 1
+    assert srun.stealable_backlog == 0 and srun.donate(1).size == 0
+    srun.donation_done()
+    assert srun.outstanding_donations == 0
+    pool.release(taken)
+    assert pool.available == 8
+
+
+def test_non_stealable_run_publishes_nothing():
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=False)
+    srun.next_step()
+    assert srun.grinding  # sequential, but not published
+    assert srun.stealable_backlog == 0
+    assert srun.donate(3).size == 0
+    srun.close()
+    pool.release(taken)
+
+
+def test_width_capped_parallel_run_is_stealable():
+    """A run holding its full T_max cannot absorb idle workers itself — its
+    tail is claimable so a second gang can (inter-query parallelism beyond
+    one query's T_max). A run that could still widen keeps its packages."""
+    pool = WorkerPool(16)
+    b = _bounds(t_min=2, t_max=8, n_packages=16)
+    pkgs = make_packages(np.full(400, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool).begin(pkgs, b, stealable=True)
+    assert srun.width_capped and srun.stealable_backlog == pkgs.n_packages
+    step = srun.next_step()
+    assert step.mode == "parallel" and len(step.batch) == step.workers == 8
+    assert srun.stealable_backlog == pkgs.n_packages - 8  # tail stays claimable
+    srun.close()
+
+    taken = pool.request(12)  # only 4 left: granted < t_max → can still widen
+    srun = PackageScheduler(pool).begin(pkgs, b, stealable=True)
+    assert not srun.width_capped and srun.stealable_backlog == 0
+    srun.close()
+    pool.release(taken)
+    assert pool.available == 16
+
+
+# ---------------- engine integration ----------------
+
+def _skew_mk(graph):
+    """1 heavy PageRank session + short BFS sessions (the paper's 'few large
+    + many small queries' extreme)."""
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=6, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 8]))
+
+    return mk
+
+
+def test_skewed_mix_steal_beats_nosteal(medium_rmat):
+    """The tentpole claim: under a skewed mix (1 heavy PR + 7 short BFS,
+    P=16) stealing strictly raises modeled throughput and mean utilization,
+    with the heavy session's packages executed by drained thieves."""
+    reps = {}
+    for steal in (False, True):
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
+        reps[steal] = eng.run_sessions(
+            _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=steal
+        )
+        assert eng.pool.available == eng.pool.capacity  # nothing leaked
+    off, on = reps[False], reps[True]
+    assert off.total_stolen == 0
+    assert on.total_stolen > 0
+    assert on.throughput_modeled() > off.throughput_modeled()
+    assert on.mean_utilization() > off.mean_utilization()
+    heavy = [r for r in on.records if r.algorithm == "pagerank_pull"][0]
+    assert heavy.stolen_packages > 0
+    assert sum(r.stolen_packages for r in on.records) == on.total_stolen
+
+
+def test_stolen_work_is_exactly_once(medium_rmat):
+    """Work conservation: with stealing, the heavy PageRank still executes
+    every edge of every iteration exactly once (stolen packages run on the
+    thief but through the victim's executor)."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
+    rep = eng.run_sessions(
+        _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=True
+    )
+    heavy = [r for r in rep.records if r.algorithm == "pagerank_pull"][0]
+    assert heavy.iterations == 6
+    assert heavy.edges == pytest.approx(medium_rmat.num_edges * 6)
+    # stolen runs are visible in the victim's traces
+    stolen_runs = [
+        run for tr in heavy.traces for run in tr.runs if run.mode == "stolen"
+    ]
+    assert len(stolen_runs) == heavy.stolen_packages
+    assert sum(tr.stolen_packages for tr in heavy.traces) == heavy.stolen_packages
+
+
+def test_uniform_load_steal_is_neutral(medium_rmat):
+    """Uniform 16-session closed loop: stealing must not change aggregate
+    modeled throughput by more than 2% (there is no skew to exploit)."""
+    def mk(s, q):
+        return PageRankExecutor(medium_rmat, mode="pull", max_iters=3, tol=0)
+
+    thr = {}
+    for steal in (False, True):
+        eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+        thr[steal] = eng.run_sessions(
+            mk, sessions=16, queries_per_session=1, steal=steal
+        ).throughput_modeled()
+    assert thr[True] == pytest.approx(thr[False], rel=0.02)
+
+
+def test_single_session_steal_traces_match_run_query(medium_rmat):
+    """With no co-runners there is nothing to steal: a 1-session steal=True
+    run makes the same scheduling decisions as run_query."""
+    eng_q = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    ex = PageRankExecutor(medium_rmat, mode="pull", max_iters=5, tol=0)
+    rec = QueryRecord(0, 0, "pr")
+    eng_q.run_query(ex, rec)
+
+    eng_s = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    rep = eng_s.run_sessions(
+        lambda s, q: PageRankExecutor(medium_rmat, mode="pull", max_iters=5, tol=0),
+        sessions=1,
+        queries_per_session=1,
+        steal=True,
+    )
+    r = rep.records[0]
+    assert rep.total_stolen == 0
+    assert rec.traces == r.traces
+    assert rec.modeled_ns == pytest.approx(r.modeled_ns)
+    assert rec.edges == r.edges
+
+
+def test_steal_report_fields(medium_rmat):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
+    rep = eng.run_sessions(
+        _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=True
+    )
+    assert rep.steal_events, "expected steals under the skewed mix"
+    ts = [t for t, *_ in rep.steal_events]
+    assert ts == sorted(ts)
+    timeline = rep.steal_timeline()
+    assert timeline[-1][1] == rep.total_stolen
+    assert [c for _, c in timeline] == sorted(c for _, c in timeline)
+    assert rep.steal_rate() > 0
+    for t, thief, victim, k in rep.steal_events:
+        assert thief != victim and k >= 1

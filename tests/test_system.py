@@ -28,8 +28,13 @@ def test_concurrent_sessions_report(medium_rmat):
 
 def test_contention_forces_sequential(medium_rmat):
     """With many sessions on few workers, grants shrink below T_min and the
-    engine runs iterations sequentially (the paper's §4.3 behaviour)."""
-    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    engine runs iterations sequentially (the paper's §4.3 behaviour).
+
+    The pool is odd-sized so partial grants (granted=1 < T_min) actually
+    occur: since the zero-grant fix, a session granted nothing stalls instead
+    of phantom-grinding, and on a pool of 2 with T_min=2 every woken session
+    takes both workers and runs parallel."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=3, policy="scheduler")
 
     def mk(s, q):
         return PageRankExecutor(medium_rmat, mode="pull", max_iters=3, tol=0)
