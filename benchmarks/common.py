@@ -77,13 +77,24 @@ def run_sessions(
     arrivals=None,
     priorities=None,
     steal: bool | None = None,
+    pool_capacity: int | None = None,
+    admission=None,
+    governor=None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
     ``arrivals``/``priorities`` pass through to the engine so figures can
     model open-loop (bursty) traffic and mixed priority classes. ``steal``
-    defaults to the module-level toggle (run.py --steal/--no-steal)."""
-    eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy)
+    defaults to the module-level toggle (run.py --steal/--no-steal).
+    ``pool_capacity``/``admission``/``governor`` let figures pin the machine
+    size, install per-priority admission quotas, and enable the elastic
+    capacity governor (fig15)."""
+    kwargs = {}
+    if pool_capacity is not None:
+        kwargs["pool_capacity"] = pool_capacity
+    if admission is not None:
+        kwargs["admission"] = admission
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy, **kwargs)
 
     def mk(s, q):
         return make_executor(algorithm, graph, seed=s)
@@ -96,6 +107,7 @@ def run_sessions(
         arrivals=arrivals,
         priorities=priorities,
         steal=STEAL if steal is None else steal,
+        governor=governor,
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep.throughput_modeled(), rep

@@ -50,6 +50,7 @@ from .scheduler import (
     largest_pow2_leq,
 )
 from .stealing import StealEntry, StealRegistry
+from .governor import CapacityGovernor, GovernorConfig
 from .session import (
     AdmissionController,
     EngineReport,
@@ -76,6 +77,7 @@ __all__ = [
     "PackageRun", "PackageScheduler", "ScheduleRun", "ScheduleStep",
     "ScheduleTrace", "STALL_STEP", "WorkerPool", "largest_pow2_leq",
     "StealEntry", "StealRegistry",
+    "CapacityGovernor", "GovernorConfig",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
     "QueryExecutor", "QueryRecord",
     "CostFeedback",

@@ -64,7 +64,14 @@ class WorkerPool:
     requests: a request with ``priority >= 1`` may drain the pool completely,
     while ``priority 0`` requests can only draw down to the reserve floor.
     This gives latency-sensitive queries a guaranteed slice of the machine
-    without a central scheduler."""
+    without a central scheduler.
+
+    ``resize`` notifies registered *resize hooks* with ``(old, new)`` so that
+    every capacity-change consumer (the discrete-event loop's wake/drain of
+    parked runs and stranded admission waiters, capacity timelines, the
+    governor's own bookkeeping) observes elastic scaling through one path —
+    a bare ``resize`` grow must never leave a zero-grant run parked until an
+    unrelated release happens to come along."""
 
     def __init__(self, capacity: int, *, high_priority_reserve: int = 0):
         if capacity < 1:
@@ -73,8 +80,13 @@ class WorkerPool:
             raise ValueError("high_priority_reserve must be in [0, capacity)")
         self.capacity = int(capacity)
         self.high_priority_reserve = int(high_priority_reserve)
+        # the *requested* reserve survives shrink/grow cycles: a shrink clamps
+        # the effective reserve (it must stay < capacity) but a later grow
+        # restores it instead of letting it silently erode
+        self._requested_reserve = int(high_priority_reserve)
         self._outstanding = 0  # grants checked out and not yet returned
         self._lock = threading.Lock()
+        self._resize_hooks: list[Callable[[int, int], None]] = []
 
     def request(self, n: int, *, priority: int = 0) -> int:
         """Grant up to n workers (at least 0); non-blocking."""
@@ -108,19 +120,36 @@ class WorkerPool:
         with self._lock:
             return max(self._outstanding - self.capacity, 0)
 
+    def add_resize_hook(self, hook: Callable[[int, int], None]) -> None:
+        """Register ``hook(old_capacity, new_capacity)`` to run after every
+        capacity change (outside the pool lock, in registration order)."""
+        self._resize_hooks.append(hook)
+
+    def remove_resize_hook(self, hook: Callable[[int, int], None]) -> None:
+        if hook in self._resize_hooks:
+            self._resize_hooks.remove(hook)
+
     def resize(self, new_capacity: int) -> None:
-        """Elastic scaling: grow/shrink the machine (node join/loss).
+        """Elastic scaling: grow/shrink the machine (node join/loss, or the
+        capacity governor reacting to sustained saturation / idleness).
 
         Outstanding grants are untouched: a shrink below ``in_use`` leaves
         the overhang as debt that blocks new grants until released, instead
-        of silently minting capacity."""
+        of silently minting capacity. Resize hooks fire after the change so
+        a grow can wake parked runs / drain admission waiters immediately."""
         if new_capacity < 1:
             raise ValueError("capacity must be >= 1")
         with self._lock:
+            old = self.capacity
             self.capacity = int(new_capacity)
             # keep the reserve invariant (< capacity) so a shrink can never
-            # permanently starve normal-priority requests
-            self.high_priority_reserve = min(self.high_priority_reserve, self.capacity - 1)
+            # permanently starve normal-priority requests — but clamp against
+            # the *requested* reserve, so a grow restores what a previous
+            # shrink took away instead of compounding the erosion
+            self.high_priority_reserve = min(self._requested_reserve, self.capacity - 1)
+        if old != self.capacity:
+            for hook in list(self._resize_hooks):
+                hook(old, self.capacity)
 
 
 @dataclasses.dataclass
@@ -139,6 +168,9 @@ class ScheduleTrace:
     released_early: bool = False
     # packages ceded to thieves over the victim fence (work-stealing)
     stolen_packages: int = 0
+    # times the run was fenced by the capacity governor (grant released at a
+    # package boundary to free workers for a waiting high-priority session)
+    preempted: int = 0
 
     @property
     def parallel_fraction(self) -> float:
@@ -223,6 +255,7 @@ class ScheduleRun:
         self._steal_lock = threading.Lock()
         self._seq_done = 0
         self._closed = False
+        self._preempt_pending = False   # governor fence: yield at next boundary
         # preparation already decided sequential → take one worker at most
         self._simple_seq = not bounds.parallel or packages.n_packages <= 1
         self._requested = 1 if self._simple_seq else bounds.t_max
@@ -246,6 +279,41 @@ class ScheduleRun:
         """True while the run is committed to (or stuck in) sequential
         execution — the saturation state the paper's protocol shrinks into."""
         return self._simple_seq or self._seq_done > 0 or self.trace.released_early
+
+    @property
+    def granted(self) -> int:
+        """Workers the run currently holds checked out of the pool."""
+        return self._granted
+
+    @property
+    def preempt_pending(self) -> bool:
+        """A governor fence is set but the run has not yielded yet."""
+        return self._preempt_pending
+
+    @property
+    def preemptible(self) -> bool:
+        """The run holds workers a preemption could free: alive, not already
+        fenced, and at least one worker checked out."""
+        return (
+            not self._closed
+            and not self.done
+            and not self._preempt_pending
+            and self._granted >= 1
+        )
+
+    def preempt(self) -> bool:
+        """Governor-side fence: ask the run to release its whole grant at the
+        next package boundary (the same boundary the steal fence uses — no
+        package is ever interrupted mid-execution). The run's next
+        ``next_step`` observes the fence, returns the grant, and reports a
+        stall so the event loop parks the session; it re-requests workers at
+        its own priority once woken. One-shot: the fence clears when it
+        fires. Returns False when the run holds nothing worth preempting."""
+        with self._steal_lock:
+            if not self.preemptible:
+                return False
+            self._preempt_pending = True
+            return True
 
     @property
     def width_capped(self) -> bool:
@@ -307,7 +375,22 @@ class ScheduleRun:
 
     def _next_step_locked(self) -> ScheduleStep | None:
         if self.done:
+            # a fence set just before a steal donation emptied the range has
+            # nothing left to yield — clear it so the governor's
+            # one-fence-in-flight guard is not blocked by a dead flag (the
+            # grant is released by close() at this same boundary anyway)
+            self._preempt_pending = False
             return None
+        if self._preempt_pending:
+            # governor fence: yield the whole grant at this package boundary
+            # so a waiting high-priority session can take the workers; stall
+            # until the event loop wakes us with capacity for our class
+            self._preempt_pending = False
+            if self._granted > 0:
+                self.pool.release(self._granted)
+                self._granted = 0
+            self.trace.preempted += 1
+            return STALL_STEP
         # pool integrity: a step may never execute without holding a worker
         if self._granted <= 0:
             self._granted = self.pool.request(1, priority=self.priority)
@@ -363,6 +446,7 @@ class ScheduleRun:
             self.pool.release(self._granted)
             self._granted = 0
             self._closed = True
+        self._preempt_pending = False  # a closed run can honor no fence
 
 
 class PackageScheduler:

@@ -36,7 +36,7 @@ import collections
 import dataclasses
 import heapq
 import time
-from typing import Any, Callable, Protocol, Sequence
+from typing import TYPE_CHECKING, Any, Callable, Protocol, Sequence
 
 import numpy as np
 
@@ -56,6 +56,10 @@ from .scheduler import (
     largest_pow2_leq,
 )
 from .stealing import StealRegistry
+from .timeline import step_integral, step_mean
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import (no cycle)
+    from .governor import CapacityGovernor
 
 # packages a thief claims per granted worker in one steal chunk; small enough
 # that the victim's own grant re-evaluation keeps mattering, large enough to
@@ -125,6 +129,15 @@ class EngineReport:
     steal_events: list[tuple[float, int, int, int]] = dataclasses.field(
         default_factory=list
     )
+    # (modeled time_ns, pool capacity) samples — more than one entry only
+    # when a capacity governor (or a resize hook caller) was in the loop
+    capacity_timeline: list[tuple[float, int]] = dataclasses.field(default_factory=list)
+    # (modeled time_ns, old capacity, new capacity, reason) per governor action
+    resize_events: list[tuple[float, int, int, str]] = dataclasses.field(
+        default_factory=list
+    )
+    # (modeled time_ns, preempted session id) per governor fence
+    preemptions: list[tuple[float, int]] = dataclasses.field(default_factory=list)
 
     @property
     def total_edges(self) -> float:
@@ -153,20 +166,81 @@ class EngineReport:
                 by_session[r.session].append(r.latency_ns)
         return {sid: _percentiles(lats) for sid, lats in sorted(by_session.items())}
 
+    def latency_percentiles_by_priority(self) -> dict[int, dict[str, float]]:
+        """p50/p95/p99 modeled latency per priority class (ns) — the number
+        the per-priority admission quotas and preemption exist to protect."""
+        by_prio: dict[int, list[float]] = collections.defaultdict(list)
+        for r in self.records:
+            if r.finished_ns > 0:
+                by_prio[r.priority].append(r.latency_ns)
+        return {p: _percentiles(lats) for p, lats in sorted(by_prio.items())}
+
     def mean_utilization(self) -> float:
-        """Time-weighted mean fraction of the pool in use (modeled clock)."""
-        if len(self.utilization) < 2 or self.pool_capacity <= 0:
+        """Busy worker-time over *provisioned* worker-time (modeled clock):
+        ``∫ in_use dt / ∫ capacity dt`` across the utilization sample span.
+
+        For a fixed-``P`` run this reduces exactly to the time-weighted mean
+        fraction of the pool in use. Under an elastic capacity timeline the
+        denominator follows the governed capacity, so shrinking an idle pool
+        raises utilization and holding an over-grown pool lowers it — the
+        cost-of-provisioned-hardware meaning the governor optimizes for.
+        Empty or zero-duration timelines yield 0.0 rather than raising."""
+        if len(self.utilization) < 2:
             return 0.0
-        ts = np.asarray([t for t, _ in self.utilization])
-        us = np.asarray([u for _, u in self.utilization], dtype=np.float64)
-        span = ts[-1] - ts[0]
-        if span <= 0:
-            return float(us.mean() / self.pool_capacity)
-        return float(np.sum(us[:-1] * np.diff(ts)) / (span * self.pool_capacity))
+        t_lo, t_hi = self.utilization[0][0], self.utilization[-1][0]
+        capline = self.capacity_timeline or [(t_lo, self.pool_capacity)]
+        if t_hi <= t_lo:
+            cap = capline[-1][1]
+            if cap <= 0:
+                return 0.0
+            return step_mean(self.utilization, t_lo, t_hi) / cap
+        provisioned = step_integral(capline, t_lo, t_hi)
+        if provisioned <= 0:
+            return 0.0
+        return step_integral(self.utilization, t_lo, t_hi) / provisioned
+
+    def mean_capacity(self) -> float:
+        """Time-weighted mean pool capacity over the run (modeled clock);
+        equals ``pool_capacity`` for fixed-``P`` runs."""
+        line = self.capacity_timeline
+        if not line:
+            return float(self.pool_capacity)
+        end = max(self.makespan_modeled_ns, line[-1][0])
+        return step_mean(line, line[0][0], end)
 
     @property
     def max_inflight(self) -> int:
         return max((n for _, n in self.inflight), default=0)
+
+    def mean_inflight(self) -> float:
+        """Time-weighted mean of admitted sessions (0.0 on empty/degenerate
+        timelines)."""
+        if not self.inflight:
+            return 0.0
+        return step_mean(self.inflight, self.inflight[0][0], self.inflight[-1][0])
+
+    # -------------------------------------------------- elastic capacity
+    @property
+    def grow_events(self) -> int:
+        return sum(new > old for _, old, new, _ in self.resize_events)
+
+    @property
+    def shrink_events(self) -> int:
+        return sum(new < old for _, old, new, _ in self.resize_events)
+
+    def resize_rate(self) -> float:
+        """Governor resize actions per modeled second (0.0 for a
+        zero-duration run — never a ZeroDivisionError)."""
+        if self.makespan_modeled_ns <= 0:
+            return 0.0
+        return len(self.resize_events) / (self.makespan_modeled_ns * 1e-9)
+
+    def preemption_rate(self) -> float:
+        """Governor preemption fences per modeled second (guarded like
+        :meth:`resize_rate`)."""
+        if self.makespan_modeled_ns <= 0:
+            return 0.0
+        return len(self.preemptions) / (self.makespan_modeled_ns * 1e-9)
 
     # -------------------------------------------------- work-stealing
     @property
@@ -216,16 +290,33 @@ class AdmissionController:
     queued requests, it bounds the number of *admitted* sessions so that each
     can still be guaranteed ``target_share`` workers — ``cap = max(P //
     target_share, 1)``, optionally clamped by ``max_inflight``. Sessions over
-    the cap wait in FIFO order and are admitted as running sessions drain."""
+    the cap wait in FIFO order and are admitted as running sessions drain.
 
-    def __init__(self, *, target_share: int = 1, max_inflight: int | None = None):
+    ``class_quotas`` adds per-priority-class quotas on top of the global cap:
+    ``{priority: max_inflight_for_that_class}``. A class at its quota does
+    not block other classes — its waiters are skipped (kept in order) while
+    eligible lower-priority waiters behind them are admitted, so a quota'd
+    burst of one class can never head-of-line-block the rest of the system.
+    Classes absent from the dict are bounded only by the global cap."""
+
+    def __init__(
+        self,
+        *,
+        target_share: int = 1,
+        max_inflight: int | None = None,
+        class_quotas: dict[int, int] | None = None,
+    ):
         if target_share < 1:
             raise ValueError("target_share must be >= 1")
         if max_inflight is not None and max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if class_quotas is not None and any(q < 1 for q in class_quotas.values()):
+            raise ValueError("class quotas must be >= 1")
         self.target_share = target_share
         self.max_inflight = max_inflight
+        self.class_quotas = dict(class_quotas) if class_quotas else None
         self.inflight = 0
+        self.inflight_by_class: collections.Counter[int] = collections.Counter()
         # (-priority, fifo_seq, session): highest priority first, FIFO within
         # a class — a latency-sensitive session must not queue behind the
         # whole low-priority backlog
@@ -238,15 +329,34 @@ class AdmissionController:
             derived = min(derived, self.max_inflight)
         return derived
 
-    def try_admit(self, pool: WorkerPool) -> bool:
-        if self.inflight < self.cap(pool):
-            self.inflight += 1
-            return True
-        return False
+    def quota_for(self, priority: int) -> int | None:
+        """Per-class in-flight quota, or ``None`` for an unbounded class."""
+        if self.class_quotas is None:
+            return None
+        return self.class_quotas.get(int(priority))
+
+    def _class_full(self, priority: int) -> bool:
+        quota = self.quota_for(priority)
+        return quota is not None and self.inflight_by_class[int(priority)] >= quota
+
+    def _admit_one(self, priority: int) -> None:
+        self.inflight += 1
+        self.inflight_by_class[int(priority)] += 1
+
+    def try_admit(self, pool: WorkerPool, *, priority: int = 0) -> bool:
+        if self.inflight >= self.cap(pool) or self._class_full(priority):
+            return False
+        self._admit_one(priority)
+        return True
 
     @property
     def has_waiters(self) -> bool:
         return bool(self._waiting)
+
+    @property
+    def waiting_count(self) -> int:
+        """Sessions queued for admission (the governor's backlog signal)."""
+        return len(self._waiting)
 
     def enqueue(self, session: Any) -> None:
         prio = int(getattr(session, "priority", 0))
@@ -263,26 +373,41 @@ class AdmissionController:
         return self.drain(pool)
 
     def drain(self, pool: WorkerPool) -> list[Any]:
-        """Admit eligible waiters up to ``cap(pool)`` in priority-FIFO order.
-        Call after anything that raises the cap (a ``pool.resize`` grow, a
+        """Admit eligible waiters up to ``cap(pool)`` in priority-FIFO order,
+        skipping (but keeping) waiters whose class is at quota. Call after
+        anything that raises the cap (a ``pool.resize`` grow, a
         ``max_inflight`` change) — waiters must not stay stranded until some
         unrelated session happens to finish."""
         admitted: list[Any] = []
+        skipped: list[tuple[int, int, Any]] = []
         cap = self.cap(pool)
         while self._waiting and self.inflight < cap:
-            self.inflight += 1
-            admitted.append(heapq.heappop(self._waiting)[2])
+            item = heapq.heappop(self._waiting)
+            prio = -item[0]
+            if self._class_full(prio):
+                skipped.append(item)
+                continue
+            self._admit_one(prio)
+            admitted.append(item[2])
+        for item in skipped:
+            heapq.heappush(self._waiting, item)
         return admitted
 
-    def release(self, pool: WorkerPool) -> list[Any]:
+    def release(self, pool: WorkerPool, *, priority: int = 0) -> list[Any]:
         """A session finished: drain every now-eligible waiter (not just one —
-        a grown pool or raised ``max_inflight`` may have room for several)."""
+        a grown pool or raised ``max_inflight`` may have room for several).
+        ``priority`` is the finishing session's class, so its quota slot is
+        returned."""
         self.inflight = max(self.inflight - 1, 0)
+        prio = int(priority)
+        if self.inflight_by_class[prio] > 0:
+            self.inflight_by_class[prio] -= 1
         return self.drain(pool)
 
     def reset(self) -> None:
         """Drop all admission state (run teardown / crash recovery)."""
         self.inflight = 0
+        self.inflight_by_class.clear()
         self._waiting.clear()
         self._enqueued = 0
 
@@ -493,6 +618,7 @@ class MultiQueryEngine:
         priorities: Sequence[int] | Callable[[int], int] | None = None,
         arrivals: PoissonArrivals | Sequence[float] | None = None,
         steal: bool = False,
+        governor: "CapacityGovernor | None" = None,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
@@ -514,7 +640,17 @@ class MultiQueryEngine:
         attractive victim — same-graph first, then priority, then backlog —
         and executes them through the victim's executor. The victim's
         iteration is accounted only after all donations return, so modeled
-        time, edges, and convergence stay exact."""
+        time, edges, and convergence stay exact.
+
+        A :class:`~.governor.CapacityGovernor` passed as ``governor`` is
+        ticked once per dequeued event: it may elastically resize the pool
+        within its ``[p_min, p_max]`` band (grows wake parked runs and drain
+        stranded admission waiters through the pool's resize hook; shrinks
+        become grant debt, never minted capacity) and — with ``preempt=True``
+        — fence a low-priority run at its next package boundary to free
+        workers for a parked high-priority session. ``governor=None`` (the
+        default) performs zero governor calls and keeps every scheduling
+        decision bit-identical to the ungoverned engine."""
         if priorities is None:
             prio = [0] * sessions
         elif callable(priorities):
@@ -541,15 +677,19 @@ class MultiQueryEngine:
             pool_capacity=self.pool.capacity,
             admission_cap=self.admission.cap(self.pool),
         )
+        report.capacity_timeline.append((0.0, self.pool.capacity))
+        if governor is not None:
+            governor.reset()
         t_start = time.perf_counter_ns()
         states = [_SessionState(sid=s, priority=prio[s]) for s in range(sessions)]
         registry: StealRegistry | None = StealRegistry() if steal else None
         stalled: list[_SessionState] = []
 
-        EV_ARRIVE, EV_STEP, EV_STEAL = 0, 1, 2
-        heap: list[tuple[float, int, int, _SessionState]] = []
+        EV_ARRIVE, EV_STEP, EV_STEAL, EV_GOV = 0, 1, 2, 3
+        heap: list[tuple[float, int, int, _SessionState | None]] = []
         seq = 0
         clock = 0.0
+        now = 0.0  # time of the event being handled (heartbeats included)
 
         def _push(t_ev: float, kind: int, state: _SessionState) -> None:
             nonlocal seq
@@ -571,20 +711,52 @@ class MultiQueryEngine:
 
         def _wake_stalled(t: float) -> None:
             """Re-schedule parked sessions that could now get a worker (their
-            priority class sees capacity above the reserve floor)."""
+            priority class sees capacity above the reserve floor). Highest
+            priority wakes first, so workers a preemption (or grow) just freed
+            go to the session they were freed for — the stable sort keeps the
+            park order within a class, so equal-priority runs are unchanged."""
             if not stalled:
                 return
             avail = self.pool.available
             if avail <= 0:
                 return
             still: list[_SessionState] = []
-            for s in stalled:
+            for s in sorted(stalled, key=lambda s: -s.priority):
                 floor = 0 if s.priority >= 1 else self.pool.high_priority_reserve
                 if avail > floor:
                     _push(t, EV_STEP, s)
                 else:
                     still.append(s)
             stalled[:] = still
+
+        def _on_resize(old_cap: int, new_cap: int) -> None:
+            """The single capacity-change hook (WorkerPool.resize fires it):
+            record the timeline, and on growth immediately drain stranded
+            admission waiters and wake zero-grant parked runs — a bare grow
+            must never leave them parked until an unrelated release."""
+            if report.capacity_timeline[-1][1] != new_cap:
+                report.capacity_timeline.append((now, new_cap))
+            if new_cap > old_cap:
+                for adm in self.admission.drain(self.pool):
+                    _push(now, EV_STEP, adm)
+                _sample_inflight(now)
+                _wake_stalled(now)
+
+        self.pool.add_resize_hook(_on_resize)
+
+        # a governed run keeps a heartbeat in the event heap so the governor
+        # also observes *idle* stretches (no session events fire there — an
+        # ungoverned loop would simply jump the clock across the gap, and a
+        # post-burst pool would never shrink). The heartbeat re-arms only
+        # while other events remain, so it cannot keep the loop alive, and
+        # it never advances the work clock (makespan is query completion).
+        gov_tick_ns = 0.0
+        if governor is not None:
+            ref_ns = governor.config.window_ns
+            if governor.config.cooldown_ns > 0:
+                ref_ns = min(ref_ns, governor.config.cooldown_ns)
+            gov_tick_ns = max(ref_ns / 2.0, 1.0)
+            _push(gov_tick_ns, EV_GOV, None)
 
         def _begin_query(st: _SessionState, t: float) -> bool:
             """Move the session to its next query; False → session exhausted."""
@@ -632,9 +804,19 @@ class MultiQueryEngine:
                 tried.add(entry.key)
                 victim: _SessionState = entry.payload
                 # the stolen packages belong to the victim's query class, so
-                # the request may use the victim's priority (its reserve slice)
+                # the request may use the victim's priority (its reserve
+                # slice). The gang width observes the *governed* capacity —
+                # the budget is the pool's current derived availability past
+                # the class floor, and zero while a shrink's grant debt is
+                # draining — never the raw P the victim's bounds were
+                # prepared against.
+                budget = registry.steal_budget(
+                    self.pool, priority=max(thief.priority, entry.priority)
+                )
+                if budget < 1:
+                    continue
                 got = self.pool.request(
-                    max(entry.run.bounds.t_max, 1),
+                    min(max(entry.run.bounds.t_max, 1), budget),
                     priority=max(thief.priority, entry.priority),
                 )
                 usable = largest_pow2_leq(got)
@@ -677,7 +859,31 @@ class MultiQueryEngine:
         try:
             while heap:
                 t, _, kind, st = heapq.heappop(heap)
-                clock = max(clock, t)
+                now = t
+                if kind != EV_GOV:
+                    # heartbeats observe time but are not work: the modeled
+                    # makespan must end at the last session event
+                    clock = max(clock, t)
+
+                if governor is not None:
+                    # the governor observes every event edge: it may resize
+                    # the pool (hooks wake/drain immediately) or fence a
+                    # low-priority run for a parked high-priority session
+                    governor.tick(
+                        t,
+                        pool=self.pool,
+                        admission=self.admission,
+                        utilization=report.utilization,
+                        stalled=stalled,
+                        running=states,
+                    )
+
+                if kind == EV_GOV:
+                    # re-arm only while real events remain — the heartbeat
+                    # must not keep a finished loop spinning
+                    if heap:
+                        _push(t + gov_tick_ns, EV_GOV, None)
+                    continue
 
                 if kind == EV_ARRIVE:
                     # strict priority-FIFO: the arrival queues behind waiting
@@ -726,7 +932,9 @@ class MultiQueryEngine:
                                 ):
                                     st = None
                                     break
-                                for nxt in self.admission.release(self.pool):
+                                for nxt in self.admission.release(
+                                    self.pool, priority=st.priority
+                                ):
                                     _push(t, EV_STEP, nxt)
                                 _sample_inflight(t)
                                 st = None
@@ -775,9 +983,13 @@ class MultiQueryEngine:
                     # a run the cost model (or baseline policy) decided to
                     # execute sequentially carries tiny iterations, and
                     # fencing it would fragment its tail into per-package
-                    # dispatches for no possible gain
+                    # dispatches for no possible gain. A preempting governor
+                    # needs the same fence: without incremental dispatch a
+                    # run is `done` the moment its one big step is handed
+                    # out, leaving no package boundary to preempt at.
+                    fenced = (steal or (governor is not None and governor.preempts))
                     st.srun = scheduler.begin(
-                        st.prep.packages, bounds, stealable=steal and bounds.parallel
+                        st.prep.packages, bounds, stealable=fenced and bounds.parallel
                     )
                     if registry is not None and st.srun.stealable:
                         registry.publish(
@@ -819,8 +1031,13 @@ class MultiQueryEngine:
 
                 if step.mode == "stalled":
                     # pool integrity: no worker, no execution — park until a
-                    # release frees capacity for this session's class
+                    # release frees capacity for this session's class. A
+                    # governor fence releases the victim's grant *inside*
+                    # next_step, so wake now: the high-priority session the
+                    # fence freed workers for must not wait for another event
+                    # (no-op otherwise — an ordinary stall frees nothing)
                     stalled.append(st)
+                    _wake_stalled(t)
                     continue
 
                 assert st.executor is not None and st.prep is not None
@@ -838,8 +1055,9 @@ class MultiQueryEngine:
                     f"{len(stalled)} session(s) deadlocked waiting for workers"
                 )
         finally:
-            # an exception in executor code must not leak held grants or
-            # admission slots on the shared engine state
+            # an exception in executor code must not leak held grants,
+            # admission slots, or the resize hook on the shared engine state
+            self.pool.remove_resize_hook(_on_resize)
             for s in states:
                 if s.srun is not None:
                     s.srun.close()
@@ -849,6 +1067,9 @@ class MultiQueryEngine:
                     s.steal = None
             self.admission.reset()
 
+        if governor is not None:
+            report.resize_events = list(governor.resize_events)
+            report.preemptions = list(governor.preemptions)
         _sample(clock)
         report.makespan_modeled_ns = clock
         report.makespan_measured_ns = float(time.perf_counter_ns() - t_start)

@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Hashable, Iterator
 
-from .scheduler import ScheduleRun
+from .scheduler import ScheduleRun, WorkerPool
 
 
 @dataclasses.dataclass
@@ -94,6 +94,21 @@ class StealRegistry:
 
     def total_backlog(self) -> int:
         return sum(e.backlog for e in self._entries.values())
+
+    @staticmethod
+    def steal_budget(pool: WorkerPool, *, priority: int = 0) -> int:
+        """Workers a thief's second gang may take right now under the
+        *governed* capacity: the pool's derived availability past the reserve
+        floor for the steal's priority class, and zero while a shrink's grant
+        debt is draining (the machine is already over-committed — launching a
+        second gang would deepen the overhang the shrink is waiting out).
+        Thieves must size their requests from this, never from the raw ``P``
+        a victim's bounds were prepared against: under an elastic governor
+        the capacity at claim time is not the capacity at preparation time."""
+        if pool.shrink_debt > 0:
+            return 0
+        floor = 0 if priority >= 1 else pool.high_priority_reserve
+        return max(pool.available - floor, 0)
 
     def pick_victim(
         self,

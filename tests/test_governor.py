@@ -1,0 +1,479 @@
+"""Elastic capacity governor: utilization-driven resize with hysteresis,
+per-priority admission quotas, preemption fences, the unified wake/drain
+capacity hook, and the resize/reserve bugfixes that ride along."""
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    AdmissionController,
+    CapacityGovernor,
+    EngineReport,
+    GovernorConfig,
+    MultiQueryEngine,
+    WorkerPool,
+    XEON_E5_2660V4,
+)
+
+
+def _mk_pr(graph, max_iters=3):
+    return lambda s, q: PageRankExecutor(graph, mode="pull", max_iters=max_iters, tol=0)
+
+
+# ---------------- config validation ----------------
+
+def test_governor_config_validation():
+    with pytest.raises(ValueError):
+        GovernorConfig(p_min=0, p_max=4)
+    with pytest.raises(ValueError):
+        GovernorConfig(p_min=8, p_max=4)
+    with pytest.raises(ValueError):
+        GovernorConfig(p_min=1, p_max=4, grow_util=0.2, shrink_util=0.5)
+    with pytest.raises(ValueError):
+        GovernorConfig(p_min=1, p_max=4, window_ns=0)
+    with pytest.raises(TypeError):
+        CapacityGovernor(GovernorConfig(p_min=1, p_max=4), p_min=1)
+
+
+# ---------------- satellite: resize restores the requested reserve ----------------
+
+def test_resize_restores_reserve_across_shrink_grow_cycles():
+    """Regression: a shrink clamped ``high_priority_reserve`` but a later
+    grow never restored it — the reserve silently eroded to nothing across
+    shrink/grow cycles. The requested reserve must survive."""
+    pool = WorkerPool(8, high_priority_reserve=4)
+    pool.resize(2)
+    assert pool.high_priority_reserve == 1  # clamped below capacity
+    pool.resize(8)
+    assert pool.high_priority_reserve == 4  # restored (pre-fix: stuck at 1)
+    pool.resize(3)
+    assert pool.high_priority_reserve == 2
+    pool.resize(16)
+    assert pool.high_priority_reserve == 4  # never exceeds the request
+    # the restored reserve is enforced, not just reported
+    assert pool.request(16, priority=0) == 12
+    pool.release(12)
+
+
+# ---------------- satellite: one wake/drain hook for capacity increases ----------------
+
+def test_resize_hooks_fire_on_change_only():
+    pool = WorkerPool(4)
+    fired = []
+    hook = lambda old, new: fired.append((old, new))  # noqa: E731
+    pool.add_resize_hook(hook)
+    pool.resize(8)
+    pool.resize(8)  # no change, no callback
+    pool.resize(2)
+    assert fired == [(4, 8), (8, 2)]
+    pool.remove_resize_hook(hook)
+    pool.resize(5)
+    assert fired == [(4, 8), (8, 2)]
+
+
+def test_governor_grow_wakes_parked_run_at_resize_time(medium_rmat):
+    """Regression: zero-grant parked runs were only woken by release events.
+    A capacity grow must wake them at the grow's modeled timestamp, not when
+    an unrelated session happens to finish."""
+    gov = CapacityGovernor(
+        p_min=2, p_max=8, window_ns=3e4, cooldown_ns=3e4,
+        # never shrink, so the only capacity events are grows
+        shrink_util=0.0,
+    )
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=2,
+        policy="scheduler",
+        admission=AdmissionController(max_inflight=8),
+    )
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat), sessions=4, queries_per_session=1, governor=gov
+    )
+    grows = [(t, old, new) for t, old, new, r in rep.resize_events if r == "grow"]
+    assert grows, "expected the governor to grow a saturated 2-worker pool"
+    # the woken sessions' first execution lands at (not after) a grow time:
+    # some session starts exactly when capacity first increases
+    first_grow_t = grows[0][0]
+    started = sorted(r.started_ns for r in rep.records)
+    assert any(s == pytest.approx(first_grow_t) for s in started), (
+        "no session started at the grow timestamp — parked runs were not "
+        "woken by the capacity-increase hook"
+    )
+    assert eng.pool.available == eng.pool.capacity
+
+
+def test_governor_grow_drains_admission_waiters(medium_rmat):
+    """A grow raises the derived admission cap; stranded waiters must be
+    admitted at the grow, not at the next session completion."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep_fixed = eng.run_sessions(_mk_pr(medium_rmat), sessions=6, queries_per_session=1)
+    assert rep_fixed.max_inflight <= 2  # cap = P // target_share = 2
+
+    gov = CapacityGovernor(p_min=2, p_max=16, window_ns=3e4, cooldown_ns=3e4,
+                           shrink_util=0.0)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, governor=gov
+    )
+    assert rep.grow_events > 0
+    assert rep.max_inflight > 2  # waiters drained into the grown pool
+    assert eng.pool.available == eng.pool.capacity
+
+
+# ---------------- tentpole: grow under saturation, shrink when idle ----------------
+
+def test_governor_grows_under_sustained_saturation(medium_rmat):
+    eng_f = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep_f = eng_f.run_sessions(_mk_pr(medium_rmat), sessions=8, queries_per_session=1)
+
+    gov = CapacityGovernor(p_min=2, p_max=16, window_ns=5e4, cooldown_ns=5e4)
+    eng_g = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep_g = eng_g.run_sessions(
+        _mk_pr(medium_rmat), sessions=8, queries_per_session=1, governor=gov
+    )
+    assert rep_g.grow_events > 0
+    caps = [c for _, c in rep_g.capacity_timeline]
+    assert max(caps) > 2 and max(caps) <= 16
+    # a grown machine finishes the same closed-loop burst sooner
+    assert rep_g.makespan_modeled_ns < rep_f.makespan_modeled_ns
+    assert len(rep_g.records) == 8
+    assert rep_g.total_edges == pytest.approx(rep_f.total_edges)
+    assert eng_g.pool.available == eng_g.pool.capacity
+
+
+def test_governor_shrinks_through_idle_gap(medium_rmat):
+    """Two bursts with a long idle gap: the heartbeat keeps the governor
+    ticking through the gap (no session events fire there), so capacity
+    drawdown reaches p_min before the second burst."""
+    arrivals = [0.0, 1e4, 8e6, 8.01e6]
+    gov = CapacityGovernor(p_min=2, p_max=8, window_ns=5e4, cooldown_ns=1e5,
+                           shrink_util=0.6)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat),
+        sessions=4,
+        queries_per_session=1,
+        arrivals=arrivals,
+        governor=gov,
+    )
+    assert rep.shrink_events > 0
+    assert min(c for _, c in rep.capacity_timeline) == 2  # reached p_min
+    assert all(2 <= c <= 8 for _, c in rep.capacity_timeline)
+    assert len(rep.records) == 4 and all(r.finished_ns > 0 for r in rep.records)
+    assert eng.pool.available == eng.pool.capacity
+
+
+def test_governor_hysteresis_spaces_actions():
+    """Resize actions must be separated by at least the cooldown."""
+    cfg = GovernorConfig(p_min=2, p_max=16, window_ns=5e4, cooldown_ns=2e5)
+    gov = CapacityGovernor(cfg)
+    from repro.graph import rmat_graph
+
+    g = rmat_graph(11, seed=3)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
+    rep = eng.run_sessions(_mk_pr(g), sessions=8, queries_per_session=2, governor=gov)
+    times = [t for t, *_ in rep.resize_events]
+    assert all(b - a >= cfg.cooldown_ns for a, b in zip(times, times[1:]))
+
+
+def test_governor_disabled_and_inert_are_bit_identical(medium_rmat):
+    """governor=None and a governor whose thresholds can never fire must
+    produce identical scheduling decisions (trace-for-trace)."""
+    eng0 = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep0 = eng0.run_sessions(_mk_pr(medium_rmat), sessions=6, queries_per_session=1)
+
+    inert = CapacityGovernor(p_min=4, p_max=4, window_ns=1e5, cooldown_ns=1e5)
+    eng1 = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep1 = eng1.run_sessions(
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, governor=inert
+    )
+    assert rep1.resize_events == [] and rep1.preemptions == []
+    assert [r.traces for r in rep0.records] == [r.traces for r in rep1.records]
+    assert rep0.makespan_modeled_ns == pytest.approx(rep1.makespan_modeled_ns)
+    assert rep0.total_edges == rep1.total_edges
+
+
+# ---------------- tentpole: per-priority admission quotas ----------------
+
+def test_class_quota_blocks_class_not_others():
+    from types import SimpleNamespace
+
+    ctrl = AdmissionController(class_quotas={0: 2})
+    pool = WorkerPool(16)
+    assert ctrl.try_admit(pool, priority=0)
+    assert ctrl.try_admit(pool, priority=0)
+    assert not ctrl.try_admit(pool, priority=0)  # class 0 at quota
+    assert ctrl.try_admit(pool, priority=1)      # class 1 unaffected
+    assert ctrl.inflight == 3
+    # a waiting class-0 session is skipped, class-1 behind it admitted
+    low, high = SimpleNamespace(priority=0), SimpleNamespace(priority=1)
+    ctrl.enqueue(low)
+    ctrl.enqueue(high)
+    admitted = ctrl.drain(pool)
+    assert admitted == [high]
+    assert ctrl.waiting_count == 1  # low still queued, in order
+    # releasing a class-0 slot admits the skipped waiter
+    assert ctrl.release(pool, priority=0) == [low]
+    assert ctrl.inflight_by_class[0] == 2
+
+
+def test_class_quota_validation_and_reset():
+    with pytest.raises(ValueError):
+        AdmissionController(class_quotas={0: 0})
+    ctrl = AdmissionController(class_quotas={0: 1})
+    pool = WorkerPool(4)
+    assert ctrl.try_admit(pool, priority=0)
+    ctrl.reset()
+    assert ctrl.inflight == 0 and not ctrl.inflight_by_class
+
+
+def test_engine_honours_class_quotas(medium_rmat):
+    """With a low-priority quota of 1, at most one low-priority session may
+    be in flight at any instant even while the pool could admit more."""
+    counts = {"low": 0, "max_low": 0}
+
+    class Probe(AdmissionController):
+        def _admit_one(self, priority):
+            super()._admit_one(priority)
+            counts["max_low"] = max(counts["max_low"], self.inflight_by_class[0])
+
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=8,
+        policy="scheduler",
+        admission=Probe(class_quotas={0: 1}),
+    )
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat),
+        sessions=6,
+        queries_per_session=1,
+        priorities=lambda sid: 1 if sid < 2 else 0,
+    )
+    assert len(rep.records) == 6  # everyone still ran (quota delays, not drops)
+    assert counts["max_low"] == 1
+
+
+# ---------------- tentpole: preemption ----------------
+
+def _hog_and_sprinter(graph):
+    def mk(s, q):
+        iters = 6 if s == 0 else 2
+        return PageRankExecutor(graph, mode="pull", max_iters=iters, tol=0)
+
+    return mk
+
+
+def test_preemption_frees_workers_for_high_priority(medium_rmat):
+    """A low-priority hog holding the whole pool is fenced at its next
+    package boundary when a high-priority arrival parks with zero grant; the
+    high-priority query's latency drops, and no work is lost."""
+    results = {}
+    for preempt in (False, True):
+        gov = CapacityGovernor(
+            p_min=8, p_max=8, window_ns=1e5, cooldown_ns=1e5, preempt=preempt
+        )
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+        rep = eng.run_sessions(
+            _hog_and_sprinter(medium_rmat),
+            sessions=2,
+            queries_per_session=1,
+            priorities=[0, 1],
+            arrivals=[0.0, 5_000.0],
+            governor=gov,
+        )
+        assert eng.pool.available == eng.pool.capacity
+        results[preempt] = rep
+    off, on = results[False], results[True]
+    assert off.preemptions == []
+    assert len(on.preemptions) >= 1
+    assert sum(tr.preempted for r in on.records for tr in r.traces) >= 1
+    hi_off = [r for r in off.records if r.priority == 1][0]
+    hi_on = [r for r in on.records if r.priority == 1][0]
+    assert hi_on.latency_ns < hi_off.latency_ns
+    # work conservation: both variants process every edge
+    assert on.total_edges == pytest.approx(off.total_edges)
+
+
+def test_preempted_victim_still_completes(medium_rmat):
+    gov = CapacityGovernor(p_min=8, p_max=8, window_ns=1e5, cooldown_ns=1e5,
+                           preempt=True)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    rep = eng.run_sessions(
+        _hog_and_sprinter(medium_rmat),
+        sessions=2,
+        queries_per_session=1,
+        priorities=[0, 1],
+        arrivals=[0.0, 5_000.0],
+        governor=gov,
+    )
+    victim = [r for r in rep.records if r.priority == 0][0]
+    assert victim.finished_ns > 0
+    assert victim.edges == pytest.approx(medium_rmat.num_edges * 6)
+
+
+def test_preempt_fence_cleared_when_donation_completes_run():
+    """Regression: a fence set just before a thief's donation emptied the
+    victim's range was never cleared (``done`` short-circuited ahead of the
+    fence check), so the stale flag blocked the governor's
+    one-fence-in-flight guard for the rest of the victim's join."""
+    from repro.core import PackageScheduler, ThreadBounds, make_packages
+
+    pool = WorkerPool(8)
+    taken = pool.request(7)  # 1 worker left → sequential grind
+    b = ThreadBounds(
+        t_min=4, t_max=8, n_packages=8, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(pkgs, b, stealable=True)
+    srun.next_step()
+    assert srun.preempt()  # fence set while the run still has a backlog
+    assert srun.donate(100).size > 0  # thief claims the entire remainder
+    assert srun.done
+    assert srun.next_step() is None
+    assert not srun.preempt_pending  # dead fence cleared at the boundary
+    assert not srun.preemptible
+    srun.close()
+    assert not srun.preempt_pending
+    srun.donation_done()
+    pool.release(taken)
+    assert pool.available == 8
+
+
+# ---------------- tentpole: stealing under governed capacity ----------------
+
+def test_steal_budget_observes_governed_capacity():
+    from repro.core import StealRegistry
+
+    pool = WorkerPool(8, high_priority_reserve=2)
+    assert StealRegistry.steal_budget(pool, priority=0) == 6
+    assert StealRegistry.steal_budget(pool, priority=1) == 8
+    taken = pool.request(6, priority=1)
+    assert StealRegistry.steal_budget(pool, priority=1) == 2
+    # a shrink under load leaves debt: no second gang may launch on an
+    # over-committed machine
+    pool.resize(4)
+    assert pool.shrink_debt == 2
+    assert StealRegistry.steal_budget(pool, priority=1) == 0
+    pool.release(taken)
+    assert StealRegistry.steal_budget(pool, priority=1) == 4
+
+
+def test_steal_and_governor_compose(medium_rmat):
+    """Skewed mix with both stealing and an elastic governor: all work
+    completes exactly once and the pool accounting stays clean."""
+    deg = np.asarray(medium_rmat.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(medium_rmat, mode="pull", max_iters=6, tol=0)
+        return BFSExecutor(medium_rmat, int(hubs[s % 8]))
+
+    gov = CapacityGovernor(p_min=4, p_max=16, window_ns=5e4, cooldown_ns=1e5)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    rep = eng.run_sessions(
+        mk, sessions=8, queries_per_session=1, steal=True, governor=gov
+    )
+    heavy = [r for r in rep.records if r.algorithm == "pagerank_pull"][0]
+    assert heavy.edges == pytest.approx(medium_rmat.num_edges * 6)
+    assert all(r.finished_ns > 0 for r in rep.records)
+    assert eng.pool.available == eng.pool.capacity
+
+
+# ---------------- fig15 acceptance: burst mix wins ----------------
+
+def test_burst_mix_governed_beats_fixed(medium_rmat):
+    """The fig15 claim at test scale: on a bursty mixed-priority open-loop
+    stream, the governed run cuts p95 high-priority latency and raises
+    provisioned-time utilization vs. the fixed-P baseline."""
+    deg = np.asarray(medium_rmat.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s % 3 == 0:
+            return BFSExecutor(medium_rmat, int(hubs[s % 8]))
+        return PageRankExecutor(medium_rmat, mode="pull", max_iters=4, tol=0)
+
+    rng = np.random.default_rng(7)
+    half = np.cumsum(rng.exponential(1e9 / 30_000.0, size=12))
+    arrivals = np.concatenate([half, 2.5e6 + np.cumsum(rng.exponential(1e9 / 30_000.0, size=12))])
+    prio = lambda sid: 1 if sid % 3 == 0 else 0  # noqa: E731
+
+    reps = {}
+    for governed in (False, True):
+        gov = None
+        adm = AdmissionController()
+        if governed:
+            gov = CapacityGovernor(
+                p_min=4, p_max=32, window_ns=1e5, cooldown_ns=1.5e5,
+                shrink_util=0.5, grow_step=32, preempt=True,
+            )
+            adm = AdmissionController(class_quotas={0: 12})
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4, pool_capacity=16, policy="scheduler", admission=adm
+        )
+        reps[governed] = eng.run_sessions(
+            mk, sessions=24, queries_per_session=1, arrivals=arrivals,
+            priorities=prio, steal=True, governor=gov,
+        )
+        assert eng.pool.available == eng.pool.capacity
+    fixed, governed = reps[False], reps[True]
+    hi_f = fixed.latency_percentiles_by_priority()[1]["p95"]
+    hi_g = governed.latency_percentiles_by_priority()[1]["p95"]
+    assert hi_g < hi_f
+    assert governed.mean_utilization() > fixed.mean_utilization()
+    assert governed.total_edges == pytest.approx(fixed.total_edges)
+
+
+# ---------------- satellite: EngineReport guards ----------------
+
+def _empty_report(**kw):
+    defaults = dict(
+        records=[], makespan_modeled_ns=0.0, makespan_measured_ns=0.0,
+        pool_capacity=0,
+    )
+    defaults.update(kw)
+    return EngineReport(**defaults)
+
+
+def test_report_rates_guard_empty_and_zero_duration():
+    """Regression: every rate / percentile / mean property must return 0.0
+    on empty timelines and zero-duration runs instead of raising."""
+    rep = _empty_report()
+    assert rep.throughput_modeled() == 0.0
+    assert rep.throughput_measured() == 0.0
+    assert rep.steal_rate() == 0.0
+    assert rep.resize_rate() == 0.0
+    assert rep.preemption_rate() == 0.0
+    assert rep.mean_utilization() == 0.0
+    assert rep.mean_inflight() == 0.0
+    assert rep.max_inflight == 0
+    assert rep.mean_capacity() == 0.0
+    assert rep.latency_percentiles() == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert rep.latency_percentiles_by_session() == {}
+    assert rep.latency_percentiles_by_priority() == {}
+    assert rep.steal_timeline() == []
+    assert rep.total_stolen == 0
+
+    # zero-duration: all samples at one instant, capacity present
+    rep = _empty_report(pool_capacity=4)
+    rep.utilization = [(5.0, 2), (5.0, 4)]
+    rep.inflight = [(5.0, 1), (5.0, 3)]
+    rep.capacity_timeline = [(5.0, 4)]
+    assert 0.0 <= rep.mean_utilization() <= 1.0
+    assert rep.mean_inflight() == 2.0
+    assert rep.mean_capacity() == 4.0
+
+    # elastic timeline with a degenerate (zero-width) utilization span
+    rep.capacity_timeline = [(5.0, 4), (5.0, 8)]
+    assert 0.0 <= rep.mean_utilization() <= 1.0
+
+
+def test_report_single_sample_timelines():
+    rep = _empty_report(pool_capacity=8)
+    rep.utilization = [(0.0, 3)]
+    rep.inflight = [(0.0, 2)]
+    assert rep.mean_utilization() == 0.0  # one sample spans no time
+    assert rep.mean_inflight() == 2.0
+    assert rep.max_inflight == 2

@@ -1,0 +1,72 @@
+"""Property test: WorkerPool accounting invariants under random
+interleavings of request / release / resize (hypothesis when installed,
+deterministic seeded fallback otherwise — see tests/_hypothesis_compat.py).
+
+Invariants the elastic governor builds on:
+  * a grant never exceeds the request, and is never negative;
+  * ``in_use <= capacity + shrink_debt`` at all times (debt is the only
+    over-commit, and only a shrink under load creates it);
+  * ``available`` is exactly ``max(capacity - in_use, 0)``;
+  * the reserve can never permanently starve priority-0 work: once all
+    grants are returned, a priority-0 request gets at least one worker;
+  * the *requested* reserve survives arbitrary shrink/grow sequences.
+"""
+import numpy as np
+
+from repro.core import WorkerPool
+
+from _hypothesis_compat import given, settings, st
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    capacity=st.integers(1, 32),
+    reserve_frac=st.floats(0.0, 0.9),
+)
+def test_pool_invariants_under_random_interleavings(seed, capacity, reserve_frac):
+    reserve = min(int(capacity * reserve_frac), capacity - 1)
+    pool = WorkerPool(capacity, high_priority_reserve=reserve)
+    rng = np.random.default_rng(seed)
+    outstanding = []  # grants we hold (sizes), to release later
+
+    for _ in range(200):
+        op = rng.integers(0, 4)
+        if op == 0:  # request
+            n = int(rng.integers(1, 2 * capacity + 1))
+            prio = int(rng.integers(0, 2))
+            grant = pool.request(n, priority=prio)
+            assert 0 <= grant <= n  # grants never exceed requests
+            if grant:
+                outstanding.append(grant)
+        elif op == 1 and outstanding:  # release one held grant
+            pool.release(outstanding.pop(int(rng.integers(0, len(outstanding)))))
+        elif op == 2:  # partial release of a held grant
+            if outstanding:
+                i = int(rng.integers(0, len(outstanding)))
+                part = int(rng.integers(1, outstanding[i] + 1))
+                pool.release(part)
+                if outstanding[i] == part:
+                    outstanding.pop(i)
+                else:
+                    outstanding[i] -= part
+        else:  # resize
+            pool.resize(int(rng.integers(1, 2 * capacity + 1)))
+
+        held = sum(outstanding)
+        assert pool.in_use == held
+        assert pool.in_use <= pool.capacity + pool.shrink_debt
+        assert pool.available == max(pool.capacity - held, 0)
+        assert 0 <= pool.high_priority_reserve < pool.capacity or (
+            pool.high_priority_reserve == 0 and pool.capacity == 1
+        )
+        # the effective reserve is the requested one clamped below capacity
+        assert pool.high_priority_reserve == min(reserve, pool.capacity - 1)
+
+    # drain everything: the reserve must not have starved priority-0 work
+    for g in outstanding:
+        pool.release(g)
+    assert pool.in_use == 0
+    assert pool.available == pool.capacity
+    assert pool.request(1, priority=0) == 1  # priority-0 never starved
+    pool.release(1)
