@@ -28,9 +28,22 @@ import sys
 
 
 def load_rows(path: str) -> dict[str, dict]:
+    """Load a trajectory file, raising ``ValueError`` on any malformed shape
+    (invalid JSON, non-dict document, rows without name/modeled_eps) so the
+    gate can distinguish *broken input* (exit 2) from a regression (exit 1)."""
     with open(path) as f:
-        data = json.load(f)
-    return {r["name"]: r for r in data.get("rows", [])}
+        try:
+            data = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}: invalid JSON ({e})") from e
+    if not isinstance(data, dict) or not isinstance(data.get("rows", []), list):
+        raise ValueError(f"{path}: expected an object with a 'rows' list")
+    rows: dict[str, dict] = {}
+    for r in data.get("rows", []):
+        if not isinstance(r, dict) or "name" not in r or "modeled_eps" not in r:
+            raise ValueError(f"{path}: malformed row {r!r}")
+        rows[r["name"]] = r
+    return rows
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -45,8 +58,12 @@ def main(argv: list[str] | None = None) -> int:
     )
     args = ap.parse_args(argv)
 
-    base = load_rows(args.baseline)
-    fresh = load_rows(args.fresh)
+    try:
+        base = load_rows(args.baseline)
+        fresh = load_rows(args.fresh)
+    except (OSError, ValueError) as e:
+        print(f"trend gate: cannot read trajectories: {e}", file=sys.stderr)
+        return 2
     shared = sorted(set(base) & set(fresh))
     if not shared:
         print("trend gate: no shared rows to compare", file=sys.stderr)

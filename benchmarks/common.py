@@ -80,6 +80,8 @@ def run_sessions(
     pool_capacity: int | None = None,
     admission=None,
     governor=None,
+    fuse: bool = False,
+    fusion=None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
@@ -88,7 +90,8 @@ def run_sessions(
     defaults to the module-level toggle (run.py --steal/--no-steal).
     ``pool_capacity``/``admission``/``governor`` let figures pin the machine
     size, install per-priority admission quotas, and enable the elastic
-    capacity governor (fig15)."""
+    capacity governor (fig15). ``fuse``/``fusion`` enable same-graph gang
+    fusion (fig16)."""
     kwargs = {}
     if pool_capacity is not None:
         kwargs["pool_capacity"] = pool_capacity
@@ -108,6 +111,8 @@ def run_sessions(
         priorities=priorities,
         steal=STEAL if steal is None else steal,
         governor=governor,
+        fuse=fuse,
+        fusion=fusion,
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep.throughput_modeled(), rep

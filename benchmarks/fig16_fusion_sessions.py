@@ -1,0 +1,74 @@
+"""Fig. 16 (beyond the paper): gang fusion on a same-graph session burst.
+
+N PageRank + N BFS sessions land on one sf13 graph at t=0, the heavy
+same-algorithm class leading the burst — the query-locality extreme
+(Q-Graph, arXiv:1805.11900): every PR session derives the *same* plan from
+the same topology, yet the unfused engine schedules them as independent
+gangs. Under that contention the first session checks out its full ``T_max``
+and the rest park, so the burst degrades into serialized wide gangs, each
+paying its own per-iteration gang launch (``C_T_overhead·T +
+C_para_startup``) and its own preparation pass. The ``fused`` variant runs
+the same workload with ``run_sessions(fuse=True)``: co-staged same-algorithm
+sessions merge into one gang per (graph, algorithm) — one grant request, one
+interleaved package table, one launch amortized across members — and the
+fused trace is split back per query so the per-session rows stay truthful.
+
+Both variants are always emitted so ``BENCH_sessions.json`` carries the
+comparison and ``check_trend.py`` gates the modeled PEPS rows (fused is
+expected well above +5% over unfused; wall time is reported, never gated).
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import FusionConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import rmat_graph
+
+from . import common
+from .common import Row
+
+N_EACH = 6      # PR sessions + BFS sessions (2·N_EACH total)
+POOL = 16
+PR_ITERS = 4
+HOLD_NS = 2e4   # rendezvous window: catches boundary stragglers
+
+
+def _make_mk(graph):
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s < N_EACH:  # the same-algorithm burst that leads the arrival order
+            return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 8]))
+
+    return mk
+
+
+def run() -> list[Row]:
+    g = rmat_graph(13, seed=3)
+    mk = _make_mk(g)
+    n = 2 * N_EACH
+    rows: list[Row] = []
+    for label, fuse in (("unfused", False), ("fused", True)):
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
+        t0 = time.perf_counter_ns()
+        rep = eng.run_sessions(
+            mk,
+            sessions=n,
+            queries_per_session=1,
+            steal=common.STEAL,
+            fuse=fuse,
+            fusion=FusionConfig(hold_ns=HOLD_NS) if fuse else None,
+        )
+        us = (time.perf_counter_ns() - t0) / 1e3
+        base = f"fig16/fuse_burst/sf13/{label}/s{n}"
+        rows.append((base, us, rep.throughput_modeled()))
+        rows.append((f"{base}/mean_util", us, rep.mean_utilization()))
+        rows.append((f"{base}/fusion_groups", us, float(len(rep.fusion_events))))
+        rows.append((f"{base}/fused_packages", us, float(rep.total_fused)))
+        rows.append(
+            (f"{base}/p95_latency_us", us, rep.latency_percentiles()["p95"] / 1e3)
+        )
+    return rows

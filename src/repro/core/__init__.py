@@ -49,7 +49,8 @@ from .scheduler import (
     WorkerPool,
     largest_pow2_leq,
 )
-from .stealing import StealEntry, StealRegistry
+from .stealing import StealEntry, StealRegistry, graph_identity
+from .fusion import FusionConfig, FusionGroup, FusionMember
 from .governor import CapacityGovernor, GovernorConfig
 from .session import (
     AdmissionController,
@@ -76,7 +77,8 @@ __all__ = [
     "PreparedIteration", "prepare_iteration",
     "PackageRun", "PackageScheduler", "ScheduleRun", "ScheduleStep",
     "ScheduleTrace", "STALL_STEP", "WorkerPool", "largest_pow2_leq",
-    "StealEntry", "StealRegistry",
+    "StealEntry", "StealRegistry", "graph_identity",
+    "FusionConfig", "FusionGroup", "FusionMember",
     "CapacityGovernor", "GovernorConfig",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
     "QueryExecutor", "QueryRecord",

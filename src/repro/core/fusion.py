@@ -1,0 +1,333 @@
+"""Gang fusion: co-schedule same-graph sessions as one wide gang (ROADMAP
+top item).
+
+The multi-query engine derives parallelization constraints *per query*, so N
+concurrent sessions running the same algorithm on the same graph are
+scheduled as N independent gangs — N grant requests, N preparation passes,
+and N per-iteration gang launches, even though they traverse identical
+topology. Query-locality systems (Q-Graph, arXiv:1805.11900; the two-level
+concurrent scheduler of arXiv:1806.00777) co-locate such queries instead;
+:class:`FusionGroup` is the analogue for this runtime.
+
+Protocol (driven by ``MultiQueryEngine.run_sessions(fuse=True)``):
+
+  * a session reaching an iteration boundary with a parallel-worthy plan
+    *stages* itself under ``(graph_key, algorithm)`` instead of starting its
+    own :class:`~.scheduler.ScheduleRun`; the first stager arms a flush event
+    ``hold_ns`` later (the gang-formation rendezvous — 0 by default, which
+    still catches the common case of sessions synchronized by arrival or by
+    a previous fused iteration);
+  * at the flush, if ≥ 2 sessions staged and their summed ``T_max`` exceeds
+    the pool capacity (none of them could be granted its full width alongside
+    the others anyway), they fuse: one :class:`FusionGroup` interleaves the
+    members' package lists round-robin into a single fused id space, one
+    ``ScheduleRun`` executes it under one grant whose width is the capped sum
+    of the members' ``T_max`` — otherwise everyone proceeds solo, unchanged;
+  * every dispatched fused batch is split back per member
+    (:meth:`FusionGroup.split`): the member's executor runs its own package
+    ids, and per-member modeled/measured time, trace entries and
+    ``fused_packages`` counters accumulate on the member — ``EngineReport``
+    stays per-session truthful;
+  * the gang launch overhead (``C_T_overhead·T + C_para_startup`` per
+    iteration in the cost model) is charged **once** for the fused run and
+    split across members pro rata — this is the modeled substance of fusion:
+    one gang spin-up serves N iterations instead of N;
+  * fused runs keep the full §4.3 machinery: the victim fence makes them
+    stealable and preemptible at package boundaries. A governor fence
+    *de-fuses* the gang — each member resumes independently over its
+    residual package ids — and a member whose packages drain early leaves
+    the gang at the next package boundary while the rest keep running.
+
+The group holds no engine state beyond opaque ``payload`` handles, mirroring
+the deliberately decentralized :class:`~.stealing.StealRegistry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .bounds import ThreadBounds
+from .contention import HardwareModel
+from .cost_model import c_vertex_total
+from .descriptors import AlgorithmDescriptor
+from .scheduler import PackageRun, ScheduleTrace
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionConfig:
+    """Knobs for gang formation.
+
+    ``hold_ns`` is the rendezvous window on the modeled clock: the first
+    session staging under a key waits this long for co-arrivals before the
+    flush decides fuse-vs-solo. 0 fuses only sessions that reach an iteration
+    boundary at the same modeled instant (burst arrivals, members released
+    together by a previous fused iteration); a small positive hold also
+    catches stragglers at the cost of added latency. ``max_members`` caps the
+    gang width so a huge burst forms several gangs instead of one unbounded
+    one (groups are cut FIFO in staging order)."""
+
+    hold_ns: float = 0.0
+    max_members: int = 8
+
+    def __post_init__(self) -> None:
+        if self.hold_ns < 0:
+            raise ValueError("hold_ns must be >= 0")
+        if self.max_members < 2:
+            raise ValueError("max_members must be >= 2")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPackages:
+    """Duck-typed :class:`~.packaging.WorkPackages` stand-in for the fused id
+    space: fused id *i* is the *i*-th slot of the round-robin interleave of
+    the members' package orders. Only the surface :class:`ScheduleRun` reads
+    (``order``/``n_packages``) exists — executors never see fused ids, the
+    group splits every batch back to member-local ids first."""
+
+    order: np.ndarray
+    n_packages: int
+
+
+@dataclasses.dataclass
+class FusionMember:
+    """One session's share of a fused gang.
+
+    ``order`` is the member's own package order; ``covered[k]`` flips when
+    position *k* has been dispatched by a committed gang step or donated to a
+    thief, so ``residual()`` (the de-fuse handover) and completion checks are
+    exact. Costs and trace entries accumulate here and are booked into the
+    member's ``QueryRecord`` when the member leaves the gang."""
+
+    payload: Any                 # engine-side session state (opaque)
+    prep: Any                    # the member's PreparedIteration
+    bounds: ThreadBounds         # the member's own solo bounds
+    order: np.ndarray            # member-local package ids, member's order
+    covered: np.ndarray          # [n] bool per position
+    trace: ScheduleTrace
+    pending_stolen: int = 0      # donated batches not yet returned
+    modeled_ns: float = 0.0
+    measured_ns: float = 0.0
+    finished: bool = False       # iteration accounted, member left the gang
+    defused: bool = False        # gang dissolved; member runs its residual
+
+    @property
+    def n_packages(self) -> int:
+        return int(self.order.size)
+
+    @property
+    def complete(self) -> bool:
+        """Every position dispatched-and-committed or returned by a thief."""
+        return (
+            not self.finished
+            and bool(self.covered.all())
+            and self.pending_stolen == 0
+        )
+
+
+class FusionGroup:
+    """The fused iteration of ≥ 2 same-(graph, algorithm) sessions."""
+
+    def __init__(
+        self,
+        members: list[FusionMember],
+        member_of: np.ndarray,
+        pos_of: np.ndarray,
+        bounds: ThreadBounds,
+    ):
+        self.members = members
+        self._member_of = member_of   # [n_fused] member index per fused id
+        self._pos_of = pos_of         # [n_fused] member-local position
+        self.bounds = bounds
+        self.n_packages = int(member_of.size)
+        self.packages = FusedPackages(
+            order=np.arange(self.n_packages, dtype=np.int64),
+            n_packages=self.n_packages,
+        )
+
+    @classmethod
+    def build(
+        cls, staged: list[tuple[Any, Any, ThreadBounds]], *, capacity: int
+    ) -> "FusionGroup":
+        """Fuse ``(payload, prep, bounds)`` triples into one group.
+
+        The fused order interleaves member package lists round-robin (each in
+        its member's own, possibly heavy-first, order) so the gang drains all
+        members together and an uneven member finishes early instead of
+        serializing member-after-member. The fused width request is the
+        members' summed ``T_max`` capped at the pool capacity — one grant
+        request for the whole gang."""
+        members: list[FusionMember] = []
+        for payload, prep, bounds in staged:
+            pkgs = prep.packages
+            order = np.asarray(pkgs.order[: pkgs.n_packages], dtype=np.int64)
+            members.append(
+                FusionMember(
+                    payload=payload,
+                    prep=prep,
+                    bounds=bounds,
+                    order=order,
+                    covered=np.zeros(order.size, dtype=bool),
+                    trace=ScheduleTrace(requested=0),
+                )
+            )
+        member_of: list[int] = []
+        pos_of: list[int] = []
+        longest = max(m.n_packages for m in members)
+        for r in range(longest):
+            for i, m in enumerate(members):
+                if r < m.n_packages:
+                    member_of.append(i)
+                    pos_of.append(r)
+        t_max = min(sum(max(m.bounds.t_max, 1) for m in members), capacity)
+        t_min = min(max(m.bounds.t_min, 2) for m in members)
+        fused_bounds = dataclasses.replace(
+            members[0].bounds,
+            parallel=True,
+            t_min=t_min,
+            t_max=max(t_max, t_min),
+            n_packages=len(member_of),
+            cost_seq_ns=sum(m.bounds.cost_seq_ns for m in members),
+            cost_par_ns=sum(m.bounds.cost_par_ns for m in members),
+        )
+        for m in members:
+            m.trace.requested = fused_bounds.t_max
+        return cls(
+            members,
+            np.asarray(member_of, dtype=np.int64),
+            np.asarray(pos_of, dtype=np.int64),
+            fused_bounds,
+        )
+
+    # ------------------------------------------------------------- splitting
+    def active(self) -> list[FusionMember]:
+        return [m for m in self.members if not m.finished]
+
+    def split(
+        self, fused_ids: np.ndarray
+    ) -> list[tuple[FusionMember, np.ndarray, np.ndarray]]:
+        """Map a fused batch back to ``(member, positions, local_ids)``
+        shares, preserving dispatch order within each member."""
+        out = []
+        midx = self._member_of[fused_ids]
+        for i in np.unique(midx):
+            sel = fused_ids[midx == i]
+            positions = self._pos_of[sel]
+            member = self.members[int(i)]
+            out.append((member, positions, member.order[positions]))
+        return out
+
+    # ------------------------------------------------------------ accounting
+    def commit_step(
+        self,
+        member: FusionMember,
+        positions: np.ndarray,
+        local_ids: np.ndarray,
+        mode: str,
+        workers: int,
+        modeled_ns: float,
+        measured_ns: float,
+    ) -> None:
+        """Book one completed gang-step share into the member (split-back)."""
+        member.covered[positions] = True
+        member.modeled_ns += modeled_ns
+        member.measured_ns += measured_ns
+        member.trace.runs.extend(
+            PackageRun(int(p), mode, workers) for p in local_ids
+        )
+        member.trace.fused_packages += int(local_ids.size)
+
+    def mark_donated(
+        self,
+        member: FusionMember,
+        positions: np.ndarray,
+        local_ids: np.ndarray,
+        workers: int,
+    ) -> None:
+        """A thief claimed these positions over the fused run's fence."""
+        member.covered[positions] = True
+        member.pending_stolen += 1
+        member.trace.stolen_packages += int(local_ids.size)
+        member.trace.runs.extend(
+            PackageRun(int(p), "stolen", workers) for p in local_ids
+        )
+
+    def account_stolen(
+        self, member: FusionMember, modeled_ns: float, measured_ns: float
+    ) -> None:
+        """A donated batch returned: book its time, release the join hold."""
+        member.modeled_ns += modeled_ns
+        member.measured_ns += measured_ns
+        member.pending_stolen = max(member.pending_stolen - 1, 0)
+
+    def residual(self, member: FusionMember) -> np.ndarray:
+        """Member-local package ids not yet dispatched or donated — the
+        de-fuse handover, in the member's original order."""
+        return member.order[~member.covered]
+
+
+# ---------------------------------------------------------------- cost split
+def member_work_ns(
+    desc: AlgorithmDescriptor,
+    hw: HardwareModel,
+    work: Any,
+    t: int,
+    fraction: float,
+) -> float:
+    """Work-only modeled time of a member's share of one gang step: the
+    iteration cost at width ``t`` *without* the per-iteration launch terms
+    (those are charged once per gang step via :func:`gang_overhead_ns`)."""
+    cv = c_vertex_total(desc, hw, work, t)
+    total = work.frontier * cv
+    if t > 1:
+        total /= t
+    return total * fraction
+
+
+def gang_overhead_ns(hw: HardwareModel, t: int, k: int, n_fused: int) -> float:
+    """The gang launch overhead slice for a fused step of ``k`` of
+    ``n_fused`` packages at width ``t``: ``C_T_overhead·T + C_para_startup``
+    charged once for the whole fused iteration — N members share one gang
+    spin-up instead of paying one each. Sequential grinding (t ≤ 1) carries
+    no launch overhead, fused or not."""
+    if t <= 1 or n_fused <= 0:
+        return 0.0
+    return (hw.c_thread_overhead_ns * t + hw.c_para_startup_ns) * (k / n_fused)
+
+
+def should_fuse(
+    staged: list[tuple[Any, Any, ThreadBounds]], *, capacity: int
+) -> bool:
+    """Fuse only when the members' summed ``T_max`` exceeds the pool
+    capacity: below that, every staged session can be granted its full width
+    side by side and independent narrow gangs are at least as good — fusing
+    would serialize work that could overlap."""
+    if len(staged) < 2:
+        return False
+    return sum(max(b.t_max, 1) for _, _, b in staged) > capacity
+
+
+def merge_member_trace(fused: ScheduleTrace, solo: ScheduleTrace) -> ScheduleTrace:
+    """Join a member's fused-iteration share with its post-de-fuse residual
+    run into the single per-iteration trace the record keeps."""
+    return ScheduleTrace(
+        requested=max(fused.requested, solo.requested),
+        runs=fused.runs + solo.runs,
+        released_early=solo.released_early,
+        stolen_packages=fused.stolen_packages + solo.stolen_packages,
+        preempted=fused.preempted + solo.preempted,
+        fused_packages=fused.fused_packages,
+    )
+
+
+__all__ = [
+    "FusedPackages",
+    "FusionConfig",
+    "FusionGroup",
+    "FusionMember",
+    "gang_overhead_ns",
+    "member_work_ns",
+    "merge_member_trace",
+    "should_fuse",
+]

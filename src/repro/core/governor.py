@@ -33,7 +33,11 @@ Q-Graph-style locality preferences (arXiv:1805.11900) untouched:
   :class:`~.scheduler.ScheduleRun` (reusing the PR-2 donate/fence boundary:
   no package is interrupted mid-execution). The victim yields its whole
   grant at its next package boundary and re-queues for workers at its own
-  priority.
+  priority. Fused gangs (``core.fusion``) are candidates like any run —
+  their driver's priority is the max of the members', so a gang carrying a
+  high-priority member is never fenced for an equal class — and a landed
+  fence *de-fuses* the gang: the engine dissolves it at the boundary and
+  each member re-queues independently over its residual packages.
 
 The governor is strictly optional: ``run_sessions(governor=None)`` performs
 zero governor calls and keeps every existing path bit-identical.

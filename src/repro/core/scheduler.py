@@ -171,6 +171,9 @@ class ScheduleTrace:
     # times the run was fenced by the capacity governor (grant released at a
     # package boundary to free workers for a waiting high-priority session)
     preempted: int = 0
+    # packages this query executed inside a fused gang (gang fusion: the
+    # per-member split-back of a multi-session ScheduleRun)
+    fused_packages: int = 0
 
     @property
     def parallel_fraction(self) -> float:
@@ -231,7 +234,14 @@ class ScheduleRun:
     down (:meth:`donate`), and the sequential tail is dispatched one package
     per step (instead of as one batch) so the remainder stays claimable while
     the victim grinds. ``next_step`` never crosses the fence, so a claim can
-    never race the victim's own dispatch."""
+    never race the victim's own dispatch.
+
+    ``order`` overrides the dispatch order / package-id universe: gang fusion
+    hands a run the interleaved fused slot ids of several sessions' package
+    lists (``packages`` is then only a duck-typed carrier), and a de-fused
+    member resumes with a run over just its residual package ids. ``packages``
+    only contributes its default order — all batching decisions are made over
+    whatever id list the run was given."""
 
     def __init__(
         self,
@@ -242,13 +252,20 @@ class ScheduleRun:
         seq_package_limit: int = 4,
         priority: int = 0,
         stealable: bool = False,
+        eager_backlog: bool = False,
+        order: np.ndarray | None = None,
+        initial_grant: bool = True,
     ):
         self.pool = pool
         self.bounds = bounds
         self.seq_package_limit = seq_package_limit
         self.priority = priority
         self.stealable = stealable
-        self._order = packages.order[: packages.n_packages]
+        self.eager_backlog = eager_backlog
+        if order is not None:
+            self._order = np.asarray(order, dtype=np.int64)
+        else:
+            self._order = packages.order[: packages.n_packages]
         self._cursor = 0
         self._fence = len(self._order)  # thieves claim from the tail down
         self._donations = 0             # claimed batches not yet executed
@@ -257,9 +274,16 @@ class ScheduleRun:
         self._closed = False
         self._preempt_pending = False   # governor fence: yield at next boundary
         # preparation already decided sequential → take one worker at most
-        self._simple_seq = not bounds.parallel or packages.n_packages <= 1
+        self._simple_seq = not bounds.parallel or len(self._order) <= 1
         self._requested = 1 if self._simple_seq else bounds.t_max
-        self._granted = pool.request(self._requested, priority=priority)
+        # ``initial_grant=False`` starts the run parked with zero workers —
+        # the first ``next_step`` requests at the run's own priority. Used
+        # when a run must NOT synchronously re-absorb capacity another
+        # consumer was just preempted to free (de-fused members re-queue
+        # behind the high-priority session the fence served).
+        self._granted = (
+            pool.request(self._requested, priority=priority) if initial_grant else 0
+        )
         self.trace = ScheduleTrace(requested=self._requested)
 
     @property
@@ -322,16 +346,37 @@ class ScheduleRun:
         return self._granted >= max(self.bounds.t_max, 1)
 
     @property
+    def width_blocked(self) -> bool:
+        """The free pool capacity cannot raise this run's usable (power-of-2)
+        width: absorbing it would only round back down, so idle workers help
+        the system solely as a *second* gang. Distinct from
+        :attr:`width_capped` (grant == T_max) — a run can be width-blocked
+        far below its T_max when the remainder of the pool is fragmented."""
+        usable = largest_pow2_leq(self._granted)
+        if usable < 1:
+            return False
+        return largest_pow2_leq(self._granted + self.pool.available) <= usable
+
+    @property
     def stealable_backlog(self) -> int:
         """Packages a thief may claim right now. Backlog is published while
         the run grinds sequentially (a thief halves the grind) or while it is
         width-capped at T_max (a thief's second gang uses workers the victim
         is not allowed to take) — a parallel run that could still widen keeps
         its packages, since its own grant re-evaluation absorbs freed workers
-        faster than a steal round-trip."""
+        faster than a steal round-trip.
+
+        ``eager_backlog`` runs (fused gangs) additionally publish while
+        merely *width-blocked*: a gang carries several sessions' packages, so
+        idle workers its power-of-2 rounding cannot absorb are better spent
+        on a thief's second gang than left parked until the gang drains."""
         if not self.stealable or self._closed:
             return 0
-        if not (self.grinding or self.width_capped):
+        if not (
+            self.grinding
+            or self.width_capped
+            or (self.eager_backlog and self.width_blocked)
+        ):
             return 0
         return max(self._fence - self._cursor, 0)
 
@@ -464,9 +509,20 @@ class PackageScheduler:
         self.priority = priority
 
     def begin(
-        self, packages: WorkPackages, bounds: ThreadBounds, *, stealable: bool = False
+        self,
+        packages: WorkPackages,
+        bounds: ThreadBounds,
+        *,
+        stealable: bool = False,
+        eager_backlog: bool = False,
+        order: np.ndarray | None = None,
+        initial_grant: bool = True,
     ) -> ScheduleRun:
-        """Start a stepwise run (requests the initial grant now)."""
+        """Start a stepwise run (requests the initial grant now unless
+        ``initial_grant=False``, which starts it parked). ``order``
+        restricts/overrides the dispatched package ids (fused gangs, residual
+        runs of de-fused members); ``eager_backlog`` loosens the steal fence
+        for runs carrying several sessions' packages."""
         return ScheduleRun(
             self.pool,
             packages,
@@ -474,6 +530,9 @@ class PackageScheduler:
             seq_package_limit=self.seq_package_limit,
             priority=self.priority,
             stealable=stealable,
+            eager_backlog=eager_backlog,
+            order=order,
+            initial_grant=initial_grant,
         )
 
     def run(

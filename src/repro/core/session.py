@@ -29,6 +29,13 @@ in-flight sessions by pool pressure, open-loop :class:`PoissonArrivals`
 session streams, per-query priority levels honoured by
 ``WorkerPool.request``, and an :class:`EngineReport` with latency
 percentiles and a pool-utilization timeline.
+
+``run_sessions(fuse=True)`` adds gang fusion (``core.fusion``): sessions
+running the same algorithm on the same graph rendezvous at iteration
+boundaries and — when their summed ``T_max`` exceeds the pool capacity —
+merge their next iterations into one fused ``ScheduleRun`` whose trace is
+split back per member, so the per-session records stay exact while the gang
+launch overhead is paid once instead of once per member.
 """
 from __future__ import annotations
 
@@ -46,6 +53,15 @@ from .feedback import CostFeedback
 from .contention import HardwareModel
 from .cost_model import iteration_cost_ns
 from .descriptors import AlgorithmDescriptor
+from .fusion import (
+    FusionConfig,
+    FusionGroup,
+    FusionMember,
+    gang_overhead_ns,
+    member_work_ns,
+    merge_member_trace,
+    should_fuse,
+)
 from .packaging import WorkPackages
 from .scheduler import (
     PackageScheduler,
@@ -55,7 +71,7 @@ from .scheduler import (
     WorkerPool,
     largest_pow2_leq,
 )
-from .stealing import StealRegistry
+from .stealing import StealRegistry, graph_identity
 from .timeline import step_integral, step_mean
 
 if TYPE_CHECKING:  # pragma: no cover - annotation-only import (no cycle)
@@ -99,6 +115,10 @@ class QueryRecord:
     finished_ns: float = 0.0      # modeled clock: query completed
     # packages of this query executed by thief sessions (work-stealing)
     stolen_packages: int = 0
+    # packages of this query executed inside a fused same-graph gang (gang
+    # fusion); the per-member split-back keeps this record's modeled time,
+    # edges and traces exact even when the iteration ran co-scheduled
+    fused_packages: int = 0
     traces: list[ScheduleTrace] = dataclasses.field(default_factory=list)
 
     @property
@@ -138,6 +158,12 @@ class EngineReport:
     )
     # (modeled time_ns, preempted session id) per governor fence
     preemptions: list[tuple[float, int]] = dataclasses.field(default_factory=list)
+    # (modeled time_ns, driver id, member sessions, fused packages) per gang
+    # formed by gang fusion (driver ids are negative — they are scheduling
+    # entities, not sessions, and never appear in ``records``)
+    fusion_events: list[tuple[float, int, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def total_edges(self) -> float:
@@ -241,6 +267,20 @@ class EngineReport:
         if self.makespan_modeled_ns <= 0:
             return 0.0
         return len(self.preemptions) / (self.makespan_modeled_ns * 1e-9)
+
+    # -------------------------------------------------- gang fusion
+    @property
+    def total_fused(self) -> int:
+        """Packages executed inside fused same-graph gangs, across all
+        queries (== the sum of per-record ``fused_packages`` booked at gang
+        formation time; the split-back keeps the per-record counts exact)."""
+        return sum(r.fused_packages for r in self.records)
+
+    def fusion_rate(self) -> float:
+        """Fused packages per modeled second across the whole run."""
+        if self.makespan_modeled_ns <= 0:
+            return 0.0
+        return self.total_fused / (self.makespan_modeled_ns * 1e-9)
 
     # -------------------------------------------------- work-stealing
     @property
@@ -430,6 +470,15 @@ class _SessionState:
     graph_key: Any = None
     steal: "_StealJob | None" = None
     joining: bool = False
+    # gang fusion: ``fusion`` marks a *driver* state (the synthetic entity
+    # that steps a FusionGroup's fused run; sid < 0, never in ``records``);
+    # ``fused_member`` marks a real session whose current iteration rides
+    # (or rode — de-fuse keeps it set until accounting) a fused gang;
+    # ``pending_shares`` is the driver's in-flight gang step, committed to
+    # the members when its completion event fires
+    fusion: "FusionGroup | None" = None
+    fused_member: "FusionMember | None" = None
+    pending_shares: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -447,6 +496,11 @@ class _StealJob:
     workers: int
     modeled_ns: float
     measured_ns: float
+    # fused victim only: per-member split of the stolen batch —
+    # (member, local_ids, modeled_ns, measured_ns) — plus the group that
+    # books the shares when the batch returns
+    shares: list | None = None
+    group: "FusionGroup | None" = None
 
 
 class MultiQueryEngine:
@@ -619,6 +673,8 @@ class MultiQueryEngine:
         arrivals: PoissonArrivals | Sequence[float] | None = None,
         steal: bool = False,
         governor: "CapacityGovernor | None" = None,
+        fuse: bool = False,
+        fusion: FusionConfig | None = None,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
@@ -650,7 +706,23 @@ class MultiQueryEngine:
         — fence a low-priority run at its next package boundary to free
         workers for a parked high-priority session. ``governor=None`` (the
         default) performs zero governor calls and keeps every scheduling
-        decision bit-identical to the ungoverned engine."""
+        decision bit-identical to the ungoverned engine.
+
+        With ``fuse=True`` (or an explicit :class:`~.fusion.FusionConfig` as
+        ``fusion``) sessions reaching an iteration boundary with a
+        parallel-worthy plan rendezvous per ``(graph, algorithm)``: when ≥ 2
+        stage together and their summed ``T_max`` exceeds the pool capacity,
+        a :class:`~.fusion.FusionGroup` merges their next iterations into
+        one fused :class:`~.scheduler.ScheduleRun` — one grant request, one
+        interleaved package table, the gang launch overhead charged once and
+        split across members — and every executed batch is split back per
+        member so records, latencies and EPS stay per-session truthful.
+        Fused runs stay stealable and preemptible at package boundaries; a
+        governor fence de-fuses the gang (members resume independently over
+        their residual packages) and a member whose packages drain early
+        leaves at the next boundary. ``fuse=False`` (the default) performs
+        zero fusion calls and keeps every decision bit-identical to the
+        fusion-less engine."""
         if priorities is None:
             prio = [0] * sessions
         elif callable(priorities):
@@ -685,13 +757,37 @@ class MultiQueryEngine:
         registry: StealRegistry | None = StealRegistry() if steal else None
         stalled: list[_SessionState] = []
 
-        EV_ARRIVE, EV_STEP, EV_STEAL, EV_GOV = 0, 1, 2, 3
-        heap: list[tuple[float, int, int, _SessionState | None]] = []
+        # gang fusion: ``fusing`` is the active config (None → zero fusion
+        # calls anywhere in the loop). Sessions park in ``fusion_staged``
+        # between the staging boundary and the flush; ``drivers`` are the
+        # synthetic states stepping live fused runs (negative sids);
+        # ``prep_cache`` amortizes identical topology-centric preparations
+        # across co-staged members (one sampling pass serves the gang).
+        fusing: FusionConfig | None = fusion if fusion is not None else (
+            FusionConfig() if fuse else None
+        )
+        fusion_staged: dict[Any, list[tuple[_SessionState, ThreadBounds]]] = {}
+        drivers: list[_SessionState] = []
+        driver_sid = 0
+        prep_cache: dict[Any, PreparedIteration] = {}
+        # the governor's view of running entities; rebuilt only when a gang
+        # forms or retires (never per event — the DES hot loop must not copy
+        # the state list on every pop)
+        running_view: list[_SessionState] = states
+
+        def _sync_running() -> None:
+            nonlocal running_view
+            running_view = states + drivers if drivers else states
+
+        EV_ARRIVE, EV_STEP, EV_STEAL, EV_GOV, EV_FUSE = 0, 1, 2, 3, 4
+        # payload is a _SessionState for session events, None for heartbeats,
+        # and the staging key for EV_FUSE flushes
+        heap: list[tuple[float, int, int, Any]] = []
         seq = 0
         clock = 0.0
         now = 0.0  # time of the event being handled (heartbeats included)
 
-        def _push(t_ev: float, kind: int, state: _SessionState) -> None:
+        def _push(t_ev: float, kind: int, state: Any) -> None:
             nonlocal seq
             heapq.heappush(heap, (t_ev, seq, kind, state))
             seq += 1
@@ -764,7 +860,10 @@ class MultiQueryEngine:
                 return False
             st.executor = make_executor(st.sid, st.next_query)
             st.executor.start()
-            st.graph_key = id(getattr(st.executor, "graph", None))
+            # stable dataset identity (not id()): two sessions that loaded
+            # the same graph into distinct objects still group for steal
+            # locality and gang fusion
+            st.graph_key = graph_identity(st.executor)
             st.record = QueryRecord(
                 session=st.sid,
                 query=st.next_query,
@@ -836,25 +935,297 @@ class MultiQueryEngine:
                     self.pool.release(usable)
                     continue
                 break
-            assert victim.executor is not None and victim.prep is not None
-            step = ScheduleStep(
-                batch, "parallel" if usable >= 2 else "sequential", usable
-            )
-            measured = self._execute_step(victim.executor, victim.prep, step)
-            step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
-            thief.steal = _StealJob(
-                victim=victim,
-                run=entry.run,
-                record=victim.record,
-                batch=batch,
-                workers=usable,
-                modeled_ns=step_ns,
-                measured_ns=measured,
-            )
+            mode = "parallel" if usable >= 2 else "sequential"
+            if entry.fused:
+                # fused victim: the claimed ids are fused slots — split them
+                # back per member, run each member's share through its own
+                # executor, and charge the thief gang's launch overhead once
+                # for the whole batch (same amortization as the gang itself)
+                group = victim.fusion
+                assert group is not None
+                shares, step_ns = _execute_fused_batch(group, batch, mode, usable)
+                for slot, positions, local_ids, *_ in shares:
+                    group.mark_donated(slot, positions, local_ids, usable)
+                thief.steal = _StealJob(
+                    victim=victim,
+                    run=entry.run,
+                    record=None,
+                    batch=batch,
+                    workers=usable,
+                    modeled_ns=step_ns,
+                    measured_ns=sum(s[4] for s in shares),
+                    shares=[(s[0], s[2], s[3], s[4]) for s in shares],
+                    group=group,
+                )
+            else:
+                assert victim.executor is not None and victim.prep is not None
+                step = ScheduleStep(batch, mode, usable)
+                measured = self._execute_step(victim.executor, victim.prep, step)
+                step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
+                thief.steal = _StealJob(
+                    victim=victim,
+                    run=entry.run,
+                    record=victim.record,
+                    batch=batch,
+                    workers=usable,
+                    modeled_ns=step_ns,
+                    measured_ns=measured,
+                )
             report.steal_events.append((t, thief.sid, victim.sid, int(batch.size)))
             _sample(t)
             _push(t + step_ns, EV_STEAL, thief)
             return True
+
+        def _install_run(
+            st: _SessionState,
+            bounds: ThreadBounds,
+            *,
+            order: np.ndarray | None = None,
+            initial_grant: bool = True,
+        ) -> None:
+            """Begin the session's own iteration run (solo path, and — with
+            ``order``/``initial_grant=False`` — a de-fused member's residual
+            run)."""
+            scheduler = PackageScheduler(
+                self.pool,
+                seq_package_limit=self.seq_package_limit,
+                priority=st.priority,
+            )
+            # only parallel-capable runs are published for stealing: a run
+            # the cost model (or baseline policy) decided to execute
+            # sequentially carries tiny iterations, and fencing it would
+            # fragment its tail into per-package dispatches for no possible
+            # gain. A preempting governor needs the same fence: without
+            # incremental dispatch a run is `done` the moment its one big
+            # step is handed out, leaving no package boundary to preempt at.
+            fenced = (steal or (governor is not None and governor.preempts))
+            st.srun = scheduler.begin(
+                st.prep.packages,
+                bounds,
+                stealable=fenced and bounds.parallel,
+                order=order,
+                initial_grant=initial_grant,
+            )
+            if registry is not None and st.srun.stealable:
+                registry.publish(
+                    st.sid,
+                    st.srun,
+                    priority=st.priority,
+                    graph_key=st.graph_key,
+                    payload=st,
+                )
+            st.iter_modeled_ns = 0.0
+            st.iter_measured_ns = 0.0
+
+        # ------------------------------------------------------ gang fusion
+        def _execute_fused_batch(
+            group: FusionGroup, batch: np.ndarray, mode: str, workers: int
+        ) -> tuple[list[list], float]:
+            """Run a fused batch through its members' executors and split the
+            modeled cost: per-member work at the gang width plus ONE gang
+            launch overhead slice shared pro rata — the modeled substance of
+            fusion (N members, one spin-up). Returns
+            ``([slot, positions, local_ids, modeled, measured], total_ns)``."""
+            t_eff = workers if mode == "parallel" else 1
+            shares: list[list] = []
+            total = 0.0
+            for slot, positions, local_ids in group.split(batch):
+                s_step = ScheduleStep(local_ids, mode, workers)
+                measured = self._execute_step(slot.payload.executor, slot.prep, s_step)
+                work_ns = member_work_ns(
+                    slot.payload.executor.desc,
+                    self.hw,
+                    slot.prep.work,
+                    t_eff,
+                    local_ids.size / max(slot.prep.packages.n_packages, 1),
+                )
+                shares.append([slot, positions, local_ids, work_ns, measured])
+                total += work_ns
+            ov = gang_overhead_ns(self.hw, t_eff, int(batch.size), group.n_packages)
+            total += ov
+            for share in shares:
+                share[3] += ov * (share[2].size / batch.size)
+            return shares, total
+
+        def _finalize_member(slot: FusionMember, t: float) -> None:
+            """A member's fused iteration is fully executed: book the
+            split-back share into its record and let the session continue."""
+            st = slot.payload
+            slot.finished = True
+            st.fused_member = None
+            assert st.executor is not None and st.record is not None
+            st.record.fused_packages += slot.trace.fused_packages
+            self._account_iteration(
+                st.executor, st.record, slot.trace, slot.modeled_ns, slot.measured_ns
+            )
+            _push(t, EV_STEP, st)
+
+        def _launch_group(
+            key: Any, chunk: list[tuple[_SessionState, ThreadBounds]], t: float
+        ) -> None:
+            """Fuse the staged chunk into one gang and start its driver."""
+            nonlocal driver_sid
+            group = FusionGroup.build(
+                [(s, s.prep, b) for s, b in chunk], capacity=self.pool.capacity
+            )
+            driver_sid -= 1
+            driver = _SessionState(
+                sid=driver_sid, priority=max(s.priority for s, _ in chunk)
+            )
+            driver.fusion = group
+            driver.graph_key = key[0]
+            for slot in group.members:
+                slot.payload.fused_member = slot
+            scheduler = PackageScheduler(
+                self.pool,
+                seq_package_limit=self.seq_package_limit,
+                priority=driver.priority,
+            )
+            # fused runs always carry the fence: per-boundary dispatch is
+            # what makes them stealable, preemptible, and de-fusable — and
+            # what lets an uneven member leave early. They publish backlog
+            # eagerly: workers the gang's power-of-2 rounding cannot absorb
+            # are better spent on a thief's second gang
+            driver.srun = scheduler.begin(
+                group.packages, group.bounds, stealable=True, eager_backlog=True
+            )
+            if registry is not None:
+                registry.publish(
+                    driver.sid,
+                    driver.srun,
+                    priority=driver.priority,
+                    graph_key=driver.graph_key,
+                    payload=driver,
+                    fused=True,
+                )
+            drivers.append(driver)
+            _sync_running()
+            report.fusion_events.append(
+                (t, driver.sid, len(group.members), group.n_packages)
+            )
+            _push(t, EV_STEP, driver)
+
+        def _flush_fusion(key: Any, t: float) -> None:
+            """The rendezvous closed: cut the staged sessions into FIFO
+            chunks of ``max_members`` and fuse each chunk that is itself
+            contended (its summed ``T_max`` exceeds the pool) — an
+            uncontended chunk's members run solo, since independent
+            full-width gangs are at least as good for them."""
+            staged = fusion_staged.pop(key, [])
+            if not staged:
+                return
+            assert fusing is not None
+            solo: list[tuple[_SessionState, ThreadBounds]] = []
+            while len(staged) >= 2:
+                chunk, staged = (
+                    staged[: fusing.max_members],
+                    staged[fusing.max_members :],
+                )
+                if should_fuse(
+                    [(s, s.prep, b) for s, b in chunk], capacity=self.pool.capacity
+                ):
+                    _launch_group(key, chunk, t)
+                else:
+                    solo.extend(chunk)
+            solo.extend(staged)  # at most one FIFO leftover
+            for st, bounds in solo:
+                _install_run(st, bounds)
+                _push(t, EV_STEP, st)
+
+        def _defuse(driver: _SessionState, t: float) -> None:
+            """A governor fence landed on the gang: dissolve it. Each member
+            resumes independently over its residual package ids — parked with
+            a zero-grant run, so the capacity the fence just freed goes to
+            the waiting high-priority session first (``_wake_stalled`` wakes
+            by priority); members re-request at their own priority when their
+            turn comes, exactly like a preempted solo run."""
+            group = driver.fusion
+            assert group is not None
+            if registry is not None:
+                registry.withdraw(driver.sid)
+            driver.srun.close()
+            drivers.remove(driver)
+            _sync_running()
+            driver.srun = None
+            driver.fusion = None
+            for slot in group.active():
+                st = slot.payload
+                slot.defused = True
+                slot.trace.preempted += 1  # the fence hit every member
+                residual = group.residual(slot)
+                if residual.size == 0:
+                    if slot.pending_stolen == 0:
+                        _finalize_member(slot, t)
+                    # else: the returning EV_STEAL finalizes the member
+                    continue
+                _install_run(st, slot.bounds, order=residual, initial_grant=False)
+                stalled.append(st)
+
+        def _fused_step(driver: _SessionState, t: float) -> None:
+            """Advance a fused gang by one schedule step (driver event)."""
+            group = driver.fusion
+            run = driver.srun
+            assert group is not None and run is not None
+            # the step dispatched at the previous driver event has now
+            # completed: commit its per-member shares (split-back accounting)
+            if driver.pending_shares:
+                for slot, positions, local_ids, mode, workers, modeled, measured in (
+                    driver.pending_shares
+                ):
+                    group.commit_step(
+                        slot, positions, local_ids, mode, workers, modeled, measured
+                    )
+                driver.pending_shares = []
+            # a member whose packages drained (via gang steps and/or returned
+            # steals) leaves the gang at this package boundary
+            for slot in group.active():
+                if slot.complete:
+                    _finalize_member(slot, t)
+            pre_preempt = run.trace.preempted
+            step = run.next_step()
+            if step is None:
+                if registry is not None:
+                    registry.withdraw(driver.sid)
+                run.close()
+                if run.outstanding_donations > 0:
+                    # stolen fused batches still out: the last EV_STEAL
+                    # re-pushes the driver to finalize and retire
+                    driver.joining = True
+                    _sample(t)
+                    _wake_stalled(t)
+                    return
+                for slot in group.active():
+                    _finalize_member(slot, t)
+                drivers.remove(driver)
+                _sync_running()
+                driver.fusion = None
+                driver.srun = None
+                _sample(t)
+                _wake_stalled(t)
+                return
+            if step.mode == "stalled":
+                if run.trace.preempted > pre_preempt:
+                    # governor fence: de-fuse so the members re-queue for
+                    # workers individually at their own priorities
+                    _defuse(driver, t)
+                else:
+                    # ordinary zero-grant stall: park the whole gang — it
+                    # stays fused and resumes when capacity frees
+                    stalled.append(driver)
+                _wake_stalled(t)
+                return
+            # execute the fused batch; the committed shares carry the step's
+            # mode/width so the split-back trace stays exact
+            shares, total = _execute_fused_batch(
+                group, step.batch, step.mode, step.workers
+            )
+            driver.pending_shares = [
+                (s[0], s[1], s[2], step.mode, step.workers, s[3], s[4])
+                for s in shares
+            ]
+            _sample(t)
+            _push(t + total, EV_STEP, driver)
+            _wake_stalled(t)
 
         try:
             while heap:
@@ -868,14 +1239,17 @@ class MultiQueryEngine:
                 if governor is not None:
                     # the governor observes every event edge: it may resize
                     # the pool (hooks wake/drain immediately) or fence a
-                    # low-priority run for a parked high-priority session
+                    # low-priority run for a parked high-priority session.
+                    # Fused-gang drivers are preemption candidates like any
+                    # session (their priority is the max of their members, so
+                    # a gang carrying a high-priority member is protected)
                     governor.tick(
                         t,
                         pool=self.pool,
                         admission=self.admission,
                         utilization=report.utilization,
                         stalled=stalled,
-                        running=states,
+                        running=running_view,
                     )
 
                 if kind == EV_GOV:
@@ -883,6 +1257,12 @@ class MultiQueryEngine:
                     # must not keep a finished loop spinning
                     if heap:
                         _push(t + gov_tick_ns, EV_GOV, None)
+                    continue
+
+                if kind == EV_FUSE:
+                    # the gang-formation rendezvous for one (graph, algo) key
+                    # closed: fuse or release the staged sessions
+                    _flush_fusion(st, t)
                     continue
 
                 if kind == EV_ARRIVE:
@@ -901,6 +1281,47 @@ class MultiQueryEngine:
                     assert job is not None
                     job.run.donation_done()
                     victim = job.victim
+                    if job.shares is not None:
+                        # fused victim: book each member's share of the
+                        # stolen batch (split-back), then settle whoever the
+                        # return unblocked — an early-complete member, a
+                        # de-fused member joining on this batch, or the
+                        # retiring driver itself
+                        group = job.group
+                        assert group is not None
+                        for slot, local_ids, modeled, measured in job.shares:
+                            group.account_stolen(slot, modeled, measured)
+                            rec = slot.payload.record
+                            if rec is not None:
+                                rec.stolen_packages += int(local_ids.size)
+                        self.pool.release(job.workers)
+                        _sample(t)
+                        for slot, *_ in job.shares:
+                            if slot.finished:
+                                continue
+                            mst = slot.payload
+                            if slot.defused:
+                                if mst.srun is not None:
+                                    if (
+                                        mst.joining
+                                        and slot.pending_stolen == 0
+                                        and mst.srun.outstanding_donations == 0
+                                    ):
+                                        mst.joining = False
+                                        _push(t, EV_STEP, mst)
+                                elif (
+                                    slot.pending_stolen == 0
+                                    and group.residual(slot).size == 0
+                                ):
+                                    _finalize_member(slot, t)
+                            elif slot.complete:
+                                _finalize_member(slot, t)
+                        if victim.joining and job.run.outstanding_donations == 0:
+                            victim.joining = False
+                            _push(t, EV_STEP, victim)
+                        _push(t, EV_STEP, st)
+                        _wake_stalled(t)
+                        continue
                     # the stolen work is the victim's: its busy time and
                     # package count book into the victim's iteration/record
                     victim.iter_modeled_ns += job.modeled_ns
@@ -914,6 +1335,11 @@ class MultiQueryEngine:
                         _push(t, EV_STEP, victim)
                     _push(t, EV_STEP, st)
                     _wake_stalled(t)
+                    continue
+
+                # EV_STEP on a fusion driver: advance the fused gang
+                if st.fusion is not None:
+                    _fused_step(st, t)
                     continue
 
                 # EV_STEP: advance one session by one schedule step
@@ -972,35 +1398,58 @@ class MultiQueryEngine:
                     assert rec is not None
                     if rec.started_ns == 0.0 and rec.iterations == 0:
                         rec.started_ns = t
-                    st.prep = self._prepare(ex, st.prep, fsize, fdeg, unvisited)
-                    bounds = self._decide(st.prep)
-                    scheduler = PackageScheduler(
-                        self.pool,
-                        seq_package_limit=self.seq_package_limit,
-                        priority=st.priority,
-                    )
-                    # only parallel-capable runs are published for stealing:
-                    # a run the cost model (or baseline policy) decided to
-                    # execute sequentially carries tiny iterations, and
-                    # fencing it would fragment its tail into per-package
-                    # dispatches for no possible gain. A preempting governor
-                    # needs the same fence: without incremental dispatch a
-                    # run is `done` the moment its one big step is handed
-                    # out, leaving no package boundary to preempt at.
-                    fenced = (steal or (governor is not None and governor.preempts))
-                    st.srun = scheduler.begin(
-                        st.prep.packages, bounds, stealable=fenced and bounds.parallel
-                    )
-                    if registry is not None and st.srun.stealable:
-                        registry.publish(
-                            st.sid,
-                            st.srun,
-                            priority=st.priority,
-                            graph_key=st.graph_key,
-                            payload=st,
+                    if (
+                        fusing is not None
+                        and st.prep is None
+                        and st.graph_key is not None
+                        and ex.desc.kind == "topology"
+                    ):
+                        # amortized preparation: co-located topology-centric
+                        # queries (same graph, same algorithm, same frontier)
+                        # share one sampling/packaging pass — the gang
+                        # prepares once, not once per member. Data-driven
+                        # frontiers differ in content per session, so they
+                        # keep their own preparation. The key covers every
+                        # prepare_iteration input: a cheap degree fingerprint
+                        # guards against an executor whose equal-size first
+                        # frontier carries different degrees per session
+                        fp = (
+                            None
+                            if fdeg is None
+                            else (int(len(fdeg)), int(np.asarray(fdeg).sum()))
                         )
-                    st.iter_modeled_ns = 0.0
-                    st.iter_measured_ns = 0.0
+                        ck = (
+                            st.graph_key,
+                            ex.desc.name,
+                            fsize,
+                            float(unvisited),
+                            fp,
+                            self.pool.capacity,
+                        )
+                        cached = prep_cache.get(ck)
+                        if cached is None:
+                            cached = self._prepare(ex, None, fsize, fdeg, unvisited)
+                            prep_cache[ck] = cached
+                        st.prep = cached
+                    else:
+                        st.prep = self._prepare(ex, st.prep, fsize, fdeg, unvisited)
+                    bounds = self._decide(st.prep)
+                    if (
+                        fusing is not None
+                        and bounds.parallel
+                        and st.graph_key is not None
+                    ):
+                        # gang-formation rendezvous: park under the
+                        # (graph, algorithm) key; the first stager arms the
+                        # flush that decides fuse-vs-solo for everyone who
+                        # reached a boundary within the hold window
+                        fkey = (st.graph_key, ex.desc.name)
+                        waiting = fusion_staged.setdefault(fkey, [])
+                        if not waiting:
+                            _push(t + fusing.hold_ns, EV_FUSE, fkey)
+                        waiting.append((st, bounds))
+                        continue
+                    _install_run(st, bounds)
 
                 step = st.srun.next_step()
                 if step is None:
@@ -1011,9 +1460,14 @@ class MultiQueryEngine:
                     if registry is not None:
                         registry.withdraw(st.sid)
                     st.srun.close()
-                    if st.srun.outstanding_donations > 0:
+                    if st.srun.outstanding_donations > 0 or (
+                        st.fused_member is not None
+                        and st.fused_member.pending_stolen > 0
+                    ):
                         # wait for the donations to return before accounting
-                        # the iteration (the thief's EV_STEAL re-pushes us)
+                        # the iteration (the thief's EV_STEAL re-pushes us);
+                        # a de-fused member also joins on batches stolen from
+                        # the gang before it dissolved
                         _sample(t)
                         _wake_stalled(t)
                         st.joining = True
@@ -1021,8 +1475,18 @@ class MultiQueryEngine:
                     trace = st.srun.trace
                     st.srun = None
                     assert st.executor is not None and st.record is not None
+                    modeled, measured = st.iter_modeled_ns, st.iter_measured_ns
+                    if st.fused_member is not None:
+                        # de-fused member: join the fused share of this
+                        # iteration with the residual run it just finished
+                        slot = st.fused_member
+                        st.fused_member = None
+                        st.record.fused_packages += slot.trace.fused_packages
+                        trace = merge_member_trace(slot.trace, trace)
+                        modeled += slot.modeled_ns
+                        measured += slot.measured_ns
                     self._account_iteration(
-                        st.executor, st.record, trace, st.iter_modeled_ns, st.iter_measured_ns
+                        st.executor, st.record, trace, modeled, measured
                     )
                     _sample(t)
                     _push(t, EV_STEP, st)
@@ -1054,17 +1518,25 @@ class MultiQueryEngine:
                 raise RuntimeError(
                     f"{len(stalled)} session(s) deadlocked waiting for workers"
                 )
+            if any(fusion_staged.values()):
+                raise RuntimeError(
+                    "fusion staging not drained: a flush event was lost"
+                )
         finally:
             # an exception in executor code must not leak held grants,
             # admission slots, or the resize hook on the shared engine state
             self.pool.remove_resize_hook(_on_resize)
-            for s in states:
+            for s in states + drivers:
                 if s.srun is not None:
                     s.srun.close()
                     s.srun = None
                 if s.steal is not None:
                     self.pool.release(s.steal.workers)
                     s.steal = None
+                s.fusion = None
+                s.fused_member = None
+            drivers.clear()
+            fusion_staged.clear()
             self.admission.reset()
 
         if governor is not None:

@@ -30,6 +30,18 @@ the thief's graph (the Q-Graph co-location argument — the thief's devices
 already hold that graph's arrays), then higher-priority victims, then the
 largest backlog. Ties keep the earliest-published victim, so selection is
 deterministic.
+
+Graph identity is *stable*, not object identity: :func:`graph_identity`
+returns the graph's construction-time ``key`` (name + stats fingerprint), so
+two sessions that loaded the same dataset into distinct objects still group
+as same-graph — both for the thief's locality preference here and for gang
+fusion's co-scheduling. (Keying by ``id(graph)`` silently disabled both
+whenever sessions did not literally share one object.)
+
+Fused gangs participate too: a :class:`~.fusion.FusionGroup` driver publishes
+its fused run with ``fused=True``; thieves claim trailing *fused* ids over
+the same fence and the engine splits the claim back per member before
+executing it.
 """
 from __future__ import annotations
 
@@ -37,6 +49,18 @@ import dataclasses
 from typing import Any, Hashable, Iterator
 
 from .scheduler import ScheduleRun, WorkerPool
+
+
+def graph_identity(executor: Any) -> Hashable:
+    """Stable same-graph key for an executor: the graph's ``key`` property
+    (dataset identity survives separate loads), falling back to object
+    identity for graph-like objects without one, and ``None`` when the
+    executor carries no graph at all."""
+    g = getattr(executor, "graph", None)
+    if g is None:
+        return None
+    key = getattr(g, "key", None)
+    return key if key is not None else id(g)
 
 
 @dataclasses.dataclass
@@ -48,6 +72,7 @@ class StealEntry:
     priority: int = 0
     graph_key: Hashable = None  # identity of the graph the run traverses
     payload: Any = None         # opaque engine-side state (session record)
+    fused: bool = False         # run is a fused gang (multi-session victim)
 
     @property
     def backlog(self) -> int:
@@ -73,9 +98,15 @@ class StealRegistry:
         priority: int = 0,
         graph_key: Hashable = None,
         payload: Any = None,
+        fused: bool = False,
     ) -> StealEntry:
         entry = StealEntry(
-            key=key, run=run, priority=priority, graph_key=graph_key, payload=payload
+            key=key,
+            run=run,
+            priority=priority,
+            graph_key=graph_key,
+            payload=payload,
+            fused=fused,
         )
         self._entries[key] = entry
         return entry

@@ -89,6 +89,27 @@ class Graph:
     def num_edges(self) -> int:
         return self.csr.num_edges
 
+    @property
+    def key(self) -> tuple:
+        """Stable identity for same-graph co-scheduling (steal locality,
+        gang fusion).
+
+        Two ``Graph`` objects built from the same dataset compare equal even
+        when the dataset was loaded into distinct objects — unlike
+        ``id(graph)``, which broke steal/fusion grouping across separately
+        loaded copies. Built entirely from construction-time statistics, so
+        it costs nothing at query time and discriminates datasets far better
+        than (name, |V|, |E|) alone."""
+        s = self.stats
+        return (
+            self.name,
+            s.num_vertices,
+            s.num_edges,
+            s.deg_out_max,
+            s.deg_in_max,
+            s.v_reach,
+        )
+
     def out_degrees(self) -> jnp.ndarray:
         return self.csr.out_degrees()
 

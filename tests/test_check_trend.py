@@ -1,0 +1,112 @@
+"""benchmarks/check_trend.py — the CI perf gate itself.
+
+The gate decides whether PRs merge; a bug here silently green-lights
+regressions (or blocks progress), so its verdict matrix is pinned: shared
+rows within threshold pass, a >threshold modeled regression fails (exit 1),
+improvements and one-sided rows pass, malformed trajectories are a distinct
+error (exit 2), and an empty intersection refuses to certify anything."""
+import json
+
+import pytest
+
+from benchmarks.check_trend import load_rows, main
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+def _row(name, eps):
+    return {"name": name, "modeled_eps": eps}
+
+
+@pytest.fixture
+def files(tmp_path):
+    def make(base_rows, fresh_rows):
+        return (
+            _write(tmp_path / "base.json", base_rows),
+            _write(tmp_path / "fresh.json", fresh_rows),
+        )
+
+    return make
+
+
+def test_within_threshold_passes(files):
+    base, fresh = files([_row("fig/a/s1", 100.0)], [_row("fig/a/s1", 95.0)])
+    assert main([base, fresh]) == 0
+
+
+def test_regression_beyond_threshold_fails(files):
+    base, fresh = files([_row("fig/a/s1", 100.0)], [_row("fig/a/s1", 89.0)])
+    assert main([base, fresh]) == 1
+
+
+def test_improvement_passes(files):
+    base, fresh = files([_row("fig/a/s1", 100.0)], [_row("fig/a/s1", 180.0)])
+    assert main([base, fresh]) == 0
+
+
+def test_custom_threshold(files):
+    base, fresh = files([_row("fig/a/s1", 100.0)], [_row("fig/a/s1", 95.0)])
+    assert main([base, fresh, "--threshold", "0.02"]) == 1
+    assert main([base, fresh, "--threshold", "0.06"]) == 0
+
+
+def test_new_row_is_reported_not_gated(files, capsys):
+    """A figure added by the current PR has no baseline — it must ride along
+    without failing the gate (it becomes gated once committed)."""
+    base, fresh = files(
+        [_row("fig/a/s1", 100.0)],
+        [_row("fig/a/s1", 100.0), _row("fig/new/s1", 1.0)],
+    )
+    assert main([base, fresh]) == 0
+    assert "fresh-only" in capsys.readouterr().out
+
+
+def test_disappeared_row_is_reported_not_gated(files, capsys):
+    base, fresh = files(
+        [_row("fig/a/s1", 100.0), _row("fig/old/s1", 50.0)],
+        [_row("fig/a/s1", 100.0)],
+    )
+    assert main([base, fresh]) == 0
+    assert "baseline-only" in capsys.readouterr().out
+
+
+def test_no_shared_rows_refuses_to_certify(files):
+    base, fresh = files([_row("fig/a/s1", 100.0)], [_row("fig/b/s1", 100.0)])
+    assert main([base, fresh]) == 1
+
+
+def test_zero_baseline_rows_are_skipped(files):
+    base, fresh = files([_row("fig/a/s1", 0.0)], [_row("fig/a/s1", 0.0)])
+    # the only shared row is ungateable → nothing regressed, gate passes
+    assert main([base, fresh]) == 0
+
+
+def test_invalid_json_exits_2(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    good = _write(tmp_path / "good.json", [_row("fig/a/s1", 1.0)])
+    assert main([str(bad), good]) == 2
+    assert main([good, str(bad)]) == 2
+
+
+def test_missing_file_exits_2(tmp_path):
+    good = _write(tmp_path / "good.json", [_row("fig/a/s1", 1.0)])
+    assert main([str(tmp_path / "absent.json"), good]) == 2
+
+
+def test_malformed_rows_exit_2(tmp_path):
+    good = _write(tmp_path / "good.json", [_row("fig/a/s1", 1.0)])
+    for doc in ("[1, 2]", '{"rows": [{"name": "x"}]}', '{"rows": 3}'):
+        bad = tmp_path / "shape.json"
+        bad.write_text(doc)
+        assert main([good, str(bad)]) == 2
+
+
+def test_load_rows_raises_valueerror_on_malformed(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text('{"rows": [{"modeled_eps": 1.0}]}')  # row without a name
+    with pytest.raises(ValueError):
+        load_rows(str(p))

@@ -1,0 +1,289 @@
+"""Gang fusion: FusionGroup bookkeeping, gang formation in the engine,
+split-back accounting, early member finish, de-fuse on preemption, stealing
+from fused gangs, and ``fuse=False`` inertness."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    CapacityGovernor,
+    FusionConfig,
+    FusionGroup,
+    MultiQueryEngine,
+    ThreadBounds,
+    XEON_E5_2660V4,
+    make_packages,
+)
+from repro.core.fusion import should_fuse
+from repro.graph import rmat_graph
+
+from _hypothesis_compat import given, settings, st
+
+
+def _bounds(t_min=2, t_max=8, n_packages=8):
+    return ThreadBounds(
+        t_min=t_min, t_max=t_max, n_packages=n_packages, v_min_parallel=10,
+        parallel=True, cost_seq_ns=1e6, cost_par_ns=2e5,
+    )
+
+
+def _member(n_packages, t_max=8):
+    b = _bounds(t_max=t_max, n_packages=n_packages)
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    assert pkgs.n_packages == n_packages
+    prep = SimpleNamespace(packages=pkgs)
+    return (SimpleNamespace(name=f"m{n_packages}"), prep, b)
+
+
+# ---------------- FusionGroup bookkeeping (unit) ----------------
+
+def test_build_interleaves_members_round_robin():
+    grp = FusionGroup.build([_member(2), _member(4)], capacity=16)
+    assert grp.n_packages == 6
+    # fused slots alternate members while both have packages left, then the
+    # longer member's tail follows
+    owners = [grp.split(np.array([i]))[0][0] for i in range(6)]
+    idx = [grp.members.index(o) for o in owners]
+    assert idx == [0, 1, 0, 1, 1, 1]
+    # one grant request for the gang: summed T_max capped at capacity
+    assert grp.bounds.t_max == 16
+    assert grp.bounds.n_packages == 6
+
+
+def test_fused_width_is_capped_sum_of_member_widths():
+    grp = FusionGroup.build([_member(4, t_max=4), _member(4, t_max=4)], capacity=16)
+    assert grp.bounds.t_max == 8  # 4 + 4 < capacity → plain sum
+    grp = FusionGroup.build([_member(4, t_max=16), _member(4, t_max=16)], capacity=16)
+    assert grp.bounds.t_max == 16  # capped at the pool
+
+
+def test_split_back_commit_and_early_member_completion():
+    """Committing the interleaved prefix completes the short member first —
+    the early-finish boundary the engine de-fuses a member at."""
+    grp = FusionGroup.build([_member(2), _member(4)], capacity=16)
+    m_short, m_long = grp.members
+    # commit the first four fused slots (two per member)
+    for fid in range(4):
+        ((slot, positions, local_ids),) = grp.split(np.array([fid]))
+        grp.commit_step(slot, positions, local_ids, "parallel", 4, 10.0, 1.0)
+    assert m_short.complete and not m_long.complete
+    assert m_short.trace.fused_packages == 2
+    assert m_short.modeled_ns == pytest.approx(20.0)
+    # the long member still owes its residual tail, in its own order
+    assert list(grp.residual(m_long)) == [int(p) for p in m_long.order[2:]]
+    assert grp.residual(m_short).size == 0
+
+
+def test_donated_positions_wait_for_return_before_completion():
+    grp = FusionGroup.build([_member(2), _member(2)], capacity=16)
+    slot = grp.members[0]
+    positions = np.array([0, 1])
+    grp.mark_donated(slot, positions, slot.order[positions], workers=2)
+    assert slot.trace.stolen_packages == 2
+    assert grp.residual(slot).size == 0
+    assert not slot.complete          # the stolen batch has not returned
+    grp.account_stolen(slot, 5.0, 1.0)
+    assert slot.complete
+    assert slot.modeled_ns == pytest.approx(5.0)
+
+
+def test_should_fuse_requires_contention():
+    a, b = _member(4, t_max=8), _member(4, t_max=8)
+    assert not should_fuse([a], capacity=4)          # one session never fuses
+    assert should_fuse([a, b], capacity=8)           # 16 > 8: contended
+    assert not should_fuse([a, b], capacity=16)      # both fit side by side
+
+
+def test_fusion_config_validation():
+    with pytest.raises(ValueError):
+        FusionConfig(hold_ns=-1.0)
+    with pytest.raises(ValueError):
+        FusionConfig(max_members=1)
+
+
+# ---------------- engine integration ----------------
+
+def _mk_pr(graph, max_iters=3):
+    return lambda s, q: PageRankExecutor(graph, mode="pull", max_iters=max_iters, tol=0)
+
+
+def _run(graph, *, sessions=4, pool=8, fuse=False, steal=False, max_iters=3,
+         governor=None, priorities=None, arrivals=None, mk=None,
+         fusion=None, queries=1):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=pool, policy="scheduler")
+    rep = eng.run_sessions(
+        mk or _mk_pr(graph, max_iters=max_iters),
+        sessions=sessions,
+        queries_per_session=queries,
+        steal=steal,
+        fuse=fuse,
+        fusion=fusion,
+        governor=governor,
+        priorities=priorities,
+        arrivals=arrivals,
+    )
+    assert eng.pool.available == eng.pool.capacity, "grant leaked"
+    return rep
+
+
+def test_gang_forms_and_split_back_conserves_work(medium_rmat):
+    """4 same-graph PR sessions on a contended pool fuse; every record keeps
+    exactly its own work: edges, iterations and per-iteration package counts
+    match the unfused run package for package."""
+    unfused = _run(medium_rmat, fuse=False)
+    fused = _run(medium_rmat, fuse=True)
+    assert fused.fusion_events, "no gang formed on a contended same-graph burst"
+    assert fused.total_fused > 0
+    assert fused.total_fused == sum(r.fused_packages for r in fused.records)
+    for ru, rf in zip(unfused.records, fused.records):
+        assert rf.edges == ru.edges
+        assert rf.iterations == ru.iterations
+        # exactly-once dispatch: same number of package runs per iteration
+        assert [len(tr.runs) for tr in rf.traces] == [len(tr.runs) for tr in ru.traces]
+        assert rf.fused_packages > 0
+        assert rf.finished_ns > 0
+
+
+def test_fused_burst_beats_unfused_modeled_throughput(medium_rmat):
+    """The contended same-algorithm burst is fusion's home turf: one gang
+    launch amortized over N members must beat N serialized wide gangs."""
+    unfused = _run(medium_rmat, fuse=False)
+    fused = _run(medium_rmat, fuse=True)
+    assert fused.throughput_modeled() > unfused.throughput_modeled() * 1.05
+
+
+def test_fuse_false_is_inert_and_deterministic(medium_rmat):
+    a = _run(medium_rmat, fuse=False)
+    b = _run(medium_rmat, fuse=False)
+    assert not a.fusion_events and a.total_fused == 0
+    assert all(r.fused_packages == 0 for r in a.records)
+    assert [r.modeled_ns for r in a.records] == [r.modeled_ns for r in b.records]
+    assert a.makespan_modeled_ns == b.makespan_modeled_ns
+
+
+def test_fusion_groups_across_distinct_graph_objects():
+    """Regression: graph identity is the dataset key, not id(). Two sessions
+    loading the same dataset into distinct objects must still fuse."""
+    copies = [rmat_graph(12, seed=3) for _ in range(4)]
+    assert copies[0] is not copies[1] and copies[0].key == copies[1].key
+
+    def mk(s, q):
+        return PageRankExecutor(copies[s], mode="pull", max_iters=3, tol=0)
+
+    rep = _run(copies[0], mk=mk, fuse=True)
+    assert rep.fusion_events, "distinct same-dataset objects did not fuse"
+    assert all(r.finished_ns > 0 and r.edges > 0 for r in rep.records)
+
+
+def test_uncontended_pool_does_not_fuse(medium_rmat):
+    """Summed T_max within capacity → everyone runs solo at full width."""
+    rep = _run(medium_rmat, sessions=2, pool=56, fuse=True)
+    assert not rep.fusion_events and rep.total_fused == 0
+
+
+def test_bfs_sessions_fuse_and_conserve_edges(medium_rmat):
+    """Data-driven members with unequal frontiers (different sources) fuse
+    under a hold window; early member finish must not lose or double work."""
+    deg = np.asarray(medium_rmat.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        return BFSExecutor(medium_rmat, int(hubs[s]))
+
+    solo_edges = []
+    for s in range(4):
+        rep1 = _run(medium_rmat, sessions=1, pool=8, mk=lambda _s, _q, s=s: mk(s, 0))
+        solo_edges.append(rep1.records[0].edges)
+
+    rep = _run(medium_rmat, sessions=4, pool=8, fuse=True, mk=mk,
+               fusion=FusionConfig(hold_ns=1e6))
+    assert rep.fusion_events, "BFS same-graph burst did not fuse"
+    for r, expected in zip(rep.records, solo_edges):
+        assert r.edges == expected
+
+
+def test_defuse_on_preemption(medium_rmat):
+    """A governor fence on the fused gang dissolves it at a package boundary:
+    members finish independently, the preemption is visible in their traces,
+    and no work is lost."""
+    gov = CapacityGovernor(
+        p_min=8, p_max=8, window_ns=1e5, cooldown_ns=1e12, preempt=True
+    )
+
+    def mk(s, q):
+        return PageRankExecutor(medium_rmat, mode="pull", max_iters=4, tol=0)
+
+    unfused = _run(medium_rmat, sessions=5, pool=8, mk=mk)
+    rep = _run(
+        medium_rmat,
+        sessions=5,
+        pool=8,
+        fuse=True,
+        mk=mk,
+        governor=gov,
+        priorities=[0, 0, 0, 0, 1],
+        # the high-priority session arrives mid-gang and finds the pool
+        # fully checked out → the governor fences the (low-priority) gang
+        arrivals=[0.0, 0.0, 0.0, 0.0, 2e5],
+    )
+    assert rep.fusion_events
+    assert rep.preemptions, "governor never fenced the fused gang"
+    preempted_traces = [
+        tr for r in rep.records for tr in r.traces if tr.preempted > 0
+    ]
+    assert preempted_traces, "de-fuse left no preemption mark on member traces"
+    for ru, rf in zip(unfused.records, rep.records):
+        assert rf.edges == ru.edges
+        assert rf.iterations == ru.iterations
+
+
+def test_stealing_from_fused_gang_conserves_work(medium_rmat):
+    """A drained session steals trailing fused slots over the gang's fence
+    (the gang is width-blocked on a 5-worker pool, so its eager backlog is
+    published); the shares book into the right member records and nothing is
+    lost or double-executed."""
+    deg = np.asarray(medium_rmat.out_degrees())
+    hub = int(np.argsort(-deg)[0])
+
+    def mk(s, q):
+        if s == 3:  # short query: drains early, then turns thief
+            return BFSExecutor(medium_rmat, hub)
+        return PageRankExecutor(medium_rmat, mode="pull", max_iters=4, tol=0)
+
+    unfused = _run(medium_rmat, sessions=4, pool=5, mk=mk, steal=False)
+    rep = _run(medium_rmat, sessions=4, pool=5, mk=mk, steal=True, fuse=True)
+    assert rep.fusion_events
+    for ru, rf in zip(unfused.records, rep.records):
+        assert rf.edges == ru.edges
+    fused_victim_steals = [e for e in rep.steal_events if e[2] < 0]
+    assert fused_victim_steals, "thief never claimed from the fused gang"
+    # split-back: stolen fused slots appear in *member* records, never on a
+    # driver (drivers have no records — their sids are negative)
+    assert sum(k for *_, k in fused_victim_steals) <= sum(
+        r.stolen_packages for r in rep.records
+    )
+    assert all(r.session >= 0 for r in rep.records)
+
+
+@settings(deadline=None, max_examples=8)
+@given(sessions=st.integers(2, 5), pool=st.integers(4, 8))
+def test_fused_grants_never_oversubscribe_pool(sessions, pool):
+    """Property: with fusion on, in-use workers never exceed capacity (no
+    shrink debt without a governor — the gang's single grant obeys the same
+    pool invariants as everyone else's)."""
+    g = _PROPERTY_GRAPH
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=pool, policy="scheduler")
+    rep = eng.run_sessions(
+        _mk_pr(g, max_iters=1),
+        sessions=sessions,
+        queries_per_session=1,
+        fuse=True,
+    )
+    assert eng.pool.available == pool
+    assert max((u for _, u in rep.utilization), default=0) <= pool
+    assert all(r.finished_ns > 0 for r in rep.records)
+
+
+_PROPERTY_GRAPH = rmat_graph(12, seed=3)

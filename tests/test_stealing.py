@@ -307,3 +307,48 @@ def test_steal_report_fields(medium_rmat):
     assert rep.steal_rate() > 0
     for t, thief, victim, k in rep.steal_events:
         assert thief != victim and k >= 1
+
+
+# ---------------- stable graph identity (steal/fusion grouping) ----------------
+
+def test_graph_key_stable_across_loads():
+    """Regression: same-graph matching used id(graph), so two sessions that
+    loaded the same dataset into distinct objects never matched. The stable
+    key is a construction-time fingerprint: equal across loads of one
+    dataset, different across datasets."""
+    from repro.graph import rmat_graph
+
+    a, b = rmat_graph(10, seed=5), rmat_graph(10, seed=5)
+    assert a is not b
+    assert a.key == b.key
+    assert a.key != rmat_graph(10, seed=6).key
+    assert a.key != rmat_graph(11, seed=5).key
+
+
+def test_graph_identity_prefers_key_over_object_identity():
+    from repro.core import graph_identity
+    from repro.graph import rmat_graph
+
+    g1, g2 = rmat_graph(10, seed=5), rmat_graph(10, seed=5)
+    assert graph_identity(SimpleNamespace(graph=g1)) == graph_identity(
+        SimpleNamespace(graph=g2)
+    )
+    # graph-like objects without a key fall back to object identity
+    plain = SimpleNamespace()
+    ex1, ex2 = SimpleNamespace(graph=plain), SimpleNamespace(graph=plain)
+    assert graph_identity(ex1) == graph_identity(ex2) == id(plain)
+    assert graph_identity(SimpleNamespace()) is None
+
+
+def test_same_dataset_distinct_objects_rank_as_same_graph():
+    """The thief's locality preference must fire across separately loaded
+    copies of one dataset (Q-Graph co-location with a stable key)."""
+    from repro.graph import rmat_graph
+
+    g1, g2 = rmat_graph(10, seed=5), rmat_graph(10, seed=5)
+    other = rmat_graph(10, seed=6)
+    reg = StealRegistry()
+    reg.publish(0, _fake_run(50), graph_key=other.key)
+    reg.publish(1, _fake_run(3), graph_key=g1.key)
+    # thief runs on its own copy g2 — with id() keys this victim never matched
+    assert reg.pick_victim(graph_key=g2.key).key == 1
