@@ -82,6 +82,8 @@ def run_sessions(
     governor=None,
     fuse: bool = False,
     fusion=None,
+    feedback=None,
+    width_feedback=None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
@@ -91,12 +93,15 @@ def run_sessions(
     ``pool_capacity``/``admission``/``governor`` let figures pin the machine
     size, install per-priority admission quotas, and enable the elastic
     capacity governor (fig15). ``fuse``/``fusion`` enable same-graph gang
-    fusion (fig16)."""
+    fusion (fig16). ``feedback``/``width_feedback`` install the §4.4 cost
+    feedback loop and toggle its width-keyed table (fig17)."""
     kwargs = {}
     if pool_capacity is not None:
         kwargs["pool_capacity"] = pool_capacity
     if admission is not None:
         kwargs["admission"] = admission
+    if feedback is not None:
+        kwargs["feedback"] = feedback
     eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy, **kwargs)
 
     def mk(s, q):
@@ -113,6 +118,7 @@ def run_sessions(
         governor=governor,
         fuse=fuse,
         fusion=fusion,
+        width_feedback=width_feedback,
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep.throughput_modeled(), rep

@@ -8,7 +8,8 @@
 #   --steal / --no-steal toggle inter-session work-stealing for the session
 #   figures (fig10-13, fig15 and fig16; default: steal). fig14 always emits
 #   both variants. fig15 always emits fixed-P and governed variants; fig16
-#   always emits unfused and fused (gang fusion) variants.
+#   always emits unfused and fused (gang fusion) variants; fig17 always
+#   emits nofb and widthfb (width-aware cost feedback) variants.
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
 #   but do not commit its numbers over the gated baseline.
@@ -33,6 +34,7 @@ MODULES = [
     "fig14_steal_sessions_rmat",
     "fig15_burst_governor",
     "fig16_fusion_sessions",
+    "fig17_width_feedback",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
@@ -79,7 +81,7 @@ def main() -> None:
         rows = mod.run()
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.6g}")
-        if any(k in mod_name for k in ("sessions", "governor", "fusion")):
+        if any(k in mod_name for k in ("sessions", "governor", "fusion", "feedback")):
             session_rows.extend(sessions_json_rows(rows))
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     if session_rows:

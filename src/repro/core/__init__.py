@@ -1,6 +1,7 @@
-# The paper's primary contribution: cost-model-driven control of intra- and
-# inter-query parallelism (estimators -> cost model -> bounds -> packaging ->
-# selective sequential execution -> multi-query engine).
+"""The paper's primary contribution: cost-model-driven control of intra- and
+inter-query parallelism (estimators → cost model → bounds → packaging →
+selective sequential execution → multi-query engine); see
+``docs/ARCHITECTURE.md`` for the full pipeline and per-module map."""
 from .estimators import (
     TraversalEstimator,
     estimate_found_closed_form,
@@ -50,7 +51,13 @@ from .scheduler import (
     largest_pow2_leq,
 )
 from .stealing import StealEntry, StealRegistry, graph_identity
-from .fusion import FusionConfig, FusionGroup, FusionMember
+from .fusion import (
+    FusionConfig,
+    FusionGroup,
+    FusionMember,
+    aggregate_work,
+    plan_gang_width,
+)
 from .governor import CapacityGovernor, GovernorConfig
 from .session import (
     AdmissionController,
@@ -78,7 +85,7 @@ __all__ = [
     "PackageRun", "PackageScheduler", "ScheduleRun", "ScheduleStep",
     "ScheduleTrace", "STALL_STEP", "WorkerPool", "largest_pow2_leq",
     "StealEntry", "StealRegistry", "graph_identity",
-    "FusionConfig", "FusionGroup", "FusionMember",
+    "FusionConfig", "FusionGroup", "FusionMember", "aggregate_work", "plan_gang_width",
     "CapacityGovernor", "GovernorConfig",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
     "QueryExecutor", "QueryRecord",

@@ -12,10 +12,19 @@ Wires the pieces of §3 together for one upcoming iteration:
 
 Topology-centric algorithms (PR) prepare once; data-driven ones (BFS) prepare
 per iteration (§4.5).
+
+With a :class:`~.feedback.CostFeedback` passed as ``feedback``, the thread
+bound sweep consults the width-keyed correction table (§4.4 feedback loop):
+each candidate width's modeled cost is scaled by the *measured* width ratio,
+so a victim whose packages keep being executed at thief-gang / fused-gang /
+post-preemption widths plans its next iteration for the widths those paths
+actually deliver instead of the widths its own solo grant would have used.
+``feedback=None`` (the default) keeps preparation byte-identical.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -27,9 +36,15 @@ from .descriptors import AlgorithmDescriptor
 from .estimators import SAMPLE_CAP_RUNTIME, TraversalEstimator
 from .packaging import WorkPackages, make_packages
 
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from .feedback import CostFeedback
+
 
 @dataclasses.dataclass(frozen=True)
 class PreparedIteration:
+    """Everything the scheduler needs for one iteration: the work profile,
+    the thread bounds, and the generated packages."""
+
     work: IterationWork
     bounds: ThreadBounds
     packages: WorkPackages
@@ -45,8 +60,14 @@ def prepare_iteration(
     frontier_degrees: np.ndarray | None = None,
     unvisited: float | None = None,
     p: int | None = None,
+    feedback: "CostFeedback | None" = None,
 ) -> PreparedIteration:
-    """Run the full preparation step for the next iteration."""
+    """Run the full preparation step for the next iteration.
+
+    ``feedback`` (optional) supplies measured (algorithm, width) corrections:
+    the thread-bound sweep scores each candidate width with
+    ``feedback.width_ratio`` so the plan reflects how widths actually
+    performed, not just the contention model's prediction."""
     est = TraversalEstimator(
         deg_mean=stats.deg_out_mean,
         deg_max=stats.deg_out_max,
@@ -87,7 +108,10 @@ def prepare_iteration(
         touched=float(touched),
         m_bytes=float(m_bytes),
     )
-    tb = thread_bounds(desc, hw, work, p=p)
+    width_correction = None
+    if feedback is not None:
+        width_correction = lambda t: feedback.width_ratio(desc.name, t)  # noqa: E731
+    tb = thread_bounds(desc, hw, work, p=p, width_correction=width_correction)
     pkgs = make_packages(
         frontier_degrees,
         tb,

@@ -14,11 +14,22 @@ min/max-set/break structure and both side conditions).
 
 On the TPU adaptation, T is the device-group size (power-of-two sub-mesh) and
 P the pod's device count.
+
+``thread_bounds`` optionally takes a ``width_correction`` callable — a
+per-width multiplicative factor on the modeled per-vertex cost, fed from the
+§4.4 feedback loop's width-keyed table
+(:meth:`~.feedback.CostFeedback.width_ratio`). Every cost comparison in the
+sweep (Eq. 9 threshold, Eq. 10 profitability, the min-work-per-thread feed
+check) then uses *measured-width-corrected* costs, so preparation plans for
+the widths thieves, fused gangs and post-preemption resumes actually
+deliver. ``None`` (the default) keeps the sweep byte-identical to the
+uncorrected Algorithm 1.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
 from .contention import HardwareModel
 from .cost_model import IterationWork, c_vertex_total
@@ -75,14 +86,28 @@ def thread_bounds(
     hw: HardwareModel,
     work: IterationWork,
     p: int | None = None,
+    *,
+    width_correction: Callable[[int], float] | None = None,
 ) -> ThreadBounds:
-    """Algorithm 1 — compute [T_min, T_max] and the package count."""
+    """Algorithm 1 — compute [T_min, T_max] and the package count.
+
+    ``width_correction(t)`` (optional) scales the modeled per-vertex cost at
+    width ``t`` by a measured factor from the feedback table's width-keyed
+    corrections; ``None`` reproduces the uncorrected sweep exactly."""
     p = int(p or hw.max_threads)
     v = max(work.frontier, 1.0)
-    c_seq = c_vertex_total(desc, hw, work, t=1)
+    if width_correction is None:
+        c_seq = c_vertex_total(desc, hw, work, t=1)
+        v_min = v_min_for_parallel(desc, hw, work)
+    else:
+        c_seq = c_vertex_total(desc, hw, work, t=1) * width_correction(1)
+        # Eq. 9 with the corrected sequential cost (same rearrangement)
+        v_min = (
+            (hw.c_t_min_work_ns + hw.c_para_startup_ns) / c_seq
+            if c_seq > 0
+            else math.inf
+        )
     total_seq_ns = v * c_seq
-
-    v_min = v_min_for_parallel(desc, hw, work)
 
     t_min, t_max = 0, 0
     min_not_set = True
@@ -91,10 +116,14 @@ def thread_bounds(
         while t <= p:
             if t > 1:
                 c_par = c_vertex_total(desc, hw, work, t=t)
+                if width_correction is not None:
+                    c_par *= width_correction(t)
                 # J_max: parallelism the work can feed (min-work-per-thread)
                 j_max = max(t, int(v * c_par // max(hw.c_t_min_work_ns, 1.0)))
                 feeds = (v * c_par) >= (t * hw.c_t_min_work_ns)
-                profitable = parallel_beats_sequential(desc, hw, work, t)
+                # Eq. 10 over the (possibly width-corrected) costs; with no
+                # correction this is exactly parallel_beats_sequential
+                profitable = c_seq > c_par / t + hw.c_thread_overhead_ns * t / v
                 valid = feeds and profitable and j_max >= t
                 if valid:
                     t_max = t
@@ -107,8 +136,11 @@ def thread_bounds(
 
     parallel = t_max >= 2
     if parallel:
+        c_par_max = c_vertex_total(desc, hw, work, t=t_max)
+        if width_correction is not None:
+            c_par_max *= width_correction(t_max)
         c_par_ns = (
-            v * c_vertex_total(desc, hw, work, t=t_max) / t_max
+            v * c_par_max / t_max
             + hw.c_thread_overhead_ns * t_max
             + hw.c_para_startup_ns
         )

@@ -47,6 +47,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class MemoryLevel:
+    """One level of the calibrated memory hierarchy (name + capacity)."""
+
     name: str
     capacity: int  # bytes
 
@@ -132,6 +134,7 @@ class HardwareModel:
     # ---------------- persistence (memoized calibration, §4.1.1) ----------------
 
     def save(self, path: str) -> None:
+        """Persist the calibrated model as JSON (atomic rename)."""
         payload = dict(
             name=self.name,
             levels=[(l.name, l.capacity) for l in self.levels],
@@ -152,6 +155,7 @@ class HardwareModel:
 
     @classmethod
     def load(cls, path: str) -> "HardwareModel":
+        """Load a model previously written by :meth:`save`."""
         with open(path) as f:
             p = json.load(f)
         return cls(

@@ -47,6 +47,7 @@ class AlgorithmDescriptor:
     bytes_per_vertex_private: int = 8
 
     def item(self, which: ItemKind) -> ItemCost:
+        """Per-item cost row: ``"v"`` (vertex), ``"e"`` (edge), ``"f"`` (found)."""
         return {"v": self.v, "e": self.e, "f": self.f}[which]
 
 

@@ -145,6 +145,7 @@ class TraversalEstimator:
 
     @property
     def low_variance(self) -> bool:
+        """§4.1.2 regime test: max/mean degree within the closed-form bound."""
         if self.deg_mean <= 0:
             return True
         return (self.deg_max / self.deg_mean) <= self.ratio_threshold

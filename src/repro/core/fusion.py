@@ -33,10 +33,30 @@ Protocol (driven by ``MultiQueryEngine.run_sessions(fuse=True)``):
     split across members pro rata — this is the modeled substance of fusion:
     one gang spin-up serves N iterations instead of N;
   * fused runs keep the full §4.3 machinery: the victim fence makes them
-    stealable and preemptible at package boundaries. A governor fence
-    *de-fuses* the gang — each member resumes independently over its
-    residual package ids — and a member whose packages drain early leaves
-    the gang at the next package boundary while the rest keep running.
+    stealable and preemptible at package boundaries. They publish their
+    steal backlog *eagerly* (``ScheduleRun(eager_backlog=True)``): whenever
+    the pool's free capacity cannot raise the gang's usable power-of-two
+    width, trailing fused slots are claimable by a thief's second gang —
+    a gang carries several sessions' packages, so parking idle workers
+    until it drains wastes more than a steal round-trip costs;
+  * the gang is *driven* by a synthetic session state with a **negative
+    sid** — a scheduling entity, never a query, so it never appears in
+    ``EngineReport.records``. Drivers are visible to the capacity governor
+    like any run (their priority is the max of the members'), and a landed
+    governor fence **de-fuses** the gang: each member resumes independently
+    over its residual package ids (parked, so the freed workers go to the
+    high-priority session the fence served first), exactly like a preempted
+    solo run (§4.3's package boundary is the preemption point). A member
+    whose packages drain early leaves the gang at the next package boundary
+    while the rest keep running;
+  * with the §4.4 feedback loop active (``run_sessions(width_feedback=
+    True)`` and a :class:`~.feedback.CostFeedback` installed), the flush
+    replaces the capped-T_max-sum width choice with
+    :func:`plan_gang_width`: one :func:`~.bounds.thread_bounds` call on the
+    *aggregated* :class:`~.cost_model.IterationWork` of the members, with
+    each candidate width scored by the table's measured width ratio — so a
+    gang narrows when wide execution measured poorly and the spared workers
+    stay available to co-running classes.
 
 The group holds no engine state beyond opaque ``payload`` handles, mirroring
 the deliberately decentralized :class:`~.stealing.StealRegistry`.
@@ -44,15 +64,18 @@ the deliberately decentralized :class:`~.stealing.StealRegistry`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import TYPE_CHECKING, Any
 
 import numpy as np
 
-from .bounds import ThreadBounds
+from .bounds import ThreadBounds, thread_bounds
 from .contention import HardwareModel
-from .cost_model import c_vertex_total
+from .cost_model import IterationWork, c_vertex_total
 from .descriptors import AlgorithmDescriptor
 from .scheduler import PackageRun, ScheduleTrace
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from .feedback import CostFeedback
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +137,7 @@ class FusionMember:
 
     @property
     def n_packages(self) -> int:
+        """Number of packages this member contributed to the gang."""
         return int(self.order.size)
 
     @property
@@ -148,16 +172,22 @@ class FusionGroup:
 
     @classmethod
     def build(
-        cls, staged: list[tuple[Any, Any, ThreadBounds]], *, capacity: int
+        cls,
+        staged: list[tuple[Any, Any, ThreadBounds]],
+        *,
+        capacity: int,
+        gang_width: int | None = None,
     ) -> "FusionGroup":
         """Fuse ``(payload, prep, bounds)`` triples into one group.
 
         The fused order interleaves member package lists round-robin (each in
         its member's own, possibly heavy-first, order) so the gang drains all
         members together and an uneven member finishes early instead of
-        serializing member-after-member. The fused width request is the
-        members' summed ``T_max`` capped at the pool capacity — one grant
-        request for the whole gang."""
+        serializing member-after-member. The fused width request defaults to
+        the members' summed ``T_max`` capped at the pool capacity — one grant
+        request for the whole gang; ``gang_width`` (from
+        :func:`plan_gang_width`'s measured-width sweep) overrides it, still
+        clamped to ``[t_min, capacity]``."""
         members: list[FusionMember] = []
         for payload, prep, bounds in staged:
             pkgs = prep.packages
@@ -180,7 +210,10 @@ class FusionGroup:
                 if r < m.n_packages:
                     member_of.append(i)
                     pos_of.append(r)
-        t_max = min(sum(max(m.bounds.t_max, 1) for m in members), capacity)
+        if gang_width is not None:
+            t_max = min(max(int(gang_width), 1), capacity)
+        else:
+            t_max = min(sum(max(m.bounds.t_max, 1) for m in members), capacity)
         t_min = min(max(m.bounds.t_min, 2) for m in members)
         fused_bounds = dataclasses.replace(
             members[0].bounds,
@@ -202,6 +235,7 @@ class FusionGroup:
 
     # ------------------------------------------------------------- splitting
     def active(self) -> list[FusionMember]:
+        """Members whose fused iteration has not been accounted yet."""
         return [m for m in self.members if not m.finished]
 
     def split(
@@ -296,6 +330,77 @@ def gang_overhead_ns(hw: HardwareModel, t: int, k: int, n_fused: int) -> float:
     return (hw.c_thread_overhead_ns * t + hw.c_para_startup_ns) * (k / n_fused)
 
 
+def aggregate_work(works: list[IterationWork]) -> IterationWork:
+    """Sum member iteration-work profiles into the gang's aggregate: the
+    fused run traverses every member's frontier/edges in one iteration, so
+    the aggregate is a plain componentwise sum (shared-memory footprint
+    included — the members' counter arrays are distinct even on one graph)."""
+    return IterationWork(
+        frontier=sum(w.frontier for w in works),
+        edges=sum(w.edges for w in works),
+        found=sum(w.found for w in works),
+        touched=sum(w.touched for w in works),
+        m_bytes=sum(w.m_bytes for w in works),
+    )
+
+
+def plan_gang_width(
+    staged: list[tuple[Any, Any, ThreadBounds]],
+    desc: AlgorithmDescriptor,
+    hw: HardwareModel,
+    *,
+    capacity: int,
+    feedback: "CostFeedback | None" = None,
+) -> int:
+    """Measured-width gang planning (replaces the capped-T_max-sum choice).
+
+    One :func:`~.bounds.thread_bounds` call on the *aggregated*
+    :class:`~.cost_model.IterationWork` of the staged members — with each
+    candidate width's modeled cost scaled by the feedback table's measured
+    width ratio (:meth:`~.feedback.CostFeedback.width_ratio`) — yields the
+    valid width range ``[T_min, T_max]`` for the gang as a whole. The
+    candidates inside that range are then *scored* by corrected gang
+    iteration cost (compute at the measured width ratio plus the one-per-gang
+    launch overhead) and the cheapest width wins: Algorithm 1's ``T_max`` is
+    only the widest width still profitable *versus sequential*, while a gang
+    should run at the width that is cheapest *among the profitable ones* —
+    when wide execution measured poorly, the gang narrows and the spared
+    workers stay available to co-running classes (the mixed-burst regime
+    where independent narrow gangs beat one maximal gang).
+
+    The result is clamped to the PR-4 capped-T_max-sum (never request more
+    parallelism than the members' own bounds justify together) and never
+    below 2. With a cold table every width ratio is 1.0 and the sweep is the
+    plain cost model on the aggregate."""
+    capped_sum = min(sum(max(b.t_max, 1) for _, _, b in staged), capacity)
+    width_correction = None
+    if feedback is not None:
+        width_correction = lambda t: feedback.width_ratio(desc.name, t)  # noqa: E731
+    agg = aggregate_work([prep.work for _, prep, _ in staged])
+    tb = thread_bounds(desc, hw, agg, p=capacity, width_correction=width_correction)
+    if not tb.parallel:
+        # the corrected sweep found no profitable width on the aggregate —
+        # fall back to the members' own summed bounds rather than fusing a
+        # gang the plan says should not exist (should_fuse gated it already)
+        return max(capped_sum, 2)
+    v = max(agg.frontier, 1.0)
+    best_t, best_cost = None, float("inf")
+    t = max(tb.t_min, 2)
+    while t <= min(tb.t_max, capped_sum):
+        ratio = width_correction(t) if width_correction is not None else 1.0
+        cost = (
+            v * c_vertex_total(desc, hw, agg, t) * ratio / t
+            + hw.c_thread_overhead_ns * t
+            + hw.c_para_startup_ns
+        )
+        if cost < best_cost:
+            best_t, best_cost = t, cost
+        t <<= 1
+    if best_t is None:
+        return max(min(tb.t_max, capped_sum), 2)
+    return max(best_t, 2)
+
+
 def should_fuse(
     staged: list[tuple[Any, Any, ThreadBounds]], *, capacity: int
 ) -> bool:
@@ -326,8 +431,10 @@ __all__ = [
     "FusionConfig",
     "FusionGroup",
     "FusionMember",
+    "aggregate_work",
     "gang_overhead_ns",
     "member_work_ns",
     "merge_member_trace",
+    "plan_gang_width",
     "should_fuse",
 ]

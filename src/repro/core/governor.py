@@ -30,14 +30,26 @@ Q-Graph-style locality preferences (arXiv:1805.11900) untouched:
   flight, and — when ``preempt=True`` — a waiting high-priority session
   that is parked with zero grant while the pool is fully checked out causes
   the governor to *fence* the fattest low-priority
-  :class:`~.scheduler.ScheduleRun` (reusing the PR-2 donate/fence boundary:
-  no package is interrupted mid-execution). The victim yields its whole
-  grant at its next package boundary and re-queues for workers at its own
-  priority. Fused gangs (``core.fusion``) are candidates like any run —
-  their driver's priority is the max of the members', so a gang carrying a
-  high-priority member is never fenced for an equal class — and a landed
-  fence *de-fuses* the gang: the engine dissolves it at the boundary and
-  each member re-queues independently over its residual packages.
+  :class:`~.scheduler.ScheduleRun` (reusing the PR-2 donate/fence boundary,
+  i.e. the paper's §4.3 package boundary: no package is interrupted
+  mid-execution). The victim yields its whole grant at its next package
+  boundary and re-queues for workers at its own priority. Fused gangs
+  (``core.fusion``) are candidates like any run — their *driver* is a
+  synthetic session state with a **negative sid** (a scheduling entity,
+  never a query: it appears in the governor's ``running`` view but never in
+  ``EngineReport.records``) whose priority is the max of the members', so a
+  gang carrying a high-priority member is never fenced for an equal class —
+  and a landed fence *de-fuses* the gang: the engine dissolves it at the
+  boundary and each member re-queues independently over its residual
+  packages, parked behind the high-priority session the fence served.
+
+Preemption interacts with the §4.4 width feedback loop
+(``core.feedback``): a preempted run resumes at whatever width its class
+can re-grab — a width its preparation never planned for. The residual
+steps' (width, modeled, measured) tuples flow into the width-keyed
+correction table through the engine's ordinary step accounting, so later
+preparations price those post-preemption widths correctly; the governor
+itself needs no extra plumbing for this.
 
 The governor is strictly optional: ``run_sessions(governor=None)`` performs
 zero governor calls and keeps every existing path bit-identical.

@@ -45,12 +45,15 @@ class WorkPackages:
 
     @property
     def n_packages(self) -> int:
+        """Number of generated work packages."""
         return len(self.bounds) - 1
 
     def sizes(self) -> np.ndarray:
+        """Frontier slots per package (``diff`` of the bounds)."""
         return np.diff(self.bounds)
 
     def covers(self, n: int) -> bool:
+        """True when the packages exactly tile frontier slots ``[0, n)``."""
         return int(self.bounds[0]) == 0 and int(self.bounds[-1]) == n
 
 

@@ -98,11 +98,13 @@ class WorkerPool:
             return grant
 
     def release(self, n: int) -> None:
+        """Return ``n`` granted workers to the pool."""
         with self._lock:
             self._outstanding = max(self._outstanding - int(n), 0)
 
     @property
     def available(self) -> int:
+        """Workers not currently checked out (never negative)."""
         with self._lock:
             return max(self.capacity - self._outstanding, 0)
 
@@ -126,6 +128,7 @@ class WorkerPool:
         self._resize_hooks.append(hook)
 
     def remove_resize_hook(self, hook: Callable[[int, int], None]) -> None:
+        """Unregister a hook added by :meth:`add_resize_hook` (idempotent)."""
         if hook in self._resize_hooks:
             self._resize_hooks.remove(hook)
 
@@ -154,6 +157,8 @@ class WorkerPool:
 
 @dataclasses.dataclass
 class PackageRun:
+    """One package's execution record: mode + the width it actually ran at."""
+
     package: int
     mode: Literal["parallel", "sequential", "stolen"]
     workers: int
@@ -183,8 +188,24 @@ class ScheduleTrace:
             return 0.0
         return sum(r.workers >= 2 or r.mode == "parallel" for r in self.runs) / len(self.runs)
 
+    def width_histogram(self) -> dict[int, int]:
+        """Packages executed per gang width (``{width: count}``).
+
+        Every :class:`PackageRun` records the width its package actually ran
+        at — the victim's own steps, a thief gang's stolen runs, and fused
+        split-back runs alike — so this is the per-iteration realization of
+        the (algorithm, width) axis the §4.4 feedback table corrects along:
+        the widths *delivered*, which preparation's ``T_max`` alone cannot
+        predict once stealing, fusion or preemption redistribute packages."""
+        hist: dict[int, int] = {}
+        for r in self.runs:
+            w = max(int(r.workers), 1)
+            hist[w] = hist.get(w, 0) + 1
+        return hist
+
     @property
     def max_workers(self) -> int:
+        """Widest gang that executed any package of this task."""
         return max((r.workers for r in self.runs), default=1)
 
 
@@ -208,6 +229,7 @@ STALL_STEP = ScheduleStep(batch=np.empty(0, dtype=np.int64), mode="stalled", wor
 
 
 def largest_pow2_leq(n: int) -> int:
+    """Largest power of two ≤ ``n`` (usable gang width), 0 for ``n < 1``."""
     if n < 1:
         return 0
     return 1 << (int(n).bit_length() - 1)
@@ -411,6 +433,8 @@ class ScheduleRun:
         return ScheduleStep(batch, "sequential", 1)
 
     def next_step(self) -> ScheduleStep | None:
+        """Hand out the next executable batch (§4.3 steps 2–5), re-evaluating
+        the grant first; ``None`` once every package is dispatched/donated."""
         # the fence lock makes dispatch atomic against a concurrent donate():
         # cursor and fence can never cross mid-claim, so no package is ever
         # handed out twice (the DES is single-threaded, but the run keeps the

@@ -60,6 +60,7 @@ from .fusion import (
     gang_overhead_ns,
     member_work_ns,
     merge_member_trace,
+    plan_gang_width,
     should_fuse,
 )
 from .packaging import WorkPackages
@@ -88,19 +89,39 @@ class QueryExecutor(Protocol):
 
     desc: AlgorithmDescriptor
 
-    def start(self) -> None: ...
-    def finished(self) -> bool: ...
-    def graph_stats(self) -> Any: ...
+    def start(self) -> None:
+        """Reset executor state for a fresh run of the query."""
+        ...
+
+    def finished(self) -> bool:
+        """True when the query has converged / exhausted its iterations."""
+        ...
+
+    def graph_stats(self) -> Any:
+        """The ``GraphStats`` of the traversed graph (preparation input)."""
+        ...
     def frontier(self) -> tuple[int, np.ndarray | None, float]:
         """(frontier_size, frontier_degrees|None, unvisited_estimate)"""
         ...
-    def run_packages(self, package_ids: np.ndarray, packages: WorkPackages, t: int, parallel: bool) -> None: ...
-    def edges_traversed(self) -> float: ...
-    def result(self) -> Any: ...
+    def run_packages(self, package_ids: np.ndarray, packages: WorkPackages, t: int, parallel: bool) -> None:
+        """Execute the given packages at width ``t`` (the real compute)."""
+        ...
+
+    def edges_traversed(self) -> float:
+        """Edges processed so far (the PEPS/TEPS numerator)."""
+        ...
+
+    def result(self) -> Any:
+        """The query's answer (ranks, BFS tree, ...) for verification."""
+        ...
 
 
 @dataclasses.dataclass
 class QueryRecord:
+    """Per-query ground truth: modeled/measured time, edges, latencies, and
+    the full decision traces — kept exact across stealing, fusion split-back
+    and preemption (the engine books every package back to its owner)."""
+
     session: int
     query: int
     algorithm: str
@@ -136,6 +157,10 @@ def _percentiles(latencies_ns: Sequence[float]) -> dict[str, float]:
 
 @dataclasses.dataclass
 class EngineReport:
+    """Run-level result of ``run_sessions``: per-query records plus the
+    machine timelines (utilization, capacity, in-flight, steal/fusion/
+    preemption events) and the derived throughput/latency accessors."""
+
     records: list[QueryRecord]
     makespan_modeled_ns: float
     makespan_measured_ns: float
@@ -167,6 +192,7 @@ class EngineReport:
 
     @property
     def total_edges(self) -> float:
+        """Edges processed across all queries (throughput numerator)."""
         return sum(r.edges for r in self.records)
 
     def throughput_modeled(self) -> float:
@@ -176,6 +202,7 @@ class EngineReport:
         return self.total_edges / (self.makespan_modeled_ns * 1e-9)
 
     def throughput_measured(self) -> float:
+        """Aggregate edges per second of real wall time on this host."""
         if self.makespan_measured_ns <= 0:
             return 0.0
         return self.total_edges / (self.makespan_measured_ns * 1e-9)
@@ -186,6 +213,7 @@ class EngineReport:
         return _percentiles([r.latency_ns for r in self.records if r.finished_ns > 0])
 
     def latency_percentiles_by_session(self) -> dict[int, dict[str, float]]:
+        """p50/p95/p99 modeled latency per session id (ns)."""
         by_session: dict[int, list[float]] = collections.defaultdict(list)
         for r in self.records:
             if r.finished_ns > 0:
@@ -236,6 +264,7 @@ class EngineReport:
 
     @property
     def max_inflight(self) -> int:
+        """Peak number of concurrently admitted sessions."""
         return max((n for _, n in self.inflight), default=0)
 
     def mean_inflight(self) -> float:
@@ -248,10 +277,12 @@ class EngineReport:
     # -------------------------------------------------- elastic capacity
     @property
     def grow_events(self) -> int:
+        """Governor resizes that increased capacity."""
         return sum(new > old for _, old, new, _ in self.resize_events)
 
     @property
     def shrink_events(self) -> int:
+        """Governor resizes that decreased capacity."""
         return sum(new < old for _, old, new, _ in self.resize_events)
 
     def resize_rate(self) -> float:
@@ -281,6 +312,19 @@ class EngineReport:
         if self.makespan_modeled_ns <= 0:
             return 0.0
         return self.total_fused / (self.makespan_modeled_ns * 1e-9)
+
+    # -------------------------------------------------- width accounting
+    def width_histogram(self) -> dict[int, int]:
+        """Packages executed per gang width across all queries — the sum of
+        the per-trace :meth:`~.scheduler.ScheduleTrace.width_histogram`
+        maps. The delivered-width distribution the §4.4 width-keyed feedback
+        corrects along (fig17 reports it per variant)."""
+        hist: dict[int, int] = {}
+        for r in self.records:
+            for trace in r.traces:
+                for w, n in trace.width_histogram().items():
+                    hist[w] = hist.get(w, 0) + n
+        return hist
 
     # -------------------------------------------------- work-stealing
     @property
@@ -315,6 +359,7 @@ class PoissonArrivals:
     seed: int = 0
 
     def times_ns(self, n: int) -> np.ndarray:
+        """The first ``n`` arrival timestamps (modeled ns, cumulative)."""
         if self.rate_per_s <= 0:
             raise ValueError("rate_per_s must be positive")
         rng = np.random.default_rng(self.seed)
@@ -364,6 +409,7 @@ class AdmissionController:
         self._enqueued = 0
 
     def cap(self, pool: WorkerPool) -> int:
+        """Current global admission cap derived from the pool's capacity."""
         derived = max(pool.capacity // self.target_share, 1)
         if self.max_inflight is not None:
             derived = min(derived, self.max_inflight)
@@ -384,6 +430,8 @@ class AdmissionController:
         self.inflight_by_class[int(priority)] += 1
 
     def try_admit(self, pool: WorkerPool, *, priority: int = 0) -> bool:
+        """Admit immediately if neither the cap nor the class quota blocks
+        (bypasses the waiter queue — arrivals should use :meth:`submit`)."""
         if self.inflight >= self.cap(pool) or self._class_full(priority):
             return False
         self._admit_one(priority)
@@ -391,6 +439,7 @@ class AdmissionController:
 
     @property
     def has_waiters(self) -> bool:
+        """True while any session queues for admission."""
         return bool(self._waiting)
 
     @property
@@ -399,6 +448,7 @@ class AdmissionController:
         return len(self._waiting)
 
     def enqueue(self, session: Any) -> None:
+        """Queue a session for admission (priority-FIFO order)."""
         prio = int(getattr(session, "priority", 0))
         heapq.heappush(self._waiting, (-prio, self._enqueued, session))
         self._enqueued += 1
@@ -514,6 +564,7 @@ class MultiQueryEngine:
         seq_package_limit: int = 4,
         policy: str = "scheduler",
         feedback: CostFeedback | None = None,
+        width_feedback: bool = True,
         admission: AdmissionController | None = None,
         high_priority_reserve: int = 0,
     ):
@@ -529,7 +580,47 @@ class MultiQueryEngine:
         # §4.4 feedback loop (paper future work): measured package costs
         # correct subsequent predictions
         self.feedback = feedback
+        # width-keyed feedback (the §4.4 table per (algorithm, width)):
+        # every consumer — preparation corrections, fused-gang width sweeps,
+        # thief gang sizing — and every per-step width observation is active
+        # only when a feedback object is installed AND this flag is on;
+        # ``run_sessions(width_feedback=False)`` disables all of it for the
+        # run and is byte-identical to the pre-width-feedback engine
+        self.width_feedback = bool(width_feedback)
+        self._wfb_active = self.width_feedback
         self.admission = admission or AdmissionController()
+
+    @property
+    def _width_fb_on(self) -> bool:
+        """True while width-keyed feedback observations/consumers run."""
+        return self.feedback is not None and self._wfb_active
+
+    def _width_signature(self, algorithm: str) -> tuple:
+        """The feedback signal preparation actually consumes for one
+        algorithm: ``width_ratio`` at every candidate width of the Algorithm
+        1 sweep (1 and each power of two up to the pool capacity). Two
+        preparations with equal signatures make identical decisions, so the
+        shared-prep cache stamps entries with this instead of an
+        observation counter."""
+        assert self.feedback is not None
+        ratios = []
+        t = 1
+        while t <= self.pool.capacity:
+            ratios.append(self.feedback.width_ratio(algorithm, t))
+            t <<= 1
+        return tuple(ratios)
+
+    def _observe_width(
+        self, algorithm: str, width: int, modeled_ns: float, measured_ns: float
+    ) -> None:
+        """Feed one executed step/batch into the width-keyed §4.4 table.
+
+        Called from every path that executes packages at a known width —
+        plain schedule steps, fused split-back shares, stolen batches; the
+        post-preemption residual runs come back through the plain-step path
+        — so no extra measurement plumbing exists anywhere."""
+        if self._width_fb_on:
+            self.feedback.observe_width(algorithm, width, modeled_ns, measured_ns)
 
     # ------------------------------------------------------------------
     # shared per-iteration path (both run_query and run_sessions)
@@ -560,7 +651,12 @@ class MultiQueryEngine:
         fdeg: np.ndarray | None,
         unvisited: float,
     ) -> PreparedIteration:
-        """Preparation step; topology-centric algorithms prepare once (§4.5)."""
+        """Preparation step; topology-centric algorithms prepare once (§4.5).
+
+        With width feedback active, the preparation consults the measured
+        (algorithm, width) correction table, so the plan accounts for the
+        widths thief gangs, fused gangs and post-preemption resumes actually
+        delivered in earlier iterations."""
         if prev is not None and executor.desc.kind != "data_driven":
             return prev
         return prepare_iteration(
@@ -571,6 +667,7 @@ class MultiQueryEngine:
             frontier_degrees=fdeg,
             unvisited=unvisited,
             p=self.pool.capacity,
+            feedback=self.feedback if self._width_fb_on else None,
         )
 
     def _execute_step(
@@ -634,8 +731,16 @@ class MultiQueryEngine:
                     raise RuntimeError(
                         "worker pool exhausted: a schedule step must hold >= 1 worker"
                     )
-                measured += self._execute_step(executor, prep, step)
-                modeled += self._step_cost_ns(executor.desc, prep, step)
+                step_measured = self._execute_step(executor, prep, step)
+                step_modeled = self._step_cost_ns(executor.desc, prep, step)
+                measured += step_measured
+                modeled += step_modeled
+                self._observe_width(
+                    executor.desc.name,
+                    step.workers if step.mode == "parallel" else 1,
+                    step_modeled,
+                    step_measured,
+                )
         finally:
             srun.close()
         self._account_iteration(executor, record, srun.trace, modeled, measured)
@@ -675,6 +780,7 @@ class MultiQueryEngine:
         governor: "CapacityGovernor | None" = None,
         fuse: bool = False,
         fusion: FusionConfig | None = None,
+        width_feedback: bool | None = None,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
@@ -722,7 +828,21 @@ class MultiQueryEngine:
         their residual packages) and a member whose packages drain early
         leaves at the next boundary. ``fuse=False`` (the default) performs
         zero fusion calls and keeps every decision bit-identical to the
-        fusion-less engine."""
+        fusion-less engine.
+
+        ``width_feedback`` controls the §4.4 *width-keyed* feedback table
+        for this run (``None`` → the engine's constructor setting, default
+        on). Active only when a :class:`~.feedback.CostFeedback` is
+        installed, it (a) feeds every executed step/batch — plain schedule
+        steps, fused split-back shares, stolen batches, post-preemption
+        residual steps — into per-(algorithm, width) corrections, and (b)
+        lets three consumers read them: preparation scores candidate widths
+        with measured ratios, the fusion flush sweeps the gang width over
+        the aggregated member work, and thieves size their gangs by measured
+        width efficiency. ``width_feedback=False`` performs zero width-table
+        calls and keeps every scheduling decision byte-identical to the
+        width-feedback-less engine (the fig10–16 modeled rows are
+        unchanged)."""
         if priorities is None:
             prio = [0] * sessions
         elif callable(priorities):
@@ -740,6 +860,10 @@ class MultiQueryEngine:
             arrival_ns = np.asarray(list(arrivals), dtype=np.float64)
             if arrival_ns.shape != (sessions,):
                 raise ValueError("arrivals must have one entry per session")
+
+        prev_wfb = self._wfb_active
+        if width_feedback is not None:
+            self._wfb_active = bool(width_feedback)
 
         records: list[QueryRecord] = []
         report = EngineReport(
@@ -769,7 +893,9 @@ class MultiQueryEngine:
         fusion_staged: dict[Any, list[tuple[_SessionState, ThreadBounds]]] = {}
         drivers: list[_SessionState] = []
         driver_sid = 0
-        prep_cache: dict[Any, PreparedIteration] = {}
+        # (width-signature | None, PreparedIteration) per key: the first
+        # element stamps the feedback state the plan was computed under
+        prep_cache: dict[Any, tuple[Any, PreparedIteration]] = {}
         # the governor's view of running entities; rebuilt only when a gang
         # forms or retires (never per event — the DES hot loop must not copy
         # the state list on every pop)
@@ -914,8 +1040,23 @@ class MultiQueryEngine:
                 )
                 if budget < 1:
                     continue
+                if self._width_fb_on and entry.algorithm is not None:
+                    # size the thief gang from measured width efficiency:
+                    # among pow2 widths inside the governed budget, request
+                    # the one that measured best for this algorithm, not
+                    # blindly the victim's T_max
+                    want = registry.thief_gang_width(
+                        self.feedback,
+                        entry.algorithm,
+                        max(entry.run.bounds.t_max, 1),
+                        budget,
+                    )
+                else:
+                    want = min(max(entry.run.bounds.t_max, 1), budget)
+                if want < 1:
+                    continue
                 got = self.pool.request(
-                    min(max(entry.run.bounds.t_max, 1), budget),
+                    want,
                     priority=max(thief.priority, entry.priority),
                 )
                 usable = largest_pow2_leq(got)
@@ -962,6 +1103,11 @@ class MultiQueryEngine:
                 step = ScheduleStep(batch, mode, usable)
                 measured = self._execute_step(victim.executor, victim.prep, step)
                 step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
+                # stolen batches run at a width the victim never planned for:
+                # exactly the observations the width table exists to capture
+                self._observe_width(
+                    victim.executor.desc.name, usable, step_ns, measured
+                )
                 thief.steal = _StealJob(
                     victim=victim,
                     run=entry.run,
@@ -1013,6 +1159,9 @@ class MultiQueryEngine:
                     priority=st.priority,
                     graph_key=st.graph_key,
                     payload=st,
+                    algorithm=(
+                        st.executor.desc.name if st.executor is not None else None
+                    ),
                 )
             st.iter_modeled_ns = 0.0
             st.iter_measured_ns = 0.0
@@ -1045,6 +1194,12 @@ class MultiQueryEngine:
             total += ov
             for share in shares:
                 share[3] += ov * (share[2].size / batch.size)
+                # split-back commits carry exact per-member (width, modeled,
+                # measured) tuples — feed the width table here so members'
+                # next preparations know how the gang width really performed
+                self._observe_width(
+                    share[0].payload.executor.desc.name, t_eff, share[3], share[4]
+                )
             return shares, total
 
         def _finalize_member(slot: FusionMember, t: float) -> None:
@@ -1065,8 +1220,22 @@ class MultiQueryEngine:
         ) -> None:
             """Fuse the staged chunk into one gang and start its driver."""
             nonlocal driver_sid
+            staged_triples = [(s, s.prep, b) for s, b in chunk]
+            gang_width = None
+            if self._width_fb_on:
+                # measured-width planning: one thread_bounds call on the
+                # members' aggregated IterationWork, each candidate width
+                # scored by the feedback table's measured width ratio —
+                # replaces the blind capped-T_max-sum width choice
+                gang_width = plan_gang_width(
+                    staged_triples,
+                    chunk[0][0].executor.desc,
+                    self.hw,
+                    capacity=self.pool.capacity,
+                    feedback=self.feedback,
+                )
             group = FusionGroup.build(
-                [(s, s.prep, b) for s, b in chunk], capacity=self.pool.capacity
+                staged_triples, capacity=self.pool.capacity, gang_width=gang_width
             )
             driver_sid -= 1
             driver = _SessionState(
@@ -1097,6 +1266,7 @@ class MultiQueryEngine:
                     graph_key=driver.graph_key,
                     payload=driver,
                     fused=True,
+                    algorithm=chunk[0][0].executor.desc.name,
                 )
             drivers.append(driver)
             _sync_running()
@@ -1426,11 +1596,27 @@ class MultiQueryEngine:
                             fp,
                             self.pool.capacity,
                         )
+                        # corrections evolve: a prep computed under an older
+                        # width table must not serve a newer one. Preparation
+                        # consumes the feedback table ONLY through
+                        # width_ratio(algorithm, t) at the sweep's candidate
+                        # widths, so that tuple is the exact staleness stamp:
+                        # the cached *value* is replaced in place when (and
+                        # only when) a ratio the plan depends on actually
+                        # moved — an observation-counter stamp would
+                        # invalidate on every executed step and silently
+                        # negate the shared-prep amortization, and stamping
+                        # the *key* would strand dead entries
+                        ver = (
+                            self._width_signature(ex.desc.name)
+                            if self._width_fb_on
+                            else None
+                        )
                         cached = prep_cache.get(ck)
-                        if cached is None:
-                            cached = self._prepare(ex, None, fsize, fdeg, unvisited)
+                        if cached is None or cached[0] != ver:
+                            cached = (ver, self._prepare(ex, None, fsize, fdeg, unvisited))
                             prep_cache[ck] = cached
-                        st.prep = cached
+                        st.prep = cached[1]
                     else:
                         st.prep = self._prepare(ex, st.prep, fsize, fdeg, unvisited)
                     bounds = self._decide(st.prep)
@@ -1505,9 +1691,18 @@ class MultiQueryEngine:
                     continue
 
                 assert st.executor is not None and st.prep is not None
-                st.iter_measured_ns += self._execute_step(st.executor, st.prep, step)
+                step_measured = self._execute_step(st.executor, st.prep, step)
+                st.iter_measured_ns += step_measured
                 step_ns = self._step_cost_ns(st.executor.desc, st.prep, step)
                 st.iter_modeled_ns += step_ns
+                # plain schedule steps (including post-preemption residual
+                # runs) carry (width, modeled, measured) — feed the table
+                self._observe_width(
+                    st.executor.desc.name,
+                    step.workers if step.mode == "parallel" else 1,
+                    step_ns,
+                    step_measured,
+                )
                 _sample(t)
                 _push(t + step_ns, EV_STEP, st)
                 # grant re-evaluation inside next_step may have released
@@ -1525,6 +1720,7 @@ class MultiQueryEngine:
         finally:
             # an exception in executor code must not leak held grants,
             # admission slots, or the resize hook on the shared engine state
+            self._wfb_active = prev_wfb
             self.pool.remove_resize_hook(_on_resize)
             for s in states + drivers:
                 if s.srun is not None:

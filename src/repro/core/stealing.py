@@ -38,17 +38,33 @@ as same-graph — both for the thief's locality preference here and for gang
 fusion's co-scheduling. (Keying by ``id(graph)`` silently disabled both
 whenever sessions did not literally share one object.)
 
-Fused gangs participate too: a :class:`~.fusion.FusionGroup` driver publishes
-its fused run with ``fused=True``; thieves claim trailing *fused* ids over
-the same fence and the engine splits the claim back per member before
-executing it.
+Fused gangs participate too: a :class:`~.fusion.FusionGroup` driver (a
+negative-sid synthetic scheduling entity, never a query) publishes its fused
+run with ``fused=True``; thieves claim trailing *fused* ids over the same
+fence and the engine splits the claim back per member before executing it.
+Fused runs publish *eagerly* (``ScheduleRun(eager_backlog=True)``): their
+backlog is claimable whenever free capacity cannot raise the gang's usable
+power-of-two width, not only when the gang grinds or is width-capped —
+a gang carries several sessions' packages, so idle workers are better spent
+on a thief's second gang than parked until the gang drains.
+
+Thief gangs are *sized* in two steps: :meth:`StealRegistry.steal_budget`
+bounds the request by governed availability (reserve floor honoured, zero
+while a shrink's grant debt drains — PR 3), and — with the §4.4 width-keyed
+feedback table active — :meth:`StealRegistry.thief_gang_width` picks the
+power-of-two width inside that budget that maximizes *measured* width
+efficiency, instead of blindly requesting the victim's ``T_max``: a thief
+has no obligation to reproduce a width that measured poorly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Hashable, Iterator
+from typing import TYPE_CHECKING, Any, Hashable, Iterator
 
 from .scheduler import ScheduleRun, WorkerPool
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from .feedback import CostFeedback
 
 
 def graph_identity(executor: Any) -> Hashable:
@@ -73,9 +89,13 @@ class StealEntry:
     graph_key: Hashable = None  # identity of the graph the run traverses
     payload: Any = None         # opaque engine-side state (session record)
     fused: bool = False         # run is a fused gang (multi-session victim)
+    # algorithm name of the victim's query (gang members share one): the key
+    # thieves use to look up measured width efficiency when sizing their gang
+    algorithm: str | None = None
 
     @property
     def backlog(self) -> int:
+        """Packages a thief could claim from this victim right now."""
         return self.run.stealable_backlog
 
 
@@ -99,7 +119,10 @@ class StealRegistry:
         graph_key: Hashable = None,
         payload: Any = None,
         fused: bool = False,
+        algorithm: str | None = None,
     ) -> StealEntry:
+        """Register ``run`` as a claimable victim under ``key`` (replacing
+        any previous entry for that key); returns the live entry."""
         entry = StealEntry(
             key=key,
             run=run,
@@ -107,14 +130,17 @@ class StealRegistry:
             graph_key=graph_key,
             payload=payload,
             fused=fused,
+            algorithm=algorithm,
         )
         self._entries[key] = entry
         return entry
 
     def withdraw(self, key: Hashable) -> None:
+        """Remove ``key``'s entry (iteration over, or victim retired)."""
         self._entries.pop(key, None)
 
     def entry(self, key: Hashable) -> StealEntry | None:
+        """The live entry published under ``key``, or ``None``."""
         return self._entries.get(key)
 
     def __len__(self) -> int:
@@ -124,6 +150,7 @@ class StealRegistry:
         return iter(self._entries.values())
 
     def total_backlog(self) -> int:
+        """Claimable packages across every published victim."""
         return sum(e.backlog for e in self._entries.values())
 
     @staticmethod
@@ -140,6 +167,35 @@ class StealRegistry:
             return 0
         floor = 0 if priority >= 1 else pool.high_priority_reserve
         return max(pool.available - floor, 0)
+
+    @staticmethod
+    def thief_gang_width(
+        feedback: "CostFeedback",
+        algorithm: str,
+        t_max: int,
+        budget: int,
+    ) -> int:
+        """Size a thief gang from *measured* width efficiency.
+
+        Among power-of-two widths ``w ≤ min(t_max, budget)``, pick the one
+        maximizing ``w / width_ratio(algorithm, w)`` — the corrected
+        throughput of a ``w``-wide gang relative to the algorithm's mode
+        average (ideal scaling divided by how much worse width ``w``
+        measured). With a cold table every ratio is 1.0 and the maximal
+        power of two inside the budget wins, matching the raw
+        ``min(T_max, steal_budget)`` request rounded to its usable width.
+        Returns 0 when the budget admits no worker at all."""
+        cap = min(max(int(t_max), 1), int(budget))
+        if cap < 1:
+            return 0
+        best_w, best_eff = 0, 0.0
+        w = 1
+        while w <= cap:
+            eff = w / feedback.width_ratio(algorithm, w)
+            if eff > best_eff:
+                best_w, best_eff = w, eff
+            w <<= 1
+        return best_w
 
     def pick_victim(
         self,

@@ -1,0 +1,338 @@
+"""Width-aware cost feedback (§4.4 table): hierarchical fallback semantics,
+the correction clamp, censoring, the planning consumers (fused width sweep,
+thief gang sizing, preparation corrections), and ``width_feedback=False``
+inertness."""
+import math
+
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    CostFeedback,
+    FusionConfig,
+    MultiQueryEngine,
+    PR_PULL,
+    StealRegistry,
+    XEON_E5_2660V4,
+    plan_gang_width,
+    prepare_iteration,
+    thread_bounds,
+)
+
+from _hypothesis_compat import given, settings, st
+
+
+# ---------------- hierarchical fallback (table unit tests) ----------------
+
+def test_cold_start_correction_is_one():
+    fb = CostFeedback()
+    assert fb.correction("a", True) == 1.0
+    assert fb.correction("a", False) == 1.0
+    assert fb.correction("a", True, width=16) == 1.0
+    assert fb.width_ratio("a", 16) == 1.0
+
+
+def test_exact_width_hit():
+    fb = CostFeedback(alpha=1.0)
+    fb.observe_width("a", 8, 1.0, 2.0)
+    assert fb.correction("a", True, width=8) == pytest.approx(2.0)
+    # the exact entry shadows mode-level signal
+    fb.observe("a", True, 1.0, 0.5)
+    assert fb.correction("a", True, width=8) == pytest.approx(2.0)
+
+
+def test_pow2_bucket_fallback():
+    fb = CostFeedback(alpha=1.0)
+    fb.observe_width("a", 8, 1.0, 2.0)
+    # width 13 has no exact entry; its pow2 bucket (8) carries the signal
+    assert fb.correction("a", True, width=13) == pytest.approx(2.0)
+    # an observation at a non-pow2 width also lands in its bucket
+    fb2 = CostFeedback(alpha=1.0)
+    fb2.observe_width("a", 12, 1.0, 3.0)
+    assert fb2.correction("a", True, width=12) == pytest.approx(3.0)  # exact
+    assert fb2.correction("a", True, width=9) == pytest.approx(3.0)   # bucket 8
+    assert fb2.correction("a", True, width=8) == pytest.approx(3.0)   # bucket 8
+
+
+def test_mode_level_fallback():
+    fb = CostFeedback(alpha=1.0)
+    fb.observe("a", True, 1.0, 4.0)
+    # no width entries at all: any width falls back to the mode scalar
+    assert fb.correction("a", True, width=16) == pytest.approx(4.0)
+    # but the other mode stays cold
+    assert fb.correction("a", False, width=1) == 1.0
+
+
+def test_width_ratio_is_relative_to_mode_scalar():
+    fb = CostFeedback(alpha=1.0)
+    fb.observe("a", True, 1.0, 2.0)         # mode scalar 2.0
+    fb.observe_width("a", 16, 1.0, 4.0)     # width 16 measured 2x worse
+    assert fb.width_ratio("a", 16) == pytest.approx(2.0)
+    # a width matching the mode average is neutral
+    fb.observe_width("a", 4, 1.0, 2.0)
+    assert fb.width_ratio("a", 4) == pytest.approx(1.0)
+
+
+def test_predict_uses_width_when_given():
+    fb = CostFeedback(alpha=1.0)
+    fb.observe("a", True, 1.0, 2.0)
+    fb.observe_width("a", 8, 1.0, 4.0)
+    assert fb.predict("a", True, 100.0) == pytest.approx(200.0)
+    assert fb.predict("a", True, 100.0, width=8) == pytest.approx(400.0)
+
+
+# ---------------- clamp regression (ISSUE 5 satellite) ----------------
+
+def test_correction_clamped_even_when_ewma_overshoots():
+    """``observe`` clips the ratio before the log-EWMA, but nothing used to
+    re-clip the accumulated sum — an over-relaxed alpha (> 1) overshoots the
+    fixed point and walked the correction past ``clip``. ``correction()``
+    must clamp at the read side."""
+    fb = CostFeedback(alpha=1.6, clip=4.0)
+    fb.observe("a", True, 1.0, 1e9)  # ratio clips to 4.0; EWMA overshoots
+    assert fb._log_corr[("a", True)] > math.log(4.0)  # the raw sum escaped
+    assert fb.correction("a", True) <= 4.0            # the read did not
+    fb2 = CostFeedback(alpha=1.6, clip=4.0)
+    fb2.observe_width("a", 8, 1e9, 1.0)
+    assert fb2.correction("a", True, width=8) >= 1 / 4.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 30),
+    seed=st.integers(0, 10_000),
+    alpha=st.floats(0.05, 1.0),
+)
+def test_corrections_bounded_under_arbitrary_observations(n, seed, alpha):
+    """Property: any observe/observe_width sequence keeps every correction
+    (mode, exact width, bucket, and hierarchical lookups) in [1/clip, clip]."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    fb = CostFeedback(alpha=alpha, clip=8.0)
+    for _ in range(n):
+        modeled = float(10 ** rng.uniform(-3, 9))
+        measured = float(10 ** rng.uniform(-3, 9))
+        if rng.integers(2):
+            fb.observe("a", bool(rng.integers(2)), modeled, measured)
+        else:
+            fb.observe_width("a", int(rng.integers(1, 64)), modeled, measured)
+    for parallel in (False, True):
+        for width in (None, 1, 2, 3, 8, 12, 16, 64):
+            c = fb.correction("a", parallel, width=width)
+            assert 1 / 8.0 - 1e-12 <= c <= 8.0 + 1e-12
+    for width in (1, 2, 8, 12, 64):
+        r = fb.width_ratio("a", width)
+        assert r > 0
+
+
+# ---------------- censoring ----------------
+
+def test_censored_signal_yields_neutral_width_ratio():
+    """Clip-pinned entries cannot rank widths: when either side of the
+    width-vs-mode comparison is predominantly censored, the ratio is 1.0."""
+    fb = CostFeedback(alpha=1.0, clip=8.0)
+    fb.observe("a", True, 1.0, 100.0)        # censored mode scalar
+    fb.observe_width("a", 16, 1.0, 2.0)      # in-range width entry
+    assert fb.width_ratio("a", 16) == 1.0    # reference untrustworthy
+    fb2 = CostFeedback(alpha=1.0, clip=8.0)
+    fb2.observe("a", True, 1.0, 2.0)         # in-range mode scalar
+    fb2.observe_width("a", 16, 1.0, 100.0)   # censored width entry
+    assert fb2.width_ratio("a", 16) == 1.0   # entry untrustworthy
+    # correction() itself still reports the (clamped) censored estimate
+    assert fb2.correction("a", True, width=16) == pytest.approx(8.0)
+
+
+def test_uncensored_signal_flows_through():
+    fb = CostFeedback(alpha=1.0, clip=8.0)
+    fb.observe("a", True, 1.0, 2.0)
+    fb.observe_width("a", 16, 1.0, 6.0)
+    assert fb.width_ratio("a", 16) == pytest.approx(3.0)
+
+
+def test_width_one_cancels_common_mode_in_parallel_workload():
+    """Regression: width-1 entries are fed per step (sequential grinding
+    inside parallel iterations), but the (algorithm, False) scalar is only
+    fed by fully-sequential iterations — cold in a parallel workload. The
+    reference must fall back to the other mode's scalar so a uniform host
+    offset cancels at width 1 too, instead of inflating c_seq by up to
+    clip× while c_par stays neutral."""
+    fb = CostFeedback(alpha=1.0)
+    fb.observe("pr", True, 1.0, 3.0)          # only parallel iterations
+    for w in (1, 8, 16):
+        fb.observe_width("pr", w, 1.0, 3.0)   # same uniform 3x offset
+    assert fb.width_ratio("pr", 1) == pytest.approx(1.0)
+    assert fb.width_ratio("pr", 8) == pytest.approx(1.0)
+    assert fb.width_ratio("pr", 16) == pytest.approx(1.0)
+    # a genuinely worse width (still inside the clip window, so uncensored)
+    # stands out against the fallback reference
+    fb.observe_width("pr", 16, 1.0, 7.5)
+    assert fb.width_ratio("pr", 16) > 1.0
+
+
+# ---------------- planning consumers ----------------
+
+def _staged(hw, graph, members=6, p=16):
+    import numpy as np
+
+    deg = np.asarray(graph.out_degrees())
+    prep = prepare_iteration(
+        PR_PULL, hw, graph.stats, graph.num_vertices, frontier_degrees=deg, p=p
+    )
+    return [(None, prep, prep.bounds)] * members, prep
+
+
+def _seeded_fb(penalties=((1, 1.0), (2, 1.0), (4, 1.0), (8, 3.0), (16, 8.0))):
+    fb = CostFeedback()
+    for w, penalty in penalties:
+        for _ in range(32):
+            fb.observe_width(PR_PULL.name, w, 1.0, penalty)
+    return fb
+
+
+def test_plan_gang_width_cold_matches_capped_behaviour(medium_rmat):
+    hw = XEON_E5_2660V4
+    staged, _ = _staged(hw, medium_rmat)
+    cold = plan_gang_width(staged, PR_PULL, hw, capacity=16, feedback=None)
+    capped = min(sum(max(b.t_max, 1) for _, _, b in staged), 16)
+    assert 2 <= cold <= capped
+
+
+def test_plan_gang_width_narrows_under_measured_inefficiency(medium_rmat):
+    hw = XEON_E5_2660V4
+    staged, _ = _staged(hw, medium_rmat)
+    cold = plan_gang_width(staged, PR_PULL, hw, capacity=16, feedback=None)
+    seeded = plan_gang_width(
+        staged, PR_PULL, hw, capacity=16, feedback=_seeded_fb()
+    )
+    assert seeded < cold
+    assert seeded >= 2
+
+
+def test_thief_gang_width_cold_takes_max_pow2():
+    fb = CostFeedback()
+    assert StealRegistry.thief_gang_width(fb, "x", 16, 16) == 16
+    assert StealRegistry.thief_gang_width(fb, "x", 16, 5) == 4
+    assert StealRegistry.thief_gang_width(fb, "x", 3, 16) == 2
+    assert StealRegistry.thief_gang_width(fb, "x", 16, 0) == 0
+
+
+def test_thief_gang_width_narrows_under_measured_inefficiency():
+    fb = _seeded_fb()
+    w = StealRegistry.thief_gang_width(fb, PR_PULL.name, 16, 16)
+    assert 1 <= w < 16
+
+
+def test_prepare_iteration_consults_width_table(small_rmat):
+    """A trusted width table that penalizes wide execution narrows the
+    prepared T_max versus the uncorrected plan."""
+    import numpy as np
+
+    hw = XEON_E5_2660V4
+    deg = np.asarray(small_rmat.out_degrees())
+    plain = prepare_iteration(
+        PR_PULL, hw, small_rmat.stats, small_rmat.num_vertices,
+        frontier_degrees=deg, p=16,
+    )
+    fb = CostFeedback()
+    for _ in range(32):
+        for w in (8, 16):
+            fb.observe_width(PR_PULL.name, w, 1.0, 7.9)  # wide measured awful
+        for w in (1, 2, 4):
+            fb.observe_width(PR_PULL.name, w, 1.0, 1.0)
+    corrected = prepare_iteration(
+        PR_PULL, hw, small_rmat.stats, small_rmat.num_vertices,
+        frontier_degrees=deg, p=16, feedback=fb,
+    )
+    assert corrected.bounds.t_max <= plain.bounds.t_max
+    assert corrected.bounds.t_max < 8 or not corrected.bounds.parallel
+
+
+def test_thread_bounds_identity_with_unit_correction(small_rmat):
+    """``width_correction`` returning 1.0 everywhere must reproduce the
+    uncorrected sweep bit-for-bit."""
+    import numpy as np
+
+    hw = XEON_E5_2660V4
+    deg = np.asarray(small_rmat.out_degrees())
+    prep = prepare_iteration(
+        PR_PULL, hw, small_rmat.stats, small_rmat.num_vertices,
+        frontier_degrees=deg, p=16,
+    )
+    plain = thread_bounds(PR_PULL, hw, prep.work, p=16)
+    unit = thread_bounds(PR_PULL, hw, prep.work, p=16, width_correction=lambda t: 1.0)
+    assert plain == unit
+
+
+# ---------------- engine integration ----------------
+
+def _mixed_mk(graph):
+    import numpy as np
+
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=3, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 4]))
+
+    return mk
+
+
+def test_width_feedback_off_is_inert(small_rmat):
+    """``run_sessions(width_feedback=False)`` with a feedback object makes
+    zero width-table calls and identical scheduling decisions to an engine
+    with no feedback at all."""
+    def run(feedback, wfb):
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4, pool_capacity=8, policy="scheduler", feedback=feedback
+        )
+        return eng.run_sessions(
+            _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
+            steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
+            width_feedback=wfb,
+        )
+
+    fb = CostFeedback()
+    rep_off = run(fb, False)
+    rep_none = run(None, True)
+    assert fb.width_observations == 0
+    assert [r.modeled_ns for r in rep_off.records] == [
+        r.modeled_ns for r in rep_none.records
+    ]
+    assert rep_off.makespan_modeled_ns == rep_none.makespan_modeled_ns
+    assert rep_off.width_histogram() == rep_none.width_histogram()
+
+
+def test_width_feedback_on_populates_table_from_all_paths(small_rmat):
+    """Stolen batches and fused split-back shares produce width observations
+    without extra plumbing; corrections stay bounded."""
+    fb = CostFeedback()
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4, pool_capacity=8, policy="scheduler", feedback=fb
+    )
+    rep = eng.run_sessions(
+        _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
+        steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
+        width_feedback=True,
+    )
+    assert fb.width_observations > 0
+    assert rep.total_edges > 0
+    for (algo, w) in list(fb._log_width):
+        c = fb.correction(algo, w >= 2, width=w)
+        assert 1 / fb.clip <= c <= fb.clip
+    # mode-level observations still arrive exactly once per iteration
+    assert fb.observations == sum(r.iterations for r in rep.records)
+
+
+def test_engine_width_histogram_reports_delivered_widths(small_rmat):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    rep = eng.run_sessions(
+        _mixed_mk(small_rmat), sessions=4, queries_per_session=1, steal=True
+    )
+    hist = rep.width_histogram()
+    assert hist and all(w >= 1 and n >= 1 for w, n in hist.items())
+    assert sum(hist.values()) == sum(
+        len(t.runs) for r in rep.records for t in r.traces
+    )

@@ -1,0 +1,82 @@
+"""Docs gate: fail on broken intra-repo links in README.md and docs/.
+
+Scans markdown links and images (``[text](target)`` / ``![alt](target)``)
+in ``README.md`` and every ``docs/**/*.md`` file. External targets
+(``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+skipped; everything else must resolve to an existing file or directory
+relative to the markdown file that references it (URL fragments are
+stripped first). Exit 1 lists every dangling link; exit 0 is silent
+success. Stdlib only — the CI docs job runs it before ruff's docstring
+pass.
+
+Usage::
+
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) or ![alt](target); target ends at the first unescaped ')'
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def markdown_files(root: pathlib.Path) -> list[pathlib.Path]:
+    """README.md plus every markdown file under docs/ (sorted, stable)."""
+    files = []
+    readme = root / "README.md"
+    if readme.is_file():
+        files.append(readme)
+    docs = root / "docs"
+    if docs.is_dir():
+        files.extend(sorted(docs.rglob("*.md")))
+    return files
+
+
+def broken_links(md_file: pathlib.Path, root: pathlib.Path) -> list[tuple[int, str]]:
+    """``(line_number, target)`` for every non-resolving intra-repo link."""
+    out: list[tuple[int, str]] = []
+    for lineno, line in enumerate(md_file.read_text().splitlines(), start=1):
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md_file.parent / path).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                out.append((lineno, target + "  (escapes the repository)"))
+                continue
+            if not resolved.exists():
+                out.append((lineno, target))
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Check every tracked markdown file; print failures; 0/1 exit code."""
+    args = argv if argv is not None else sys.argv[1:]
+    root = pathlib.Path(args[0]) if args else pathlib.Path(".")
+    files = markdown_files(root)
+    if not files:
+        print(f"docs gate: no markdown files found under {root}", file=sys.stderr)
+        return 1
+    failures = 0
+    for md in files:
+        for lineno, target in broken_links(md, root):
+            print(f"{md}:{lineno}: broken link -> {target}", file=sys.stderr)
+            failures += 1
+    if failures:
+        print(f"docs gate FAILED: {failures} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"docs gate OK: {len(files)} file(s) checked")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
