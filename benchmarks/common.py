@@ -13,7 +13,7 @@ from typing import Callable
 import numpy as np
 
 from repro.algorithms import BFSExecutor, DegreeCountExecutor, PageRankExecutor
-from repro.core import MultiQueryEngine, QueryRecord, XEON_E5_2660V4
+from repro.core import EngineConfig, MultiQueryEngine, QueryRecord, XEON_E5_2660V4
 
 Row = tuple[str, float, float]
 
@@ -84,6 +84,7 @@ def run_sessions(
     fusion=None,
     feedback=None,
     width_feedback=None,
+    backend=None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
@@ -94,7 +95,9 @@ def run_sessions(
     size, install per-priority admission quotas, and enable the elastic
     capacity governor (fig15). ``fuse``/``fusion`` enable same-graph gang
     fusion (fig16). ``feedback``/``width_feedback`` install the §4.4 cost
-    feedback loop and toggle its width-keyed table (fig17)."""
+    feedback loop and toggle its width-keyed table (fig17). ``backend``
+    selects the execution substrate ("modeled" | "inline" | "pallas" or an
+    ExecutionBackend instance; fig18)."""
     kwargs = {}
     if pool_capacity is not None:
         kwargs["pool_capacity"] = pool_capacity
@@ -112,13 +115,16 @@ def run_sessions(
         mk,
         sessions=sessions,
         queries_per_session=queries_per_session,
-        arrivals=arrivals,
-        priorities=priorities,
-        steal=STEAL if steal is None else steal,
-        governor=governor,
-        fuse=fuse,
-        fusion=fusion,
-        width_feedback=width_feedback,
+        config=EngineConfig(
+            arrivals=arrivals,
+            priorities=priorities,
+            steal=STEAL if steal is None else steal,
+            governor=governor,
+            fuse=fuse,
+            fusion=fusion,
+            width_feedback=width_feedback,
+            backend=backend,
+        ),
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep.throughput_modeled(), rep

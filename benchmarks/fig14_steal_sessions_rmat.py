@@ -13,7 +13,7 @@ import time
 import numpy as np
 
 from repro.algorithms import BFSExecutor, PageRankExecutor
-from repro.core import MultiQueryEngine, XEON_E5_2660V4
+from repro.core import EngineConfig, MultiQueryEngine, XEON_E5_2660V4
 from repro.graph import rmat_graph
 
 from .common import Row
@@ -43,7 +43,10 @@ def run() -> list[Row]:
         eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
         t0 = time.perf_counter_ns()
         rep = eng.run_sessions(
-            mk, sessions=SESSIONS, queries_per_session=1, steal=steal
+            mk,
+            sessions=SESSIONS,
+            queries_per_session=1,
+            config=EngineConfig(steal=steal),
         )
         us = (time.perf_counter_ns() - t0) / 1e3
         base = f"fig14/skew_mix/sf13/{label}/s{SESSIONS}"

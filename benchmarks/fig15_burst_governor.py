@@ -23,6 +23,7 @@ from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
     AdmissionController,
     CapacityGovernor,
+    EngineConfig,
     MultiQueryEngine,
     XEON_E5_2660V4,
 )
@@ -93,10 +94,12 @@ def run() -> list[Row]:
             mk,
             sessions=SESSIONS,
             queries_per_session=1,
-            arrivals=arrivals,
-            priorities=_priority,
-            steal=common.STEAL,
-            governor=governor,
+            config=EngineConfig(
+                arrivals=arrivals,
+                priorities=_priority,
+                steal=common.STEAL,
+                governor=governor,
+            ),
         )
         us = (time.perf_counter_ns() - t0) / 1e3
         by_prio = rep.latency_percentiles_by_priority()

@@ -22,7 +22,7 @@ import time
 import numpy as np
 
 from repro.algorithms import BFSExecutor, PageRankExecutor
-from repro.core import FusionConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.core import EngineConfig, FusionConfig, MultiQueryEngine, XEON_E5_2660V4
 from repro.graph import rmat_graph
 
 from . import common
@@ -58,9 +58,11 @@ def run() -> list[Row]:
             mk,
             sessions=n,
             queries_per_session=1,
-            steal=common.STEAL,
-            fuse=fuse,
-            fusion=FusionConfig(hold_ns=HOLD_NS) if fuse else None,
+            config=EngineConfig(
+                steal=common.STEAL,
+                fuse=fuse,
+                fusion=FusionConfig(hold_ns=HOLD_NS) if fuse else None,
+            ),
         )
         us = (time.perf_counter_ns() - t0) / 1e3
         base = f"fig16/fuse_burst/sf13/{label}/s{n}"

@@ -45,6 +45,7 @@ import numpy as np
 from repro.core import (
     PR_PULL,
     CostFeedback,
+    EngineConfig,
     FusionConfig,
     MultiQueryEngine,
     StealRegistry,
@@ -67,14 +68,19 @@ def _run_variant(mk, sessions, *, fuse, fusion, width_fb):
         feedback=CostFeedback(),
     )
     t0 = time.perf_counter_ns()
+    # the inline backend is PR 5's timed path: fig17 is about *real*
+    # measured feedback, so it must not run on the modeled-echo default
     rep = eng.run_sessions(
         mk,
         sessions=sessions,
         queries_per_session=1,
-        steal=True,
-        fuse=fuse,
-        fusion=fusion,
-        width_feedback=width_fb,
+        config=EngineConfig(
+            steal=True,
+            fuse=fuse,
+            fusion=fusion,
+            width_feedback=width_fb,
+            backend="inline",
+        ),
     )
     us = (time.perf_counter_ns() - t0) / 1e3
     return us, rep, eng.feedback
@@ -97,7 +103,13 @@ def _seeded_planning_rows(g) -> list[Row]:
     seeded = CostFeedback()
     for w, penalty in ((1, 1.0), (2, 1.0), (4, 1.0), (8, 3.0), (16, 8.0)):
         for _ in range(32):
-            seeded.observe_width(PR_PULL.name, w, 1.0, penalty)
+            seeded.observe(
+                PR_PULL.name,
+                "parallel" if w >= 2 else "sequential",
+                width=w,
+                modeled_ns=1.0,
+                measured_ns=penalty,
+            )
 
     rows: list[Row] = []
     for label, fb in (("cold", None), ("seeded", seeded)):

@@ -1,0 +1,92 @@
+"""Fig. 18 (beyond the paper): execution substrates under one scheduler.
+
+Runs the fig10 closed-loop PR burst and the fig14 skew mix (1 heavy PR +
+short BFS thief fodder, stealing on) through each
+:class:`~repro.core.ExecutionBackend` — ``modeled`` (the default DES echo),
+``inline`` (PR 5's timed host path) and ``pallas`` (interpret-mode kernels
+sliced to the granted gang width) — on a small RMAT graph so the
+interpret-mode kernels stay inside the CI perf budget.
+
+Row conventions:
+
+* ``fig18/<workload>/sf11/<backend>/sN`` — modeled PEPS. The engine makes
+  every scheduling decision on the modeled clock regardless of substrate
+  (no :class:`~repro.core.CostFeedback` is installed here), so these rows
+  are deterministic, identical across backends, and **gated** by
+  ``check_trend.py`` like any other session row.
+* ``fig18/<workload>_wall/sf11/<backend>/sN`` — measured host EPS (total
+  edges over real wall time). The ``_wall`` workload suffix makes run.py
+  mark the row ``"informational": true`` in ``BENCH_sessions.json``;
+  check_trend.py reports but never gates it, because interpret-mode Pallas
+  wall time says nothing about scheduling quality and everything about the
+  host.
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import EngineConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import rmat_graph
+
+from .common import Row
+
+SESSIONS = 4
+POOL = 8
+PR_ITERS = 3
+BACKENDS = ("modeled", "inline", "pallas")
+
+
+def _mk_pr(graph):
+    def mk(s, q):
+        return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+
+    return mk
+
+
+def _mk_skew(graph):
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 4]))
+
+    return mk
+
+
+def _run_workload(mk, *, steal, backend):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
+    t0 = time.perf_counter_ns()
+    rep = eng.run_sessions(
+        mk,
+        sessions=SESSIONS,
+        queries_per_session=1,
+        config=EngineConfig(steal=steal, backend=backend),
+    )
+    us = (time.perf_counter_ns() - t0) / 1e3
+    wall_eps = rep.total_edges / max(us * 1e-6, 1e-12)
+    return us, rep, wall_eps
+
+
+def run() -> list[Row]:
+    g = rmat_graph(11, seed=3)
+    rows: list[Row] = []
+    for workload, mk, steal in (
+        ("pr_sessions", _mk_pr(g), False),
+        ("skew_mix", _mk_skew(g), True),
+    ):
+        for backend in BACKENDS:
+            us, rep, wall_eps = _run_workload(mk, steal=steal, backend=backend)
+            rows.append(
+                (
+                    f"fig18/{workload}/sf11/{backend}/s{SESSIONS}",
+                    us,
+                    rep.throughput_modeled(),
+                )
+            )
+            rows.append(
+                (f"fig18/{workload}_wall/sf11/{backend}/s{SESSIONS}", us, wall_eps)
+            )
+    return rows

@@ -9,7 +9,9 @@
 #   figures (fig10-13, fig15 and fig16; default: steal). fig14 always emits
 #   both variants. fig15 always emits fixed-P and governed variants; fig16
 #   always emits unfused and fused (gang fusion) variants; fig17 always
-#   emits nofb and widthfb (width-aware cost feedback) variants.
+#   emits nofb and widthfb (width-aware cost feedback) variants; fig18
+#   always emits all three execution backends (modeled/inline/pallas), with
+#   real wall-clock rows flagged informational (reported, never gated).
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
 #   but do not commit its numbers over the gated baseline.
@@ -35,31 +37,39 @@ MODULES = [
     "fig15_burst_governor",
     "fig16_fusion_sessions",
     "fig17_width_feedback",
+    "fig18_substrate",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
 
 
 def sessions_json_rows(rows: list[tuple[str, float, float]]) -> list[dict]:
-    """Parse ``figNN/<workload>/<dataset>/<policy>/sN`` throughput rows."""
+    """Parse ``figNN/<workload>/<dataset>/<policy>/sN`` throughput rows.
+
+    A workload segment ending in ``_wall`` marks a real wall-clock row
+    (fig18's per-backend host EPS): it rides along in the JSON flagged
+    ``"informational": true`` so check_trend.py reports it without gating —
+    host speed must never fail the deterministic modeled-trajectory gate.
+    """
     out = []
     for name, us, derived in rows:
         parts = name.split("/")
         m = re.fullmatch(r"s(\d+)", parts[-1])
         if m is None or len(parts) < 5:
             continue  # latency or non-session rows ride along in the CSV only
-        out.append(
-            {
-                "name": name,
-                "figure": parts[0],
-                "workload": parts[1],
-                "dataset": parts[2],
-                "policy": parts[3],
-                "sessions": int(m.group(1)),
-                "us_per_call": round(us, 1),
-                "modeled_eps": derived,
-            }
-        )
+        row = {
+            "name": name,
+            "figure": parts[0],
+            "workload": parts[1],
+            "dataset": parts[2],
+            "policy": parts[3],
+            "sessions": int(m.group(1)),
+            "us_per_call": round(us, 1),
+            "modeled_eps": derived,
+        }
+        if parts[1].endswith("_wall"):
+            row["informational"] = True
+        out.append(row)
     return out
 
 
@@ -81,7 +91,10 @@ def main() -> None:
         rows = mod.run()
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.6g}")
-        if any(k in mod_name for k in ("sessions", "governor", "fusion", "feedback")):
+        if any(
+            k in mod_name
+            for k in ("sessions", "governor", "fusion", "feedback", "substrate")
+        ):
             session_rows.extend(sessions_json_rows(rows))
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     if session_rows:

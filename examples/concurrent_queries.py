@@ -6,6 +6,7 @@ plus the multi-tenant controls (admission, open-loop arrivals, priorities).
 from repro.algorithms import PageRankExecutor
 from repro.core import (
     AdmissionController,
+    EngineConfig,
     MultiQueryEngine,
     PoissonArrivals,
     XEON_E5_2660V4,
@@ -49,8 +50,10 @@ def open_loop_burst(g) -> None:
         lambda s, q: PageRankExecutor(g, mode="pull", max_iters=3, tol=0),
         sessions=16,
         queries_per_session=1,
-        arrivals=PoissonArrivals(rate_per_s=20_000.0, seed=7),
-        priorities=lambda sid: 1 if sid < 4 else 0,
+        config=EngineConfig(
+            arrivals=PoissonArrivals(rate_per_s=20_000.0, seed=7),
+            priorities=lambda sid: 1 if sid < 4 else 0,
+        ),
     )
     pct = rep.latency_percentiles()
     fallbacks = sum(

@@ -104,6 +104,11 @@ class BFSExecutor:
     desc: Any = BFS_TOP_DOWN
     max_iters: int | None = None
 
+    # kernel-lowering opt-in for core.backends.PallasBackend: frontier
+    # expansion is an SpMV over the boolean semiring (count frontier parents
+    # per target, threshold at > 0)
+    pallas_lowering = "bfs"
+
     def __post_init__(self):
         self._ea = EdgeArrays.from_graph(self.graph)
         self._out_deg_host = np.asarray(self._ea.out_deg)
@@ -192,6 +197,31 @@ class BFSExecutor:
     def result(self) -> np.ndarray:
         return np.asarray(self._level)
 
+    # -- execution-backend hooks (core.backends.PallasBackend) ----------
+    def out_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) host copies in out-edge order (the SpMV edge list)."""
+        return np.asarray(self._ea.src), np.asarray(self._ea.dst)
+
+    def frontier_slot_vertices(self, lo: int, hi: int) -> np.ndarray:
+        """Vertex ids occupying compacted-frontier slots [lo, hi)."""
+        if self._frontier_host is None:
+            n = int(self._n_frontier)
+            self._frontier_host = np.asarray(self._frontier_list)[:n]
+        return self._frontier_host[lo:hi]
+
+    def apply_expansion(self, counts: jnp.ndarray, lo: int, hi: int) -> None:
+        """Fold a backend-computed parent count [V] for frontier slots
+        [lo, hi) into the next-frontier mask — identical bookkeeping to
+        ``run_packages`` on that slot range (``counts > 0`` is the touched
+        set; edges = out-degrees of the expanded members)."""
+        self._next = self._next | ((counts > 0) & ~self._visited)
+        members = self.frontier_slot_vertices(lo, hi)
+        if members.size:
+            self._edges += float(self._out_deg_host[members].sum())
+        self._covered += hi - lo
+        if self._covered >= int(self._n_frontier):
+            self.end_iteration()
+
 
 # ---------------------------------------------------------------------------
 # Direction-optimized BFS (beyond-paper: Beamer et al. [3], driven by the
@@ -229,6 +259,9 @@ class DirectionOptimizedBFSExecutor(BFSExecutor):
     heuristic — preparation stays ahead of execution, as in the paper."""
 
     switch_fraction: float = 0.25
+    # the direction switch lives inside run_packages; a kernel lowering that
+    # bypasses it would silently disable bottom-up — opt out
+    pallas_lowering = None
 
     def run_packages(self, package_ids, packages, t: int, parallel: bool) -> None:
         from ..core.estimators import TraversalEstimator

@@ -53,6 +53,10 @@ class DegreeCountExecutor:
     num_counters: int | None = None
     desc: Any = DEGREE_COUNT
 
+    # kernel-lowering opt-in for core.backends.PallasBackend: the histogram
+    # kernel computes the identical per-range endpoint counts
+    pallas_lowering = "degree_count"
+
     def __post_init__(self):
         self._src = self.graph.src.astype(jnp.int32)
         self._dst = self.graph.dst.astype(jnp.int32)
@@ -96,3 +100,18 @@ class DegreeCountExecutor:
 
     def result(self) -> np.ndarray:
         return np.asarray(self._counters)
+
+    # -- execution-backend hooks (core.backends.PallasBackend) ----------
+    def edge_endpoints(self) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) host copies in edge order (the histogram input)."""
+        return np.asarray(self._src), np.asarray(self._dst)
+
+    def apply_counts(self, counts: np.ndarray, lo: int, hi: int) -> None:
+        """Fold a backend-computed endpoint histogram for edges [lo, hi)
+        into the counter array — identical bookkeeping to ``run_packages``
+        on that edge range."""
+        self._counters = self._counters + jnp.asarray(counts)
+        self._edges += float(hi - lo)
+        self._covered += hi - lo
+        if self._covered >= self._n:
+            self._done = True

@@ -119,6 +119,9 @@ class PageRankExecutor:
         self._deg_host = np.asarray(
             self.graph.in_degrees() if self.mode == "pull" else self._ea.out_deg
         )
+        # kernel-lowering opt-in for core.backends.PallasBackend: pull is an
+        # owner-computes SpMV; push's unsorted scatter has no kernel lowering
+        self.pallas_lowering = "pr_pull" if self.mode == "pull" else None
 
     def graph_stats(self) -> GraphStats:
         return self.graph.stats
@@ -182,3 +185,23 @@ class PageRankExecutor:
 
     def result(self) -> np.ndarray:
         return np.asarray(self._rank)
+
+    # -- execution-backend hooks (core.backends.PallasBackend, pull mode) --
+    @property
+    def contrib(self) -> jnp.ndarray:
+        """Current per-source contribution vector (the SpMV input)."""
+        return self._contrib
+
+    def pull_edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """(in_src, in_dst) host copies in in-edge (sorted-by-target) order."""
+        return np.asarray(self._ea.in_src), np.asarray(self._ea.in_dst)
+
+    def apply_pull_aggregate(self, agg: jnp.ndarray, lo: int, hi: int, edges: float) -> None:
+        """Fold a backend-computed pull partial for targets [lo, hi) into the
+        accumulator — identical bookkeeping to ``run_packages`` on that range
+        (coverage tracking, edge count, end-of-iteration commit)."""
+        self._acc = self._acc + agg
+        self._edges += float(edges)
+        self._covered += hi - lo
+        if self._covered >= self._ea.num_vertices:
+            self._end_iteration()

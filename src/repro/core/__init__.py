@@ -51,6 +51,15 @@ from .scheduler import (
     largest_pow2_leq,
 )
 from .stealing import StealEntry, StealRegistry, graph_identity
+from .backends import (
+    DevicePlan,
+    ExecutionBackend,
+    InlineBackend,
+    ModeledBackend,
+    PallasBackend,
+    resolve_backend,
+)
+from .config import EngineConfig
 from .fusion import (
     FusionConfig,
     FusionGroup,
@@ -85,6 +94,8 @@ __all__ = [
     "PackageRun", "PackageScheduler", "ScheduleRun", "ScheduleStep",
     "ScheduleTrace", "STALL_STEP", "WorkerPool", "largest_pow2_leq",
     "StealEntry", "StealRegistry", "graph_identity",
+    "DevicePlan", "ExecutionBackend", "InlineBackend", "ModeledBackend",
+    "PallasBackend", "resolve_backend", "EngineConfig",
     "FusionConfig", "FusionGroup", "FusionMember", "aggregate_work", "plan_gang_width",
     "CapacityGovernor", "GovernorConfig",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",

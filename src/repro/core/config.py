@@ -1,0 +1,61 @@
+"""EngineConfig: the consolidated per-run configuration of ``run_sessions``.
+
+Through PR 5 every engine feature landed as another keyword on
+``MultiQueryEngine.run_sessions`` — ``steal=``, ``governor=``, ``fuse=``,
+``fusion=``, ``width_feedback=`` — and the execution-backend seam would have
+made it six. This dataclass is the redesigned surface: one frozen value
+object describing *how* a run executes, passed as
+``run_sessions(make_executor, sessions=..., queries_per_session=...,
+config=EngineConfig(...))``. The old keywords still work for one release
+behind a ``DeprecationWarning`` shim in ``run_sessions``.
+
+Every field keeps its former default, so ``EngineConfig()`` is exactly the
+former bare call: no stealing, no governor, no fusion, engine-default width
+feedback, engine-default (modeled) backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only imports (no cycles)
+    from .backends import ExecutionBackend
+    from .fusion import FusionConfig
+    from .governor import CapacityGovernor
+    from .session import PoissonArrivals
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """How one ``run_sessions`` call executes.
+
+    Workload shape (``priorities``, ``arrivals``) and engine features
+    (``steal``, ``governor``, ``fuse``/``fusion``, ``width_feedback``,
+    ``backend``) in one value object; ``None``/``False`` everywhere
+    reproduces the bare engine bit for bit.
+
+    * ``priorities`` — per-session priority levels: a sequence (one entry
+      per session) or a callable ``sid -> priority``; ``None`` → all 0.
+    * ``arrivals`` — session arrival times: a ``PoissonArrivals`` stream, an
+      explicit per-session sequence of modeled ns, or ``None`` → all at t=0.
+    * ``steal`` — publish parallel runs for work-stealing and let drained
+      sessions execute victims' trailing packages.
+    * ``governor`` — a ``CapacityGovernor`` for elastic pool capacity and
+      priority preemption; ``None`` → zero governor calls.
+    * ``fuse`` / ``fusion`` — gang fusion of same-graph sessions; an
+      explicit ``FusionConfig`` implies ``fuse`` regardless of the flag.
+    * ``width_feedback`` — per-run override of the engine's width-keyed
+      feedback switch (``None`` → the engine constructor's setting).
+    * ``backend`` — per-run override of the execution substrate: an
+      ``ExecutionBackend`` instance or a name (``"modeled"`` | ``"inline"``
+      | ``"pallas"``); ``None`` → the engine's installed backend.
+    """
+
+    priorities: Sequence[int] | Callable[[int], int] | None = None
+    arrivals: "PoissonArrivals | Sequence[float] | None" = None
+    steal: bool = False
+    governor: "CapacityGovernor | None" = None
+    fuse: bool = False
+    fusion: "FusionConfig | None" = None
+    width_feedback: bool | None = None
+    backend: "ExecutionBackend | str | None" = None

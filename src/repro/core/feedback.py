@@ -16,8 +16,9 @@ Two granularities share one EWMA-of-log-ratio mechanism:
   per-package ``(width, modeled, measured)`` tuples — plain
   :class:`~.scheduler.ScheduleRun` steps, :class:`~.fusion.FusionMember`
   split-back commits, stolen-batch claims, and post-preemption residual
-  runs — reports them via :meth:`CostFeedback.observe_width`, keyed by
-  ``(algorithm, width)``. This matters because three subsystems execute a
+  runs — reports them via the width-keyed form of
+  :meth:`CostFeedback.observe` (``observe(algorithm, mode, width=...,
+  ...)``), keyed by ``(algorithm, width)``. This matters because three subsystems execute a
   query's packages at widths its own preparation never planned for: thief
   gangs, governor preemption/resume, and fused gangs running every member at
   the gang width instead of the member's own ``T_max``.
@@ -57,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 from .scheduler import largest_pow2_leq
 
@@ -76,8 +78,8 @@ class CostFeedback:
     * ``(algorithm, parallel)`` — the mode-level scalar (PR-1 behaviour),
       fed once per iteration by :meth:`observe`;
     * ``(algorithm, pow2-bucket)`` and ``(algorithm, exact width)`` — the
-      width-keyed table, fed per executed step/batch by
-      :meth:`observe_width`.
+      width-keyed table, fed per executed step/batch by the width-keyed
+      form of :meth:`observe`.
 
     ``observations`` counts mode-level observations only (backwards
     compatible); ``width_observations`` counts width-level ones; ``version``
@@ -209,9 +211,69 @@ class CostFeedback:
         return clipped, clipped != raw
 
     def observe(
+        self,
+        algorithm: str,
+        mode: str | bool,
+        width: int | float | None = None,
+        modeled_ns: float | None = None,
+        measured_ns: float | None = None,
+    ) -> None:
+        """Unified observation entry point (the one call backends report to).
+
+        ``mode`` is ``"parallel"`` or ``"sequential"``. With ``width=None``
+        this is a *mode-level* observation — one finished iteration's totals,
+        feeding the per-(algorithm, mode) scalar. With a width it is a
+        *width-level* observation — one executed step/batch at that gang
+        width, feeding both the exact-width entry and its power-of-two
+        bucket (they coincide when ``width`` is itself a power of two — the
+        common case, since granted gangs round down to usable powers of
+        two — but the bucket is kept separately so near-miss widths, e.g.
+        12 → bucket 8, inherit the signal of the widths the engine actually
+        executed). The two granularities stay separate tables: a width
+        observation never moves the mode scalar, and vice versa.
+
+        The pre-unification positional shape ``observe(algorithm, parallel:
+        bool, modeled_ns, measured_ns)`` is detected by the boolean mode and
+        delegates with a :class:`DeprecationWarning` (one release)."""
+        if isinstance(mode, bool):
+            warnings.warn(
+                "CostFeedback.observe(algorithm, parallel: bool, modeled_ns,"
+                " measured_ns) is deprecated; call observe(algorithm, mode,"
+                " modeled_ns=..., measured_ns=...) with mode"
+                " 'parallel' | 'sequential' instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if measured_ns is None:  # legacy positional: args shifted left
+                modeled_ns, measured_ns = width, modeled_ns
+            self._observe_mode(algorithm, mode, modeled_ns, measured_ns)
+            return
+        if mode not in ("parallel", "sequential"):
+            raise ValueError(f"mode must be 'parallel' or 'sequential', got {mode!r}")
+        if modeled_ns is None or measured_ns is None:
+            raise TypeError("observe requires modeled_ns and measured_ns")
+        if width is None:
+            self._observe_mode(algorithm, mode == "parallel", modeled_ns, measured_ns)
+        else:
+            self._observe_width(algorithm, int(width), modeled_ns, measured_ns)
+
+    def observe_width(
+        self, algorithm: str, width: int, modeled_ns: float, measured_ns: float
+    ) -> None:
+        """Deprecated alias for ``observe(algorithm, mode, width=width, ...)``
+        (one release); the mode is derived from the width."""
+        warnings.warn(
+            "CostFeedback.observe_width is deprecated; call"
+            " observe(algorithm, mode, width=..., modeled_ns=...,"
+            " measured_ns=...) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self._observe_width(algorithm, width, modeled_ns, measured_ns)
+
+    def _observe_mode(
         self, algorithm: str, parallel: bool, modeled_ns: float, measured_ns: float
     ) -> None:
-        """Mode-level observation: one finished iteration's totals."""
         clipped = self._clip_ratio(modeled_ns, measured_ns)
         if clipped is None:
             return
@@ -221,16 +283,9 @@ class CostFeedback:
         self._note_censor("mode", key, censored)
         self.observations += 1
 
-    def observe_width(
+    def _observe_width(
         self, algorithm: str, width: int, modeled_ns: float, measured_ns: float
     ) -> None:
-        """Width-level observation: one executed step/batch at ``width``.
-
-        Updates both the exact-width entry and its power-of-two bucket (they
-        coincide when ``width`` is itself a power of two — the common case,
-        since granted gangs round down to usable powers of two — but the
-        bucket is kept separately so near-miss widths, e.g. 12 → bucket 8,
-        inherit the signal of the widths the engine actually executed)."""
         clipped = self._clip_ratio(modeled_ns, measured_ns)
         if clipped is None:
             return

@@ -43,12 +43,15 @@ import collections
 import dataclasses
 import heapq
 import time
+import warnings
 from typing import TYPE_CHECKING, Any, Callable, Protocol, Sequence
 
 import numpy as np
 
 from .autotuner import PreparedIteration, prepare_iteration
+from .backends import ExecutionBackend, resolve_backend
 from .bounds import ThreadBounds
+from .config import EngineConfig
 from .feedback import CostFeedback
 from .contention import HardwareModel
 from .cost_model import iteration_cost_ns
@@ -82,6 +85,10 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only import (no cycle)
 # that the victim's own grant re-evaluation keeps mattering, large enough to
 # amortize the claim
 STEAL_CHUNK = 4
+
+# distinguishes "caller did not pass the deprecated keyword" from every real
+# value (None, False, ... are all meaningful) in run_sessions' shim
+_UNSET: Any = object()
 
 
 class QueryExecutor(Protocol):
@@ -567,6 +574,7 @@ class MultiQueryEngine:
         width_feedback: bool = True,
         admission: AdmissionController | None = None,
         high_priority_reserve: int = 0,
+        backend: ExecutionBackend | str | None = "modeled",
     ):
         if policy not in ("scheduler", "sequential", "simple"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -589,6 +597,11 @@ class MultiQueryEngine:
         self.width_feedback = bool(width_feedback)
         self._wfb_active = self.width_feedback
         self.admission = admission or AdmissionController()
+        # execution substrate (core.backends): where a schedule step's
+        # packages actually run. The default ModeledBackend advances the
+        # query but echoes the modeled clock as the measurement — fully
+        # deterministic; InlineBackend/PallasBackend measure for real
+        self.backend: ExecutionBackend = resolve_backend(backend)
 
     @property
     def _width_fb_on(self) -> bool:
@@ -620,7 +633,13 @@ class MultiQueryEngine:
         post-preemption residual runs come back through the plain-step path
         — so no extra measurement plumbing exists anywhere."""
         if self._width_fb_on:
-            self.feedback.observe_width(algorithm, width, modeled_ns, measured_ns)
+            self.feedback.observe(
+                algorithm,
+                "parallel" if width >= 2 else "sequential",
+                width=width,
+                modeled_ns=modeled_ns,
+                measured_ns=measured_ns,
+            )
 
     # ------------------------------------------------------------------
     # shared per-iteration path (both run_query and run_sessions)
@@ -671,15 +690,23 @@ class MultiQueryEngine:
         )
 
     def _execute_step(
-        self, executor: QueryExecutor, prep: PreparedIteration, step: ScheduleStep
+        self,
+        executor: QueryExecutor,
+        prep: PreparedIteration,
+        step: ScheduleStep,
+        modeled_ns: float = 0.0,
     ) -> float:
-        """Run one schedule step's packages for real; returns measured ns."""
-        t0 = time.perf_counter_ns()
-        parallel = step.mode == "parallel"
-        executor.run_packages(
-            step.batch, prep.packages, step.workers if parallel else 1, parallel=parallel
-        )
-        return float(time.perf_counter_ns() - t0)
+        """Dispatch one schedule step through the execution backend; returns
+        the backend's measured ns.
+
+        ``prepare`` runs (memoized per (executor, prep)) *before* the
+        measured window — backend staging and jit warm-up never pollute the
+        first step's measurement, so the width-feedback EWMA only ever sees
+        steady-state execution time. ``modeled_ns`` is the step's modeled
+        cost, passed through for substrates (ModeledBackend) that echo it
+        instead of measuring."""
+        plan = self.backend.prepare(executor, prep)
+        return float(self.backend.execute(plan, step, modeled_ns=modeled_ns))
 
     def _step_cost_ns(
         self, desc: AlgorithmDescriptor, prep: PreparedIteration, step: ScheduleStep
@@ -709,7 +736,12 @@ class MultiQueryEngine:
             record.parallel_iterations += 1
         record.traces.append(trace)
         if self.feedback is not None:
-            self.feedback.observe(executor.desc.name, par_mode, modeled_ns, measured_ns)
+            self.feedback.observe(
+                executor.desc.name,
+                "parallel" if par_mode else "sequential",
+                modeled_ns=modeled_ns,
+                measured_ns=measured_ns,
+            )
 
     def _run_iteration(
         self,
@@ -731,8 +763,8 @@ class MultiQueryEngine:
                     raise RuntimeError(
                         "worker pool exhausted: a schedule step must hold >= 1 worker"
                     )
-                step_measured = self._execute_step(executor, prep, step)
                 step_modeled = self._step_cost_ns(executor.desc, prep, step)
+                step_measured = self._execute_step(executor, prep, step, step_modeled)
                 measured += step_measured
                 modeled += step_modeled
                 self._observe_width(
@@ -774,15 +806,27 @@ class MultiQueryEngine:
         *,
         sessions: int,
         queries_per_session: int,
-        priorities: Sequence[int] | Callable[[int], int] | None = None,
-        arrivals: PoissonArrivals | Sequence[float] | None = None,
-        steal: bool = False,
-        governor: "CapacityGovernor | None" = None,
-        fuse: bool = False,
-        fusion: FusionConfig | None = None,
-        width_feedback: bool | None = None,
+        config: EngineConfig | None = None,
+        priorities: Sequence[int] | Callable[[int], int] | None = _UNSET,
+        arrivals: PoissonArrivals | Sequence[float] | None = _UNSET,
+        steal: bool = _UNSET,
+        governor: "CapacityGovernor | None" = _UNSET,
+        fuse: bool = _UNSET,
+        fusion: FusionConfig | None = _UNSET,
+        width_feedback: bool | None = _UNSET,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
+
+        The run's workload shape and engine features are described by one
+        :class:`~.config.EngineConfig` value (``config=``); the individual
+        keywords (``priorities``, ``arrivals``, ``steal``, ``governor``,
+        ``fuse``, ``fusion``, ``width_feedback``) are a deprecated
+        compatibility shim — they still work for one release, emit a
+        :class:`DeprecationWarning`, and cannot be mixed with ``config``.
+        ``config.backend`` additionally overrides the engine's execution
+        substrate for this run only (see :mod:`~.backends`); every schedule
+        step — plain, fused, stolen — dispatches through it, and its
+        measured times flow into the feedback plumbing.
 
         Discrete-event simulation on the modeled clock. Sessions arrive at
         t=0 (closed loop) or along an open-loop arrival stream; the admission
@@ -843,6 +887,41 @@ class MultiQueryEngine:
         calls and keeps every scheduling decision byte-identical to the
         width-feedback-less engine (the fig10–16 modeled rows are
         unchanged)."""
+        legacy = {
+            k: v
+            for k, v in (
+                ("priorities", priorities),
+                ("arrivals", arrivals),
+                ("steal", steal),
+                ("governor", governor),
+                ("fuse", fuse),
+                ("fusion", fusion),
+                ("width_feedback", width_feedback),
+            )
+            if v is not _UNSET
+        }
+        if legacy:
+            if config is not None:
+                raise ValueError(
+                    "pass either config=EngineConfig(...) or the deprecated"
+                    f" keyword(s) {sorted(legacy)}, not both"
+                )
+            warnings.warn(
+                f"run_sessions keyword(s) {sorted(legacy)} are deprecated;"
+                " pass config=EngineConfig(...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = EngineConfig(**legacy)
+        cfg = config if config is not None else EngineConfig()
+        priorities = cfg.priorities
+        arrivals = cfg.arrivals
+        steal = bool(cfg.steal)
+        governor = cfg.governor
+        fuse = bool(cfg.fuse)
+        fusion = cfg.fusion
+        width_feedback = cfg.width_feedback
+
         if priorities is None:
             prio = [0] * sessions
         elif callable(priorities):
@@ -864,6 +943,9 @@ class MultiQueryEngine:
         prev_wfb = self._wfb_active
         if width_feedback is not None:
             self._wfb_active = bool(width_feedback)
+        prev_backend = self.backend
+        if cfg.backend is not None:
+            self.backend = resolve_backend(cfg.backend)
 
         records: list[QueryRecord] = []
         report = EngineReport(
@@ -1101,8 +1183,10 @@ class MultiQueryEngine:
             else:
                 assert victim.executor is not None and victim.prep is not None
                 step = ScheduleStep(batch, mode, usable)
-                measured = self._execute_step(victim.executor, victim.prep, step)
                 step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
+                measured = self._execute_step(
+                    victim.executor, victim.prep, step, step_ns
+                )
                 # stolen batches run at a width the victim never planned for:
                 # exactly the observations the width table exists to capture
                 self._observe_width(
@@ -1178,9 +1262,11 @@ class MultiQueryEngine:
             t_eff = workers if mode == "parallel" else 1
             shares: list[list] = []
             total = 0.0
+            # modeled accounting first: per-member work at the gang width
+            # plus the overhead slice, fully settled *before* execution so
+            # the backend receives each share's final modeled cost (the
+            # ModeledBackend echoes it; measuring backends ignore it)
             for slot, positions, local_ids in group.split(batch):
-                s_step = ScheduleStep(local_ids, mode, workers)
-                measured = self._execute_step(slot.payload.executor, slot.prep, s_step)
                 work_ns = member_work_ns(
                     slot.payload.executor.desc,
                     self.hw,
@@ -1188,17 +1274,23 @@ class MultiQueryEngine:
                     t_eff,
                     local_ids.size / max(slot.prep.packages.n_packages, 1),
                 )
-                shares.append([slot, positions, local_ids, work_ns, measured])
+                shares.append([slot, positions, local_ids, work_ns, 0.0])
                 total += work_ns
             ov = gang_overhead_ns(self.hw, t_eff, int(batch.size), group.n_packages)
             total += ov
             for share in shares:
                 share[3] += ov * (share[2].size / batch.size)
+            for share in shares:
+                slot, _, local_ids = share[0], share[1], share[2]
+                s_step = ScheduleStep(local_ids, mode, workers)
+                share[4] = self._execute_step(
+                    slot.payload.executor, slot.prep, s_step, share[3]
+                )
                 # split-back commits carry exact per-member (width, modeled,
                 # measured) tuples — feed the width table here so members'
                 # next preparations know how the gang width really performed
                 self._observe_width(
-                    share[0].payload.executor.desc.name, t_eff, share[3], share[4]
+                    slot.payload.executor.desc.name, t_eff, share[3], share[4]
                 )
             return shares, total
 
@@ -1691,9 +1783,9 @@ class MultiQueryEngine:
                     continue
 
                 assert st.executor is not None and st.prep is not None
-                step_measured = self._execute_step(st.executor, st.prep, step)
-                st.iter_measured_ns += step_measured
                 step_ns = self._step_cost_ns(st.executor.desc, st.prep, step)
+                step_measured = self._execute_step(st.executor, st.prep, step, step_ns)
+                st.iter_measured_ns += step_measured
                 st.iter_modeled_ns += step_ns
                 # plain schedule steps (including post-preemption residual
                 # runs) carry (width, modeled, measured) — feed the table
@@ -1721,6 +1813,7 @@ class MultiQueryEngine:
             # an exception in executor code must not leak held grants,
             # admission slots, or the resize hook on the shared engine state
             self._wfb_active = prev_wfb
+            self.backend = prev_backend
             self.pool.remove_resize_hook(_on_resize)
             for s in states + drivers:
                 if s.srun is not None:

@@ -78,6 +78,40 @@ def test_no_shared_rows_refuses_to_certify(files):
     assert main([base, fresh]) == 1
 
 
+def test_informational_rows_are_reported_not_gated(files, capsys):
+    """fig18's real wall-clock rows carry ``"informational": true`` — a 10x
+    host slowdown on them must not fail the gate, while a co-present gated
+    row still does."""
+    info = {"name": "fig18/pr_sessions_wall/sf11/pallas/s4",
+            "modeled_eps": 1000.0, "informational": True}
+    slow = dict(info, modeled_eps=50.0)  # 20x wall regression: don't care
+    base, fresh = files(
+        [_row("fig/a/s1", 100.0), info],
+        [_row("fig/a/s1", 99.0), slow],
+    )
+    assert main([base, fresh]) == 0
+    assert "informational; not gated" in capsys.readouterr().out
+    # the informational flag shields only its own row
+    base, fresh = files(
+        [_row("fig/a/s1", 100.0), info],
+        [_row("fig/a/s1", 50.0), slow],
+    )
+    assert main([base, fresh]) == 1
+
+
+def test_informational_flag_on_either_side_skips(files):
+    """A row newly flagged informational (or newly unflagged) is skipped —
+    mismatched baselines must not gate a wall-clock number."""
+    gated = _row("fig/w/s1", 100.0)
+    flagged = dict(gated, modeled_eps=10.0, informational=True)
+    base, fresh = files([gated, _row("fig/a/s1", 1.0)],
+                        [flagged, _row("fig/a/s1", 1.0)])
+    assert main([base, fresh]) == 0
+    base, fresh = files([flagged, _row("fig/a/s1", 1.0)],
+                        [gated, _row("fig/a/s1", 1.0)])
+    assert main([base, fresh]) == 0
+
+
 def test_zero_baseline_rows_are_skipped(files):
     base, fresh = files([_row("fig/a/s1", 0.0)], [_row("fig/a/s1", 0.0)])
     # the only shared row is ungateable → nothing regressed, gate passes

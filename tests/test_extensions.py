@@ -93,7 +93,7 @@ def test_feedback_loop_reduces_prediction_error(medium_rmat):
     modeled, measured = 1e6, 4e6
     fb2 = CostFeedback(alpha=1.0)
     raw_err = abs(math.log10(modeled / measured))
-    fb2.observe("x", False, modeled, measured)
+    fb2.observe("x", "sequential", modeled_ns=modeled, measured_ns=measured)
     assert fb2.error_db("x", False, modeled, measured) < raw_err
 
 
@@ -101,7 +101,7 @@ def test_feedback_correction_bounded():
     from repro.core.feedback import CostFeedback
 
     fb = CostFeedback(alpha=1.0, clip=8.0)
-    fb.observe("a", True, 1.0, 1e9)  # absurd ratio gets clipped
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=1e9)  # absurd ratio gets clipped
     assert fb.correction("a", True) <= 8.0
-    fb.observe("a", True, 1e9, 1.0)
+    fb.observe("a", "parallel", modeled_ns=1e9, measured_ns=1.0)
     assert fb.correction("a", True) >= 1.0 / 8.0

@@ -9,6 +9,7 @@ import pytest
 from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
     CostFeedback,
+    EngineConfig,
     FusionConfig,
     MultiQueryEngine,
     PR_PULL,
@@ -34,21 +35,21 @@ def test_cold_start_correction_is_one():
 
 def test_exact_width_hit():
     fb = CostFeedback(alpha=1.0)
-    fb.observe_width("a", 8, 1.0, 2.0)
+    fb.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=2.0)
     assert fb.correction("a", True, width=8) == pytest.approx(2.0)
     # the exact entry shadows mode-level signal
-    fb.observe("a", True, 1.0, 0.5)
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=0.5)
     assert fb.correction("a", True, width=8) == pytest.approx(2.0)
 
 
 def test_pow2_bucket_fallback():
     fb = CostFeedback(alpha=1.0)
-    fb.observe_width("a", 8, 1.0, 2.0)
+    fb.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=2.0)
     # width 13 has no exact entry; its pow2 bucket (8) carries the signal
     assert fb.correction("a", True, width=13) == pytest.approx(2.0)
     # an observation at a non-pow2 width also lands in its bucket
     fb2 = CostFeedback(alpha=1.0)
-    fb2.observe_width("a", 12, 1.0, 3.0)
+    fb2.observe("a", "parallel", width=12, modeled_ns=1.0, measured_ns=3.0)
     assert fb2.correction("a", True, width=12) == pytest.approx(3.0)  # exact
     assert fb2.correction("a", True, width=9) == pytest.approx(3.0)   # bucket 8
     assert fb2.correction("a", True, width=8) == pytest.approx(3.0)   # bucket 8
@@ -56,7 +57,7 @@ def test_pow2_bucket_fallback():
 
 def test_mode_level_fallback():
     fb = CostFeedback(alpha=1.0)
-    fb.observe("a", True, 1.0, 4.0)
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=4.0)
     # no width entries at all: any width falls back to the mode scalar
     assert fb.correction("a", True, width=16) == pytest.approx(4.0)
     # but the other mode stays cold
@@ -65,20 +66,50 @@ def test_mode_level_fallback():
 
 def test_width_ratio_is_relative_to_mode_scalar():
     fb = CostFeedback(alpha=1.0)
-    fb.observe("a", True, 1.0, 2.0)         # mode scalar 2.0
-    fb.observe_width("a", 16, 1.0, 4.0)     # width 16 measured 2x worse
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=2.0)         # mode scalar 2.0
+    fb.observe("a", "parallel", width=16, modeled_ns=1.0, measured_ns=4.0)     # width 16 measured 2x worse
     assert fb.width_ratio("a", 16) == pytest.approx(2.0)
     # a width matching the mode average is neutral
-    fb.observe_width("a", 4, 1.0, 2.0)
+    fb.observe("a", "parallel", width=4, modeled_ns=1.0, measured_ns=2.0)
     assert fb.width_ratio("a", 4) == pytest.approx(1.0)
 
 
 def test_predict_uses_width_when_given():
     fb = CostFeedback(alpha=1.0)
-    fb.observe("a", True, 1.0, 2.0)
-    fb.observe_width("a", 8, 1.0, 4.0)
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=2.0)
+    fb.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=4.0)
     assert fb.predict("a", True, 100.0) == pytest.approx(200.0)
     assert fb.predict("a", True, 100.0, width=8) == pytest.approx(400.0)
+
+
+# ---------------- deprecated signatures (ISSUE 6 satellite) ----------------
+
+def test_legacy_bool_observe_warns_and_delegates():
+    """``observe(alg, True/False, modeled, measured)`` survives one release:
+    it warns and lands in the same mode-level table as the unified call."""
+    fb = CostFeedback(alpha=1.0)
+    with pytest.warns(DeprecationWarning, match="observe"):
+        fb.observe("a", True, 1.0, 2.0)
+    assert fb.correction("a", True) == pytest.approx(2.0)
+    with pytest.warns(DeprecationWarning):
+        fb.observe("a", False, 1.0, 0.5)
+    assert fb.correction("a", False) == pytest.approx(0.5)
+
+
+def test_legacy_observe_width_warns_and_delegates():
+    fb = CostFeedback(alpha=1.0)
+    with pytest.warns(DeprecationWarning, match="observe_width"):
+        fb.observe_width("a", 8, 1.0, 4.0)
+    assert fb.correction("a", True, width=8) == pytest.approx(4.0)
+    assert fb.width_observations == 1
+
+
+def test_unified_observe_rejects_bad_arguments():
+    fb = CostFeedback()
+    with pytest.raises(ValueError):
+        fb.observe("a", "diagonal", modeled_ns=1.0, measured_ns=1.0)
+    with pytest.raises(TypeError):
+        fb.observe("a", "parallel", modeled_ns=1.0)
 
 
 # ---------------- clamp regression (ISSUE 5 satellite) ----------------
@@ -89,11 +120,11 @@ def test_correction_clamped_even_when_ewma_overshoots():
     fixed point and walked the correction past ``clip``. ``correction()``
     must clamp at the read side."""
     fb = CostFeedback(alpha=1.6, clip=4.0)
-    fb.observe("a", True, 1.0, 1e9)  # ratio clips to 4.0; EWMA overshoots
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=1e9)  # ratio clips to 4.0; EWMA overshoots
     assert fb._log_corr[("a", True)] > math.log(4.0)  # the raw sum escaped
     assert fb.correction("a", True) <= 4.0            # the read did not
     fb2 = CostFeedback(alpha=1.6, clip=4.0)
-    fb2.observe_width("a", 8, 1e9, 1.0)
+    fb2.observe("a", "parallel", width=8, modeled_ns=1e9, measured_ns=1.0)
     assert fb2.correction("a", True, width=8) >= 1 / 4.0
 
 
@@ -104,7 +135,7 @@ def test_correction_clamped_even_when_ewma_overshoots():
     alpha=st.floats(0.05, 1.0),
 )
 def test_corrections_bounded_under_arbitrary_observations(n, seed, alpha):
-    """Property: any observe/observe_width sequence keeps every correction
+    """Property: any mode/width observation sequence keeps every correction
     (mode, exact width, bucket, and hierarchical lookups) in [1/clip, clip]."""
     import numpy as np
 
@@ -114,9 +145,13 @@ def test_corrections_bounded_under_arbitrary_observations(n, seed, alpha):
         modeled = float(10 ** rng.uniform(-3, 9))
         measured = float(10 ** rng.uniform(-3, 9))
         if rng.integers(2):
-            fb.observe("a", bool(rng.integers(2)), modeled, measured)
+            mode = "parallel" if rng.integers(2) else "sequential"
+            fb.observe("a", mode, modeled_ns=modeled, measured_ns=measured)
         else:
-            fb.observe_width("a", int(rng.integers(1, 64)), modeled, measured)
+            fb.observe(
+                "a", "parallel", width=int(rng.integers(1, 64)),
+                modeled_ns=modeled, measured_ns=measured,
+            )
     for parallel in (False, True):
         for width in (None, 1, 2, 3, 8, 12, 16, 64):
             c = fb.correction("a", parallel, width=width)
@@ -132,12 +167,12 @@ def test_censored_signal_yields_neutral_width_ratio():
     """Clip-pinned entries cannot rank widths: when either side of the
     width-vs-mode comparison is predominantly censored, the ratio is 1.0."""
     fb = CostFeedback(alpha=1.0, clip=8.0)
-    fb.observe("a", True, 1.0, 100.0)        # censored mode scalar
-    fb.observe_width("a", 16, 1.0, 2.0)      # in-range width entry
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=100.0)        # censored mode scalar
+    fb.observe("a", "parallel", width=16, modeled_ns=1.0, measured_ns=2.0)      # in-range width entry
     assert fb.width_ratio("a", 16) == 1.0    # reference untrustworthy
     fb2 = CostFeedback(alpha=1.0, clip=8.0)
-    fb2.observe("a", True, 1.0, 2.0)         # in-range mode scalar
-    fb2.observe_width("a", 16, 1.0, 100.0)   # censored width entry
+    fb2.observe("a", "parallel", modeled_ns=1.0, measured_ns=2.0)         # in-range mode scalar
+    fb2.observe("a", "parallel", width=16, modeled_ns=1.0, measured_ns=100.0)   # censored width entry
     assert fb2.width_ratio("a", 16) == 1.0   # entry untrustworthy
     # correction() itself still reports the (clamped) censored estimate
     assert fb2.correction("a", True, width=16) == pytest.approx(8.0)
@@ -145,8 +180,8 @@ def test_censored_signal_yields_neutral_width_ratio():
 
 def test_uncensored_signal_flows_through():
     fb = CostFeedback(alpha=1.0, clip=8.0)
-    fb.observe("a", True, 1.0, 2.0)
-    fb.observe_width("a", 16, 1.0, 6.0)
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=2.0)
+    fb.observe("a", "parallel", width=16, modeled_ns=1.0, measured_ns=6.0)
     assert fb.width_ratio("a", 16) == pytest.approx(3.0)
 
 
@@ -158,15 +193,15 @@ def test_width_one_cancels_common_mode_in_parallel_workload():
     offset cancels at width 1 too, instead of inflating c_seq by up to
     clip× while c_par stays neutral."""
     fb = CostFeedback(alpha=1.0)
-    fb.observe("pr", True, 1.0, 3.0)          # only parallel iterations
+    fb.observe("pr", "parallel", modeled_ns=1.0, measured_ns=3.0)          # only parallel iterations
     for w in (1, 8, 16):
-        fb.observe_width("pr", w, 1.0, 3.0)   # same uniform 3x offset
+        fb.observe("pr", "parallel", width=w, modeled_ns=1.0, measured_ns=3.0)   # same uniform 3x offset
     assert fb.width_ratio("pr", 1) == pytest.approx(1.0)
     assert fb.width_ratio("pr", 8) == pytest.approx(1.0)
     assert fb.width_ratio("pr", 16) == pytest.approx(1.0)
     # a genuinely worse width (still inside the clip window, so uncensored)
     # stands out against the fallback reference
-    fb.observe_width("pr", 16, 1.0, 7.5)
+    fb.observe("pr", "parallel", width=16, modeled_ns=1.0, measured_ns=7.5)
     assert fb.width_ratio("pr", 16) > 1.0
 
 
@@ -186,7 +221,7 @@ def _seeded_fb(penalties=((1, 1.0), (2, 1.0), (4, 1.0), (8, 3.0), (16, 8.0))):
     fb = CostFeedback()
     for w, penalty in penalties:
         for _ in range(32):
-            fb.observe_width(PR_PULL.name, w, 1.0, penalty)
+            fb.observe(PR_PULL.name, "parallel", width=w, modeled_ns=1.0, measured_ns=penalty)
     return fb
 
 
@@ -237,9 +272,9 @@ def test_prepare_iteration_consults_width_table(small_rmat):
     fb = CostFeedback()
     for _ in range(32):
         for w in (8, 16):
-            fb.observe_width(PR_PULL.name, w, 1.0, 7.9)  # wide measured awful
+            fb.observe(PR_PULL.name, "parallel", width=w, modeled_ns=1.0, measured_ns=7.9)  # wide measured awful
         for w in (1, 2, 4):
-            fb.observe_width(PR_PULL.name, w, 1.0, 1.0)
+            fb.observe(PR_PULL.name, "parallel", width=w, modeled_ns=1.0, measured_ns=1.0)
     corrected = prepare_iteration(
         PR_PULL, hw, small_rmat.stats, small_rmat.num_vertices,
         frontier_degrees=deg, p=16, feedback=fb,
@@ -290,8 +325,10 @@ def test_width_feedback_off_is_inert(small_rmat):
         )
         return eng.run_sessions(
             _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
-            steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
-            width_feedback=wfb,
+            config=EngineConfig(
+                steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
+                width_feedback=wfb,
+            ),
         )
 
     fb = CostFeedback()
@@ -314,8 +351,10 @@ def test_width_feedback_on_populates_table_from_all_paths(small_rmat):
     )
     rep = eng.run_sessions(
         _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
-        steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
-        width_feedback=True,
+        config=EngineConfig(
+            steal=True, fuse=True, fusion=FusionConfig(hold_ns=2e4),
+            width_feedback=True,
+        ),
     )
     assert fb.width_observations > 0
     assert rep.total_edges > 0
@@ -329,7 +368,8 @@ def test_width_feedback_on_populates_table_from_all_paths(small_rmat):
 def test_engine_width_histogram_reports_delivered_widths(small_rmat):
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
     rep = eng.run_sessions(
-        _mixed_mk(small_rmat), sessions=4, queries_per_session=1, steal=True
+        _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
+        config=EngineConfig(steal=True),
     )
     hist = rep.width_histogram()
     assert hist and all(w >= 1 and n >= 1 for w, n in hist.items())

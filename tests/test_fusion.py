@@ -9,6 +9,7 @@ import pytest
 from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
     CapacityGovernor,
+    EngineConfig,
     FusionConfig,
     FusionGroup,
     MultiQueryEngine,
@@ -117,12 +118,14 @@ def _run(graph, *, sessions=4, pool=8, fuse=False, steal=False, max_iters=3,
         mk or _mk_pr(graph, max_iters=max_iters),
         sessions=sessions,
         queries_per_session=queries,
-        steal=steal,
-        fuse=fuse,
-        fusion=fusion,
-        governor=governor,
-        priorities=priorities,
-        arrivals=arrivals,
+        config=EngineConfig(
+            steal=steal,
+            fuse=fuse,
+            fusion=fusion,
+            governor=governor,
+            priorities=priorities,
+            arrivals=arrivals,
+        ),
     )
     assert eng.pool.available == eng.pool.capacity, "grant leaked"
     return rep
@@ -279,7 +282,7 @@ def test_fused_grants_never_oversubscribe_pool(sessions, pool):
         _mk_pr(g, max_iters=1),
         sessions=sessions,
         queries_per_session=1,
-        fuse=True,
+        config=EngineConfig(fuse=True),
     )
     assert eng.pool.available == pool
     assert max((u for _, u in rep.utilization), default=0) <= pool

@@ -8,6 +8,7 @@ from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
     AdmissionController,
     CapacityGovernor,
+    EngineConfig,
     EngineReport,
     GovernorConfig,
     MultiQueryEngine,
@@ -87,7 +88,8 @@ def test_governor_grow_wakes_parked_run_at_resize_time(medium_rmat):
         admission=AdmissionController(max_inflight=8),
     )
     rep = eng.run_sessions(
-        _mk_pr(medium_rmat), sessions=4, queries_per_session=1, governor=gov
+        _mk_pr(medium_rmat), sessions=4, queries_per_session=1,
+        config=EngineConfig(governor=gov),
     )
     grows = [(t, old, new) for t, old, new, r in rep.resize_events if r == "grow"]
     assert grows, "expected the governor to grow a saturated 2-worker pool"
@@ -113,7 +115,8 @@ def test_governor_grow_drains_admission_waiters(medium_rmat):
                            shrink_util=0.0)
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
     rep = eng.run_sessions(
-        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, governor=gov
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1,
+        config=EngineConfig(governor=gov),
     )
     assert rep.grow_events > 0
     assert rep.max_inflight > 2  # waiters drained into the grown pool
@@ -129,7 +132,8 @@ def test_governor_grows_under_sustained_saturation(medium_rmat):
     gov = CapacityGovernor(p_min=2, p_max=16, window_ns=5e4, cooldown_ns=5e4)
     eng_g = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
     rep_g = eng_g.run_sessions(
-        _mk_pr(medium_rmat), sessions=8, queries_per_session=1, governor=gov
+        _mk_pr(medium_rmat), sessions=8, queries_per_session=1,
+        config=EngineConfig(governor=gov),
     )
     assert rep_g.grow_events > 0
     caps = [c for _, c in rep_g.capacity_timeline]
@@ -153,8 +157,7 @@ def test_governor_shrinks_through_idle_gap(medium_rmat):
         _mk_pr(medium_rmat),
         sessions=4,
         queries_per_session=1,
-        arrivals=arrivals,
-        governor=gov,
+        config=EngineConfig(arrivals=arrivals, governor=gov),
     )
     assert rep.shrink_events > 0
     assert min(c for _, c in rep.capacity_timeline) == 2  # reached p_min
@@ -171,7 +174,10 @@ def test_governor_hysteresis_spaces_actions():
 
     g = rmat_graph(11, seed=3)
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=2, policy="scheduler")
-    rep = eng.run_sessions(_mk_pr(g), sessions=8, queries_per_session=2, governor=gov)
+    rep = eng.run_sessions(
+        _mk_pr(g), sessions=8, queries_per_session=2,
+        config=EngineConfig(governor=gov),
+    )
     times = [t for t, *_ in rep.resize_events]
     assert all(b - a >= cfg.cooldown_ns for a, b in zip(times, times[1:]))
 
@@ -185,7 +191,8 @@ def test_governor_disabled_and_inert_are_bit_identical(medium_rmat):
     inert = CapacityGovernor(p_min=4, p_max=4, window_ns=1e5, cooldown_ns=1e5)
     eng1 = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
     rep1 = eng1.run_sessions(
-        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, governor=inert
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1,
+        config=EngineConfig(governor=inert),
     )
     assert rep1.resize_events == [] and rep1.preemptions == []
     assert [r.traces for r in rep0.records] == [r.traces for r in rep1.records]
@@ -247,7 +254,7 @@ def test_engine_honours_class_quotas(medium_rmat):
         _mk_pr(medium_rmat),
         sessions=6,
         queries_per_session=1,
-        priorities=lambda sid: 1 if sid < 2 else 0,
+        config=EngineConfig(priorities=lambda sid: 1 if sid < 2 else 0),
     )
     assert len(rep.records) == 6  # everyone still ran (quota delays, not drops)
     assert counts["max_low"] == 1
@@ -277,9 +284,9 @@ def test_preemption_frees_workers_for_high_priority(medium_rmat):
             _hog_and_sprinter(medium_rmat),
             sessions=2,
             queries_per_session=1,
-            priorities=[0, 1],
-            arrivals=[0.0, 5_000.0],
-            governor=gov,
+            config=EngineConfig(
+                priorities=[0, 1], arrivals=[0.0, 5_000.0], governor=gov
+            ),
         )
         assert eng.pool.available == eng.pool.capacity
         results[preempt] = rep
@@ -302,9 +309,9 @@ def test_preempted_victim_still_completes(medium_rmat):
         _hog_and_sprinter(medium_rmat),
         sessions=2,
         queries_per_session=1,
-        priorities=[0, 1],
-        arrivals=[0.0, 5_000.0],
-        governor=gov,
+        config=EngineConfig(
+            priorities=[0, 1], arrivals=[0.0, 5_000.0], governor=gov
+        ),
     )
     victim = [r for r in rep.records if r.priority == 0][0]
     assert victim.finished_ns > 0
@@ -373,7 +380,8 @@ def test_steal_and_governor_compose(medium_rmat):
     gov = CapacityGovernor(p_min=4, p_max=16, window_ns=5e4, cooldown_ns=1e5)
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
     rep = eng.run_sessions(
-        mk, sessions=8, queries_per_session=1, steal=True, governor=gov
+        mk, sessions=8, queries_per_session=1,
+        config=EngineConfig(steal=True, governor=gov),
     )
     heavy = [r for r in rep.records if r.algorithm == "pagerank_pull"][0]
     assert heavy.edges == pytest.approx(medium_rmat.num_edges * 6)
@@ -414,8 +422,10 @@ def test_burst_mix_governed_beats_fixed(medium_rmat):
             XEON_E5_2660V4, pool_capacity=16, policy="scheduler", admission=adm
         )
         reps[governed] = eng.run_sessions(
-            mk, sessions=24, queries_per_session=1, arrivals=arrivals,
-            priorities=prio, steal=True, governor=gov,
+            mk, sessions=24, queries_per_session=1,
+            config=EngineConfig(
+                arrivals=arrivals, priorities=prio, steal=True, governor=gov
+            ),
         )
         assert eng.pool.available == eng.pool.capacity
     fixed, governed = reps[False], reps[True]

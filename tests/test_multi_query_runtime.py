@@ -7,6 +7,7 @@ import pytest
 from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
     AdmissionController,
+    EngineConfig,
     MultiQueryEngine,
     PoissonArrivals,
     QueryRecord,
@@ -308,7 +309,8 @@ def test_open_loop_arrivals_shift_latency(medium_rmat):
     arr = PoissonArrivals(rate_per_s=5_000.0, seed=1)
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
     rep = eng.run_sessions(
-        _mk_pr(medium_rmat), sessions=6, queries_per_session=1, arrivals=arr
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1,
+        config=EngineConfig(arrivals=arr),
     )
     times = arr.times_ns(6)
     submitted = sorted(r.submitted_ns for r in rep.records)
@@ -340,7 +342,7 @@ def test_high_priority_session_gets_more_parallelism(medium_rmat):
         _mk_pr(medium_rmat),
         sessions=8,
         queries_per_session=1,
-        priorities=lambda sid: 1 if sid == 0 else 0,
+        config=EngineConfig(priorities=lambda sid: 1 if sid == 0 else 0),
     )
     by_prio = {0: [], 1: []}
     for r in rep.records:

@@ -8,6 +8,7 @@ import pytest
 
 from repro.algorithms import BFSExecutor, PageRankExecutor
 from repro.core import (
+    EngineConfig,
     MultiQueryEngine,
     PackageScheduler,
     QueryRecord,
@@ -224,7 +225,8 @@ def test_skewed_mix_steal_beats_nosteal(medium_rmat):
     for steal in (False, True):
         eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
         reps[steal] = eng.run_sessions(
-            _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=steal
+            _skew_mk(medium_rmat), sessions=8, queries_per_session=1,
+            config=EngineConfig(steal=steal),
         )
         assert eng.pool.available == eng.pool.capacity  # nothing leaked
     off, on = reps[False], reps[True]
@@ -243,7 +245,8 @@ def test_stolen_work_is_exactly_once(medium_rmat):
     thief but through the victim's executor)."""
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
     rep = eng.run_sessions(
-        _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=True
+        _skew_mk(medium_rmat), sessions=8, queries_per_session=1,
+        config=EngineConfig(steal=True),
     )
     heavy = [r for r in rep.records if r.algorithm == "pagerank_pull"][0]
     assert heavy.iterations == 6
@@ -266,7 +269,8 @@ def test_uniform_load_steal_is_neutral(medium_rmat):
     for steal in (False, True):
         eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
         thr[steal] = eng.run_sessions(
-            mk, sessions=16, queries_per_session=1, steal=steal
+            mk, sessions=16, queries_per_session=1,
+            config=EngineConfig(steal=steal),
         ).throughput_modeled()
     assert thr[True] == pytest.approx(thr[False], rel=0.02)
 
@@ -284,7 +288,7 @@ def test_single_session_steal_traces_match_run_query(medium_rmat):
         lambda s, q: PageRankExecutor(medium_rmat, mode="pull", max_iters=5, tol=0),
         sessions=1,
         queries_per_session=1,
-        steal=True,
+        config=EngineConfig(steal=True),
     )
     r = rep.records[0]
     assert rep.total_stolen == 0
@@ -296,7 +300,8 @@ def test_single_session_steal_traces_match_run_query(medium_rmat):
 def test_steal_report_fields(medium_rmat):
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
     rep = eng.run_sessions(
-        _skew_mk(medium_rmat), sessions=8, queries_per_session=1, steal=True
+        _skew_mk(medium_rmat), sessions=8, queries_per_session=1,
+        config=EngineConfig(steal=True),
     )
     assert rep.steal_events, "expected steals under the skewed mix"
     ts = [t for t, *_ in rep.steal_events]
