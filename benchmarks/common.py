@@ -85,6 +85,9 @@ def run_sessions(
     feedback=None,
     width_feedback=None,
     backend=None,
+    domains: int = 1,
+    placement: str = "locality",
+    migration_penalty: bool = True,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
@@ -97,7 +100,10 @@ def run_sessions(
     fusion (fig16). ``feedback``/``width_feedback`` install the §4.4 cost
     feedback loop and toggle its width-keyed table (fig17). ``backend``
     selects the execution substrate ("modeled" | "inline" | "pallas" or an
-    ExecutionBackend instance; fig18)."""
+    ExecutionBackend instance; fig18). ``domains``/``placement``/
+    ``migration_penalty`` split the pool into locality domains and pick the
+    session-placement policy (fig19); the ``domains=1`` default is
+    byte-identical to the pre-domain engine."""
     kwargs = {}
     if pool_capacity is not None:
         kwargs["pool_capacity"] = pool_capacity
@@ -124,6 +130,9 @@ def run_sessions(
             fusion=fusion,
             width_feedback=width_feedback,
             backend=backend,
+            domains=domains,
+            placement=placement,
+            migration_penalty=migration_penalty,
         ),
     )
     us = (time.perf_counter_ns() - t0) / 1e3

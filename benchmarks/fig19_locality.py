@@ -1,0 +1,87 @@
+"""Fig. 19 (beyond the paper): locality domains on a clustered same-graph
+burst.
+
+Four closed RMAT communities (``clustered_graph``, zero cross edges) make
+placement matter: a BFS frontier seeded inside community ``k`` keeps its
+degree mass on shard ``k`` forever, so a session placed on that domain
+streams locally while any other placement pays the contention model's
+remote factor on every off-domain byte. The burst is BFS-heavy (three BFS
+sessions per PageRank session) with sources deliberately sitting in
+community ``(sid + 1) % 4`` — exactly off the ``sid % 4`` domain a
+locality-blind round-robin picks — so blind placement starts every
+traversal remote while mass-driven placement follows the frontier.
+
+Variants, all on a 16-worker pool split into the same domains:
+
+* ``d1``       — ``domains=1``: the opt-out baseline; byte-identical to the
+  pre-domain engine (this row doubles as the regression proof).
+* ``d4_local`` — ``domains=4, placement="locality"``: mass-driven placement
+  with movement hysteresis; the tentpole configuration.
+* ``d4_blind`` — ``domains=4, placement="round_robin"``: same machine, same
+  penalty model, graph-oblivious placement — the control ``d4_local`` must
+  beat on modeled PEPS (check_trend.py gates both rows).
+* ``d4_nopen`` — ``domains=4, placement="round_robin",
+  migration_penalty=False``: blind placement on a penalty-free
+  interconnect, isolating how much of the d4 spread is the remote factor
+  versus per-domain queueing.
+"""
+import time
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import EngineConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import clustered_graph
+
+from . import common
+from .common import Row
+
+SCALE = 10      # 2**SCALE vertices per community
+CLUSTERS = 4
+SESSIONS = 8
+QUERIES = 3
+POOL = 16
+PR_ITERS = 2
+
+VARIANTS = (
+    ("d1", dict(domains=1)),
+    ("d4_local", dict(domains=4, placement="locality")),
+    ("d4_blind", dict(domains=4, placement="round_robin")),
+    ("d4_nopen", dict(domains=4, placement="round_robin", migration_penalty=False)),
+)
+
+
+def _make_mk(graph):
+    block = 1 << SCALE
+
+    def mk(s, q):
+        if s % 4 == 3:  # one topology-centric session per wave
+            return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+        src = ((s + 1) % CLUSTERS) * block + (s * 131 + q * 17) % block
+        return BFSExecutor(graph, src)
+
+    return mk
+
+
+def run() -> list[Row]:
+    g = clustered_graph(SCALE, CLUSTERS, seed=3, cross_fraction=0.0)
+    mk = _make_mk(g)
+    rows: list[Row] = []
+    for label, cfg in VARIANTS:
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
+        t0 = time.perf_counter_ns()
+        rep = eng.run_sessions(
+            mk,
+            sessions=SESSIONS,
+            queries_per_session=QUERIES,
+            config=EngineConfig(steal=common.STEAL, fuse=True, **cfg),
+        )
+        us = (time.perf_counter_ns() - t0) / 1e3
+        base = f"fig19/locality_burst/clu_sf{SCALE}x{CLUSTERS}/{label}/s{SESSIONS}"
+        rows.append((base, us, rep.throughput_modeled()))
+        rows.append((f"{base}/mean_util", us, rep.mean_utilization()))
+        rows.append(
+            (f"{base}/cross_steal_frac", us, rep.cross_domain_steal_fraction())
+        )
+        rows.append(
+            (f"{base}/p95_latency_us", us, rep.latency_percentiles()["p95"] / 1e3)
+        )
+    return rows

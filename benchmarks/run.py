@@ -11,7 +11,9 @@
 #   always emits unfused and fused (gang fusion) variants; fig17 always
 #   emits nofb and widthfb (width-aware cost feedback) variants; fig18
 #   always emits all three execution backends (modeled/inline/pallas), with
-#   real wall-clock rows flagged informational (reported, never gated).
+#   real wall-clock rows flagged informational (reported, never gated);
+#   fig19 always emits all four locality-domain variants
+#   (d1/d4_local/d4_blind/d4_nopen).
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
 #   but do not commit its numbers over the gated baseline.
@@ -38,6 +40,7 @@ MODULES = [
     "fig16_fusion_sessions",
     "fig17_width_feedback",
     "fig18_substrate",
+    "fig19_locality",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
@@ -93,7 +96,9 @@ def main() -> None:
             print(f"{name},{us:.1f},{derived:.6g}")
         if any(
             k in mod_name
-            for k in ("sessions", "governor", "fusion", "feedback", "substrate")
+            for k in (
+                "sessions", "governor", "fusion", "feedback", "substrate", "locality",
+            )
         ):
             session_rows.extend(sessions_json_rows(rows))
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)

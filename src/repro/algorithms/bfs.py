@@ -144,6 +144,15 @@ class BFSExecutor:
         unvisited = self.graph.stats.v_reach - float(jnp.sum(self._visited))
         return int(fl.size), degrees, max(unvisited, 0.0)
 
+    def frontier_vertices(self) -> np.ndarray:
+        """Compacted-frontier vertex ids — the locality-placement signal: a
+        multi-domain engine bins these (degree-weighted) into graph shards
+        to pick the domain this iteration's mass touches most."""
+        if self._frontier_host is None:
+            n = int(self._n_frontier)
+            self._frontier_host = np.asarray(self._frontier_list)[:n]
+        return self._frontier_host
+
     def run_packages(self, package_ids, packages, t: int, parallel: bool) -> None:
         """Expand the given packages (slot ranges of the compacted frontier).
 

@@ -28,6 +28,7 @@ from .contention import (
     MemoryLevel,
     calibrate_from_runs,
     counter_array_bytes,
+    cross_domain_cost_ns,
 )
 from .cost_model import (
     IterationWork,
@@ -85,7 +86,7 @@ __all__ = [
     "DESCRIPTORS", "AlgorithmDescriptor", "BFS_TOP_DOWN", "DEGREE_COUNT", "ItemCost",
     "PR_PULL", "PR_PUSH",
     "PRESETS", "TPU_V5E_POD", "XEON_E5_2660V4", "HardwareModel", "MemoryLevel",
-    "calibrate_from_runs", "counter_array_bytes",
+    "calibrate_from_runs", "counter_array_bytes", "cross_domain_cost_ns",
     "IterationWork", "c_sub", "c_vertex_sequential", "c_vertex_total",
     "iteration_cost_ns", "touched_memory_bytes",
     "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",

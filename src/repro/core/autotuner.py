@@ -43,12 +43,24 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only import
 @dataclasses.dataclass(frozen=True)
 class PreparedIteration:
     """Everything the scheduler needs for one iteration: the work profile,
-    the thread bounds, and the generated packages."""
+    the thread bounds, the generated packages — and, on a multi-domain
+    engine, the frontier's per-domain degree mass (the placement signal,
+    computed from the same sampled statistics that drove packaging).
+    ``domain_mass is None`` on single-domain runs: no placement exists."""
 
     work: IterationWork
     bounds: ThreadBounds
     packages: WorkPackages
     used_local_stats: bool
+    domain_mass: np.ndarray | None = None
+
+    @property
+    def home_domain(self) -> int | None:
+        """The domain this iteration's degree mass touches most (argmax of
+        ``domain_mass``; ties break to the lowest index), or ``None``."""
+        if self.domain_mass is None or self.domain_mass.size == 0:
+            return None
+        return int(np.argmax(self.domain_mass))
 
 
 def prepare_iteration(
@@ -61,13 +73,25 @@ def prepare_iteration(
     unvisited: float | None = None,
     p: int | None = None,
     feedback: "CostFeedback | None" = None,
+    partition=None,
+    frontier_vertices: np.ndarray | None = None,
 ) -> PreparedIteration:
     """Run the full preparation step for the next iteration.
 
     ``feedback`` (optional) supplies measured (algorithm, width) corrections:
     the thread-bound sweep scores each candidate width with
     ``feedback.width_ratio`` so the plan reflects how widths actually
-    performed, not just the contention model's prediction."""
+    performed, not just the contention model's prediction.
+
+    ``partition`` (optional, a :class:`~..graph.partition.GraphPartition`)
+    turns preparation into the placement decision point: the frontier's
+    per-domain degree mass is computed here — from ``frontier_vertices``
+    weighted by ``frontier_degrees`` when the executor exposes them (the
+    data-driven case; the same sample cap as the local statistics applies),
+    or the partition's static degree mass for whole-graph frontiers — and
+    carried on the returned plan, so the engine re-evaluates a session's
+    domain exactly when the frontier drifts. ``partition=None`` keeps
+    preparation byte-identical."""
     est = TraversalEstimator(
         deg_mean=stats.deg_out_mean,
         deg_max=stats.deg_out_max,
@@ -118,4 +142,22 @@ def prepare_iteration(
         variance_ratio=variance_ratio,
         frontier_size=int(frontier_size),
     )
-    return PreparedIteration(work=work, bounds=tb, packages=pkgs, used_local_stats=use_local)
+    domain_mass = None
+    if partition is not None:
+        if frontier_vertices is not None:
+            verts = np.asarray(frontier_vertices)[:SAMPLE_CAP_RUNTIME]
+            degs = (
+                np.asarray(frontier_degrees)[:SAMPLE_CAP_RUNTIME]
+                if frontier_degrees is not None
+                else None
+            )
+            domain_mass = partition.domain_mass(verts, degs)
+        else:
+            domain_mass = partition.domain_mass()
+    return PreparedIteration(
+        work=work,
+        bounds=tb,
+        packages=pkgs,
+        used_local_stats=use_local,
+        domain_mass=domain_mass,
+    )

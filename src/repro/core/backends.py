@@ -58,15 +58,18 @@ _PLAN_CACHE_CAP = 256
 
 @dataclasses.dataclass(frozen=True)
 class DevicePlan:
-    """Backend-prepared execution state for one (executor, prep) pair.
+    """Backend-prepared execution state for one (executor, prep, shard) key.
 
     ``handle`` is backend-private (device tile tables, warm jitted callables,
     prefix sums for unpadding); the engine only ever passes the plan back to
-    the backend that built it."""
+    the backend that built it. ``shard`` is the locality-domain
+    :class:`~..graph.partition.GraphShard` the plan was staged against
+    (``None`` on a single-domain pool)."""
 
     executor: "QueryExecutor"
     prep: "PreparedIteration"
     handle: Any = None
+    shard: Any = None
 
 
 @runtime_checkable
@@ -75,19 +78,22 @@ class ExecutionBackend(Protocol):
 
     ``prepare`` is called (and memoized) before the first ``execute`` of an
     (executor, prep) pair and may be arbitrarily slow — compilation and
-    device staging belong here, *outside* any measured window. ``execute``
-    runs one step's package batch at the granted width and returns the
-    measured nanoseconds that flow into records and the §4.4 feedback
-    tables. ``modeled_ns`` is the engine's modeled cost for the step —
-    substrates that do no wall-clock timing echo it back."""
+    device staging belong here, *outside* any measured window. A
+    multi-domain engine additionally passes the ``shard`` its placement
+    chose; the backend memoizes one plan per (prep, shard) so dispatch can
+    run against shard-local device state. ``execute`` runs one step's
+    package batch at the granted width and returns the measured nanoseconds
+    that flow into records and the §4.4 feedback tables. ``modeled_ns`` is
+    the engine's modeled cost for the step — substrates that do no
+    wall-clock timing echo it back."""
 
     name: str
 
     def prepare(
-        self, executor: "QueryExecutor", prep: "PreparedIteration"
+        self, executor: "QueryExecutor", prep: "PreparedIteration", shard: Any = None
     ) -> DevicePlan:
-        """Stage one (executor, prep) pair for execution (compile, build
-        device tables, warm jit caches); memoized per pair."""
+        """Stage one (executor, prep[, shard]) key for execution (compile,
+        build device tables, warm jit caches); memoized per key."""
         ...
 
     def execute(
@@ -109,25 +115,33 @@ def _run_inline(plan: DevicePlan, step: "ScheduleStep") -> None:
 
 
 class _PlanMemo:
-    """Per-backend (executor, prep) → DevicePlan memo.
+    """Per-backend (executor, prep, shard) → DevicePlan memo.
 
     Keyed by object ids but holding strong references through the stored
-    plans, so a key can never be reused while its entry is alive. Evicts
-    FIFO past the cap — at most one prep is live per executor, so the cap
-    is never reached by a well-behaved engine loop."""
+    plans, so a key can never be reused while its entry is alive. ``shard``
+    joins the key so a session whose placement drifts across domains gets
+    one plan per shard it executes against, not a single clobbered slot.
+    Evicts FIFO past the cap — at most one prep is live per executor, so
+    the cap is never reached by a well-behaved engine loop."""
 
     def __init__(self) -> None:
-        self._plans: dict[tuple[int, int], DevicePlan] = {}
+        self._plans: dict[tuple[int, int, int], DevicePlan] = {}
 
     def get(
-        self, executor: "QueryExecutor", prep: "PreparedIteration"
+        self, executor: "QueryExecutor", prep: "PreparedIteration", shard: Any = None
     ) -> DevicePlan | None:
-        """The memoized plan for this exact (executor, prep) pair, if any."""
-        return self._plans.get((id(executor), id(prep)))
+        """The memoized plan for this exact (executor, prep, shard) key."""
+        return self._plans.get(
+            (id(executor), id(prep), id(shard) if shard is not None else 0)
+        )
 
     def put(self, plan: DevicePlan) -> DevicePlan:
         """Memoize ``plan``; evicts the oldest entry past the cap."""
-        key = (id(plan.executor), id(plan.prep))
+        key = (
+            id(plan.executor),
+            id(plan.prep),
+            id(plan.shard) if plan.shard is not None else 0,
+        )
         self._plans[key] = plan
         while len(self._plans) > _PLAN_CACHE_CAP:
             self._plans.pop(next(iter(self._plans)))
@@ -151,12 +165,12 @@ class ModeledBackend:
         self._memo = _PlanMemo()
 
     def prepare(
-        self, executor: "QueryExecutor", prep: "PreparedIteration"
+        self, executor: "QueryExecutor", prep: "PreparedIteration", shard: Any = None
     ) -> DevicePlan:
         """No device staging needed; returns a bare (executor, prep) plan."""
-        plan = self._memo.get(executor, prep)
+        plan = self._memo.get(executor, prep, shard)
         if plan is None:
-            plan = self._memo.put(DevicePlan(executor, prep))
+            plan = self._memo.put(DevicePlan(executor, prep, shard=shard))
         return plan
 
     def execute(
@@ -181,12 +195,12 @@ class InlineBackend:
         self._memo = _PlanMemo()
 
     def prepare(
-        self, executor: "QueryExecutor", prep: "PreparedIteration"
+        self, executor: "QueryExecutor", prep: "PreparedIteration", shard: Any = None
     ) -> DevicePlan:
         """No device staging needed; returns a bare (executor, prep) plan."""
-        plan = self._memo.get(executor, prep)
+        plan = self._memo.get(executor, prep, shard)
         if plan is None:
-            plan = self._memo.put(DevicePlan(executor, prep))
+            plan = self._memo.put(DevicePlan(executor, prep, shard=shard))
         return plan
 
     def execute(
@@ -213,6 +227,15 @@ class _PallasHandle:
     num_vertices: int = 0
     edge_prefix: np.ndarray | None = None  # [V+1] in-edges with dst < v (pr_pull)
     ids_pad: Any = None            # [2, E] endpoint ids mod C (degree_count)
+    # shard-local dispatch (locality domains): the plan's shard covers dst
+    # tiles [tile_lo, tile_hi) and shard_src/shard_dstl hold that slab —
+    # ranges inside it dispatch against the slab (what a domain's device
+    # would actually hold), anything outside falls back to the full tables
+    # so results stay exact when a frontier drifts off its placed shard
+    tile_lo: int = 0
+    tile_hi: int = 0
+    shard_src: Any = None
+    shard_dstl: Any = None
 
 
 class PallasBackend:
@@ -289,10 +312,12 @@ class PallasBackend:
         jax.block_until_ready(out)
 
     def prepare(
-        self, executor: "QueryExecutor", prep: "PreparedIteration"
+        self, executor: "QueryExecutor", prep: "PreparedIteration", shard: Any = None
     ) -> DevicePlan:
-        """Build (or reuse) device tile tables and warm the kernel."""
-        plan = self._memo.get(executor, prep)
+        """Build (or reuse) device tile tables and warm the kernel; with a
+        ``shard`` the pr_pull plan additionally stages the shard's dst-tile
+        slab so dispatch against the placed domain touches only its slice."""
+        plan = self._memo.get(executor, prep, shard)
         if plan is not None:
             return plan
         from .stealing import graph_identity
@@ -321,6 +346,13 @@ class PallasBackend:
                 num_vertices=nv,
                 edge_prefix=prefix,
             )
+            if shard is not None:
+                # the shard's target vertices [v_lo, v_hi) cover dst tiles
+                # [tile_lo, tile_hi); the slab is the shard-local device state
+                handle.tile_lo = int(shard.v_lo) // tile
+                handle.tile_hi = -(-int(shard.v_hi) // tile)
+                handle.shard_src = src_chunks[handle.tile_lo : handle.tile_hi]
+                handle.shard_dstl = dstl_chunks[handle.tile_lo : handle.tile_hi]
             self._warm_spmv(handle)
         elif kind == "bfs":
             src, dst = executor.out_edges()
@@ -366,7 +398,7 @@ class PallasBackend:
             )
         else:
             handle = _PallasHandle(kind="inline")
-        return self._memo.put(DevicePlan(executor, prep, handle))
+        return self._memo.put(DevicePlan(executor, prep, handle, shard=shard))
 
     # ---------------------------------------------------------- execution
     def _grid_slices(self, t0: int, t1: int, workers: int) -> list[tuple[int, int]]:
@@ -380,6 +412,16 @@ class PallasBackend:
         bounds = np.linspace(t0, t1, w + 1).round().astype(int)
         return [(int(a), int(b)) for a, b in zip(bounds[:-1], bounds[1:]) if b > a]
 
+    def _tile_slab(self, handle: _PallasHandle, a: int, b: int) -> tuple[Any, Any]:
+        """Device chunk tables for absolute dst tiles [a, b): the shard-local
+        slab when the range lies inside the plan's shard (the common case
+        under locality placement — the dispatch never touches other shards'
+        tables), the full tables otherwise (a drifted frontier stays exact)."""
+        if handle.shard_src is not None and a >= handle.tile_lo and b <= handle.tile_hi:
+            lo = handle.tile_lo
+            return handle.shard_src[a - lo : b - lo], handle.shard_dstl[a - lo : b - lo]
+        return handle.src_chunks[a:b], handle.dstl_chunks[a:b]
+
     def _spmv_range(
         self, handle: _PallasHandle, contrib, t0: int, t1: int, workers: int
     ):
@@ -391,9 +433,10 @@ class PallasBackend:
 
         outs = []
         for a, b in self._grid_slices(t0, t1, workers):
+            src_chunks, dstl_chunks = self._tile_slab(handle, a, b)
             out = spmv_pallas(
-                handle.src_chunks[a:b],
-                handle.dstl_chunks[a:b],
+                src_chunks,
+                dstl_chunks,
                 contrib,
                 dst_tile=handle.dst_tile,
                 interpret=self.interpret,

@@ -6,12 +6,13 @@ Through PR 5 every engine feature landed as another keyword on
 made it six. This dataclass is the redesigned surface: one frozen value
 object describing *how* a run executes, passed as
 ``run_sessions(make_executor, sessions=..., queries_per_session=...,
-config=EngineConfig(...))``. The old keywords still work for one release
-behind a ``DeprecationWarning`` shim in ``run_sessions``.
+config=EngineConfig(...))``. The legacy keyword shim had its one-release
+grace period in PR 6 and is gone: ``run_sessions`` now accepts ``config``
+only.
 
 Every field keeps its former default, so ``EngineConfig()`` is exactly the
 former bare call: no stealing, no governor, no fusion, engine-default width
-feedback, engine-default (modeled) backend.
+feedback, engine-default (modeled) backend, one locality domain.
 """
 from __future__ import annotations
 
@@ -49,6 +50,19 @@ class EngineConfig:
     * ``backend`` — per-run override of the execution substrate: an
       ``ExecutionBackend`` instance or a name (``"modeled"`` | ``"inline"``
       | ``"pallas"``); ``None`` → the engine's installed backend.
+    * ``domains`` — locality domains the pool splits into (NUMA sockets,
+      TPU slices). ``1`` (the default) is byte-identical to the pre-domain
+      engine: no partition is built, no domain key flows anywhere.
+    * ``placement`` — how sessions map to domains when ``domains > 1``:
+      ``"locality"`` places each session on the domain its frontier's degree
+      mass touches most (re-evaluated every iteration from the same sampled
+      stats that drive packaging); ``"round_robin"`` ignores the graph
+      (``sid % domains``) — the locality-blind control fig19 compares
+      against.
+    * ``migration_penalty`` — whether off-home execution and cross-domain
+      steals pay the contention model's remote factor + migration cost
+      (``c_remote_factor`` / ``c_migration_ns``); only meaningful with
+      ``domains > 1``.
     """
 
     priorities: Sequence[int] | Callable[[int], int] | None = None
@@ -59,3 +73,14 @@ class EngineConfig:
     fusion: "FusionConfig | None" = None
     width_feedback: bool | None = None
     backend: "ExecutionBackend | str | None" = None
+    domains: int = 1
+    placement: str = "locality"
+    migration_penalty: bool = True
+
+    def __post_init__(self) -> None:
+        if self.domains < 1:
+            raise ValueError("domains must be >= 1")
+        if self.placement not in ("locality", "round_robin"):
+            raise ValueError(
+                f"placement must be 'locality' or 'round_robin', got {self.placement!r}"
+            )

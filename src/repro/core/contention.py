@@ -68,6 +68,12 @@ class HardwareModel:
     c_para_startup_ns: float = 5_000.0         # C_para_startup (a few µs)
     c_t_min_work_ns: float = 20_000.0          # C_T_min (> C_T_overhead)
     max_packages_factor: int = 8               # §4.2: packages ≤ 8 × parallelism
+    # Locality domains: a step executed off its home domain streams the graph
+    # across the socket interconnect (QPI / ICI), inflating every access by a
+    # remote factor; migrating a session or stolen batch additionally pays a
+    # one-time cache/state transfer cost.
+    c_remote_factor: float = 1.35              # remote-domain access inflation
+    c_migration_ns: float = 20_000.0           # one-time cross-domain move cost
 
     # ---------------- level selection + Eq. 12–14 ----------------
 
@@ -147,6 +153,8 @@ class HardwareModel:
             c_para_startup_ns=self.c_para_startup_ns,
             c_t_min_work_ns=self.c_t_min_work_ns,
             max_packages_factor=self.max_packages_factor,
+            c_remote_factor=self.c_remote_factor,
+            c_migration_ns=self.c_migration_ns,
         )
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
@@ -170,6 +178,9 @@ class HardwareModel:
             c_para_startup_ns=p["c_para_startup_ns"],
             c_t_min_work_ns=p["c_t_min_work_ns"],
             max_packages_factor=p["max_packages_factor"],
+            # calibration files written before locality domains lack these
+            c_remote_factor=p.get("c_remote_factor", 1.35),
+            c_migration_ns=p.get("c_migration_ns", 20_000.0),
         )
 
 
@@ -242,6 +253,8 @@ def _xeon_preset() -> HardwareModel:
         c_thread_overhead_ns=3_000.0,
         c_para_startup_ns=5_000.0,
         c_t_min_work_ns=20_000.0,
+        c_remote_factor=1.35,       # ~QPI-remote DRAM latency / local (2-socket)
+        c_migration_ns=20_000.0,    # warm-cache refill after a cross-socket move
     )
 
 
@@ -290,6 +303,8 @@ def _tpu_v5e_preset() -> HardwareModel:
         c_thread_overhead_ns=2_000.0,   # per-group dispatch
         c_para_startup_ns=10_000.0,     # shard_map launch + first collective
         c_t_min_work_ns=100_000.0,
+        c_remote_factor=1.6,            # ICI-neighbour HBM vs local HBM stream
+        c_migration_ns=30_000.0,        # restage shard tables on another slice
     )
 
 
@@ -305,3 +320,14 @@ PRESETS = {
 def counter_array_bytes(num_counters: int, counter_size: int = 4) -> float:
     """Eq. (11): M_counters = sizeof(counter) · |V|."""
     return float(counter_size) * float(num_counters)
+
+
+def cross_domain_cost_ns(hw: HardwareModel, base_ns: float) -> float:
+    """Cost of running a ``base_ns`` batch on a remote locality domain.
+
+    Every access streams over the domain interconnect (``c_remote_factor``)
+    and the move itself pays a one-time migration cost (``c_migration_ns``:
+    cold caches on the thief socket, restaged shard tables on a TPU slice).
+    Used by the stealing path when a thief grabs work across domains and by
+    the step cost when a session executes off its home domain."""
+    return float(base_ns) * hw.c_remote_factor + hw.c_migration_ns

@@ -58,7 +58,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 
 from .scheduler import largest_pow2_leq
 
@@ -213,7 +212,7 @@ class CostFeedback:
     def observe(
         self,
         algorithm: str,
-        mode: str | bool,
+        mode: str,
         width: int | float | None = None,
         modeled_ns: float | None = None,
         measured_ns: float | None = None,
@@ -233,21 +232,9 @@ class CostFeedback:
         observation never moves the mode scalar, and vice versa.
 
         The pre-unification positional shape ``observe(algorithm, parallel:
-        bool, modeled_ns, measured_ns)`` is detected by the boolean mode and
-        delegates with a :class:`DeprecationWarning` (one release)."""
-        if isinstance(mode, bool):
-            warnings.warn(
-                "CostFeedback.observe(algorithm, parallel: bool, modeled_ns,"
-                " measured_ns) is deprecated; call observe(algorithm, mode,"
-                " modeled_ns=..., measured_ns=...) with mode"
-                " 'parallel' | 'sequential' instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            if measured_ns is None:  # legacy positional: args shifted left
-                modeled_ns, measured_ns = width, modeled_ns
-            self._observe_mode(algorithm, mode, modeled_ns, measured_ns)
-            return
+        bool, modeled_ns, measured_ns)`` had a one-release deprecation
+        window and is now rejected outright (the boolean mode falls through
+        to the mode check below)."""
         if mode not in ("parallel", "sequential"):
             raise ValueError(f"mode must be 'parallel' or 'sequential', got {mode!r}")
         if modeled_ns is None or measured_ns is None:
@@ -256,20 +243,6 @@ class CostFeedback:
             self._observe_mode(algorithm, mode == "parallel", modeled_ns, measured_ns)
         else:
             self._observe_width(algorithm, int(width), modeled_ns, measured_ns)
-
-    def observe_width(
-        self, algorithm: str, width: int, modeled_ns: float, measured_ns: float
-    ) -> None:
-        """Deprecated alias for ``observe(algorithm, mode, width=width, ...)``
-        (one release); the mode is derived from the width."""
-        warnings.warn(
-            "CostFeedback.observe_width is deprecated; call"
-            " observe(algorithm, mode, width=..., modeled_ns=...,"
-            " measured_ns=...) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        self._observe_width(algorithm, width, modeled_ns, measured_ns)
 
     def _observe_mode(
         self, algorithm: str, parallel: bool, modeled_ns: float, measured_ns: float

@@ -9,11 +9,12 @@ topology. Query-locality systems (Q-Graph, arXiv:1805.11900; the two-level
 concurrent scheduler of arXiv:1806.00777) co-locate such queries instead;
 :class:`FusionGroup` is the analogue for this runtime.
 
-Protocol (driven by ``MultiQueryEngine.run_sessions(fuse=True)``):
+Protocol (driven by ``run_sessions(config=EngineConfig(fuse=True))``):
 
   * a session reaching an iteration boundary with a parallel-worthy plan
-    *stages* itself under ``(graph_key, algorithm)`` instead of starting its
-    own :class:`~.scheduler.ScheduleRun`; the first stager arms a flush event
+    *stages* itself under ``(graph_key, algorithm, domain)`` — the domain is
+    ``None`` on a single-domain pool — instead of starting its own
+    :class:`~.scheduler.ScheduleRun`; the first stager arms a flush event
     ``hold_ns`` later (the gang-formation rendezvous — 0 by default, which
     still catches the common case of sessions synchronized by arrival or by
     a previous fused iteration);
@@ -159,11 +160,16 @@ class FusionGroup:
         member_of: np.ndarray,
         pos_of: np.ndarray,
         bounds: ThreadBounds,
+        domain: int | None = None,
     ):
         self.members = members
         self._member_of = member_of   # [n_fused] member index per fused id
         self._pos_of = pos_of         # [n_fused] member-local position
         self.bounds = bounds
+        # locality domain of the whole gang: the rendezvous key includes the
+        # members' placement, so a gang never straddles a domain boundary and
+        # its single grant draws from one domain's share
+        self.domain = domain
         self.n_packages = int(member_of.size)
         self.packages = FusedPackages(
             order=np.arange(self.n_packages, dtype=np.int64),
@@ -177,6 +183,7 @@ class FusionGroup:
         *,
         capacity: int,
         gang_width: int | None = None,
+        domain: int | None = None,
     ) -> "FusionGroup":
         """Fuse ``(payload, prep, bounds)`` triples into one group.
 
@@ -231,6 +238,7 @@ class FusionGroup:
             np.asarray(member_of, dtype=np.int64),
             np.asarray(pos_of, dtype=np.int64),
             fused_bounds,
+            domain=domain,
         )
 
     # ------------------------------------------------------------- splitting

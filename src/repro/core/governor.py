@@ -61,11 +61,54 @@ import dataclasses
 from typing import Any, Iterable, Sequence
 
 from .scheduler import WorkerPool
+from ..graph.partition import equal_ranges
 
 #: (modeled time_ns, old_capacity, new_capacity, reason)
 ResizeEvent = tuple[float, int, int, str]
 #: (modeled time_ns, preempted session id)
 PreemptionEvent = tuple[float, Any]
+
+
+class _DomainWindow:
+    """Rolling time-weighted utilization window for one locality domain —
+    the per-domain replica of the governor's global sampling machinery
+    (incremental integral, O(1) per tick)."""
+
+    def __init__(self) -> None:
+        self.samples: collections.deque[tuple[float, int]] = collections.deque()
+        self.acc = 0.0
+        self.idx = 0
+        self.last_action_ns = -float("inf")
+
+    def observe(self, t: float, window_ns: float, timeline: Sequence[tuple[float, int]]) -> None:
+        for i in range(self.idx, len(timeline)):
+            ts, used = timeline[i]
+            if self.samples:
+                prev_t, prev_v = self.samples[-1]
+                self.acc += (ts - prev_t) * prev_v
+            self.samples.append((ts, used))
+        self.idx = len(timeline)
+        cutoff = t - window_ns
+        while len(self.samples) >= 2 and self.samples[1][0] <= cutoff:
+            t0, v0 = self.samples.popleft()
+            self.acc -= (self.samples[0][0] - t0) * v0
+
+    def utilization(self, t: float, window_ns: float, capacity: int) -> float | None:
+        samples = self.samples
+        t0 = t - window_ns
+        if capacity <= 0 or not samples or samples[0][0] > t0:
+            return None
+        head_t, head_v = samples[0]
+        last_t, last_v = samples[-1]
+        acc = self.acc - (t0 - head_t) * head_v + (t - last_t) * last_v
+        return min(acc / (window_ns * capacity), 1.0)
+
+    def restart(self, t: float) -> None:
+        last = self.samples[-1][1] if self.samples else 0
+        self.samples.clear()
+        self.acc = 0.0
+        self.samples.append((t, last))
+        self.last_action_ns = t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +181,9 @@ class CapacityGovernor:
         self._acc = 0.0
         self._timeline_idx = 0
         self._last_action_ns = -float("inf")
+        # per-locality-domain rolling windows (only populated when the engine
+        # runs a multi-domain pool and feeds per-domain timelines)
+        self._domain_windows: dict[int, _DomainWindow] = {}
 
     @property
     def preempts(self) -> bool:
@@ -154,6 +200,7 @@ class CapacityGovernor:
         self._acc = 0.0
         self._timeline_idx = 0
         self._last_action_ns = -float("inf")
+        self._domain_windows.clear()
 
     def _observe(self, t: float, utilization: Sequence[tuple[float, int]]) -> None:
         """Consume the new tail of the shared ``EngineReport.utilization``
@@ -200,15 +247,28 @@ class CapacityGovernor:
         utilization: Sequence[tuple[float, int]] = (),
         stalled: Sequence[Any] = (),
         running: Iterable[Any] = (),
+        utilization_by_domain: Sequence[Sequence[tuple[float, int]]] | None = None,
     ) -> None:
         """One governor step at modeled time ``t`` (cheap; called per event).
 
         ``utilization`` is the live ``EngineReport.utilization`` timeline,
         ``stalled`` the parked zero-grant sessions, ``running`` every session
-        state (duck-typed: ``.priority``, ``.sid``, ``.srun``)."""
+        state (duck-typed: ``.priority``, ``.sid``, ``.srun``).
+
+        ``utilization_by_domain`` (one per-domain timeline per locality
+        domain, fed by a multi-domain engine) switches capacity control to
+        per-domain mode: each domain keeps its own rolling window, cooldown
+        and ``[p_min, p_max]`` share, and resizes through
+        :meth:`WorkerPool.resize_domain` — a saturated domain grows without
+        the idle one masking it in the pool-wide mean. Preemption stays
+        global (a fence serves whichever domain the needy session waits on).
+        Single-domain pools never take this path."""
         self._observe(t, utilization)
         if self.config.preempt:
             self._maybe_preempt(t, pool, stalled, running)
+        if utilization_by_domain is not None and getattr(pool, "domains", 1) > 1:
+            self._tick_domains(t, pool, admission, utilization_by_domain, stalled)
+            return
         if t - self._last_action_ns < self.config.cooldown_ns:
             return
         util = self.window_utilization(t, pool.capacity)
@@ -227,6 +287,63 @@ class CapacityGovernor:
         ):
             step = cfg.shrink_step if cfg.shrink_step is not None else max(cap // 4, 1)
             self._resize(t, pool, max(cap - step, cfg.p_min), "shrink")
+
+    def _tick_domains(
+        self,
+        t: float,
+        pool: WorkerPool,
+        admission: Any,
+        timelines: Sequence[Sequence[tuple[float, int]]],
+        stalled: Sequence[Any],
+    ) -> None:
+        """Per-domain capacity control: the global grow/shrink rule applied
+        to each domain's own utilization window and ``[p_min, p_max]`` share
+        (the config bounds split the same way the pool splits capacity).
+        Admission waiters carry no domain yet, so they count as backlog for
+        every domain — any saturated domain may grow to admit them."""
+        cfg = self.config
+        d_count = pool.domains
+        lo = equal_ranges(cfg.p_min, d_count)
+        hi = equal_ranges(cfg.p_max, d_count)
+        waiters = int(getattr(admission, "waiting_count", 0))
+        for d in range(min(d_count, len(timelines))):
+            w = self._domain_windows.setdefault(d, _DomainWindow())
+            w.observe(t, cfg.window_ns, timelines[d])
+            if t - w.last_action_ns < cfg.cooldown_ns:
+                continue
+            cap = pool.capacity_of(d)
+            util = w.utilization(t, cfg.window_ns, cap)
+            if util is None:
+                continue
+            backlog = (
+                sum(1 for s in stalled if getattr(s, "domain", None) == d) + waiters
+            )
+            p_min_d = max(int(lo[d + 1] - lo[d]), 1)
+            p_max_d = max(int(hi[d + 1] - hi[d]), 1)
+            if util >= cfg.grow_util and backlog > 0 and cap < p_max_d:
+                step = cfg.grow_step if cfg.grow_step is not None else max(cap // 2, 1)
+                self._resize_domain(t, pool, d, min(cap + step, p_max_d), "grow", w)
+            elif (
+                util <= cfg.shrink_util
+                and backlog == 0
+                and cap > p_min_d
+                and pool.shrink_debt_of(d) == 0
+            ):
+                step = (
+                    cfg.shrink_step if cfg.shrink_step is not None else max(cap // 4, 1)
+                )
+                self._resize_domain(t, pool, d, max(cap - step, p_min_d), "shrink", w)
+
+    def _resize_domain(
+        self, t: float, pool: WorkerPool, d: int, new: int, reason: str, w: _DomainWindow
+    ) -> None:
+        old_cap = pool.capacity_of(d)
+        if new == old_cap:
+            return
+        old_total = pool.capacity
+        pool.resize_domain(d, new)  # hooks fire with the global totals
+        self.resize_events.append((t, old_total, pool.capacity, f"{reason}[d={d}]"))
+        w.restart(t)
 
     def _resize(self, t: float, pool: WorkerPool, new: int, reason: str) -> None:
         old = pool.capacity

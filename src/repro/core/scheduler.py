@@ -42,6 +42,7 @@ import numpy as np
 
 from .bounds import ThreadBounds
 from .packaging import WorkPackages
+from ..graph.partition import equal_ranges
 
 
 class WorkerPool:
@@ -71,9 +72,19 @@ class WorkerPool:
     parked runs and stranded admission waiters, capacity timelines, the
     governor's own bookkeeping) observes elastic scaling through one path —
     a bare ``resize`` grow must never leave a zero-grant run parked until an
-    unrelated release happens to come along."""
+    unrelated release happens to come along.
 
-    def __init__(self, capacity: int, *, high_priority_reserve: int = 0):
+    With ``domains > 1`` the pool additionally models *locality domains*
+    (NUMA sockets, TPU slices): capacity is split across ``D`` domains and a
+    ``request(domain=d)`` can only draw from domain ``d``'s share, so the
+    per-domain invariant ``in_use_in(d) <= capacity_of(d) + shrink_debt_of(d)``
+    holds alongside the global one. ``domains=1`` (the default) takes exactly
+    the pre-domain code path — grants, reserve floors and debt arithmetic are
+    unchanged, which is what keeps single-domain runs byte-identical."""
+
+    def __init__(
+        self, capacity: int, *, high_priority_reserve: int = 0, domains: int = 1
+    ):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if not 0 <= high_priority_reserve < capacity:
@@ -87,20 +98,94 @@ class WorkerPool:
         self._outstanding = 0  # grants checked out and not yet returned
         self._lock = threading.Lock()
         self._resize_hooks: list[Callable[[int, int], None]] = []
+        self.domains = 1
+        self._dom_cap: list[int] = [self.capacity]
+        self._dom_out: list[int] = [0]
+        if domains != 1:
+            self.set_domains(domains)
 
-    def request(self, n: int, *, priority: int = 0) -> int:
-        """Grant up to n workers (at least 0); non-blocking."""
+    def set_domains(self, domains: int) -> None:
+        """Re-split the pool into ``domains`` locality domains.
+
+        Only legal while no grants are outstanding (domain attribution of
+        checked-out workers would be ambiguous). Capacity is split into
+        equal contiguous shares; a later :meth:`resize` preserves the split
+        proportionally."""
+        if domains < 1:
+            raise ValueError("domains must be >= 1")
+        with self._lock:
+            if self._outstanding:
+                raise RuntimeError(
+                    "cannot change domain layout while grants are outstanding"
+                )
+            if domains > self.capacity:
+                raise ValueError(
+                    f"domains ({domains}) cannot exceed capacity ({self.capacity})"
+                )
+            self.domains = int(domains)
+            b = equal_ranges(self.capacity, self.domains)
+            self._dom_cap = [int(b[i + 1] - b[i]) for i in range(self.domains)]
+            self._dom_out = [0] * self.domains
+
+    def request(self, n: int, *, priority: int = 0, domain: int | None = None) -> int:
+        """Grant up to n workers (at least 0); non-blocking.
+
+        ``domain`` confines the grant to one locality domain's share; with
+        ``domain=None`` and multiple domains the grant is spread greedily
+        over the freest domains (the caller does not care where the workers
+        sit — e.g. the admission probe). Single-domain pools ignore the
+        distinction entirely."""
         with self._lock:
             floor = 0 if priority >= 1 else self.high_priority_reserve
             free = self.capacity - self._outstanding
             grant = max(min(n, free - floor), 0)
-            self._outstanding += grant
-            return grant
+            if self.domains == 1:
+                self._outstanding += grant
+                self._dom_out[0] = self._outstanding
+                return grant
+            if domain is not None:
+                dom_free = self._dom_cap[domain] - self._dom_out[domain]
+                grant = max(min(grant, dom_free), 0)
+                self._dom_out[domain] += grant
+                self._outstanding += grant
+                return grant
+            # domain-agnostic request on a multi-domain pool: greedy spread
+            remaining, total = grant, 0
+            for d in sorted(
+                range(self.domains),
+                key=lambda d: self._dom_cap[d] - self._dom_out[d],
+                reverse=True,
+            ):
+                if remaining <= 0:
+                    break
+                take = max(min(remaining, self._dom_cap[d] - self._dom_out[d]), 0)
+                self._dom_out[d] += take
+                remaining -= take
+                total += take
+            self._outstanding += total
+            return total
 
-    def release(self, n: int) -> None:
-        """Return ``n`` granted workers to the pool."""
+    def release(self, n: int, *, domain: int | None = None) -> None:
+        """Return ``n`` granted workers to the pool (to ``domain``'s share
+        when given; otherwise drained from the most-loaded domains)."""
         with self._lock:
-            self._outstanding = max(self._outstanding - int(n), 0)
+            n = int(n)
+            self._outstanding = max(self._outstanding - n, 0)
+            if self.domains == 1:
+                self._dom_out[0] = self._outstanding
+                return
+            if domain is not None:
+                self._dom_out[domain] = max(self._dom_out[domain] - n, 0)
+                return
+            remaining = n
+            for d in sorted(
+                range(self.domains), key=lambda d: self._dom_out[d], reverse=True
+            ):
+                if remaining <= 0:
+                    break
+                take = min(remaining, self._dom_out[d])
+                self._dom_out[d] -= take
+                remaining -= take
 
     @property
     def available(self) -> int:
@@ -121,6 +206,38 @@ class WorkerPool:
         under load); drains to zero as the outstanding grants are released."""
         with self._lock:
             return max(self._outstanding - self.capacity, 0)
+
+    # ---------------- per-domain accessors ----------------
+
+    def capacity_of(self, domain: int) -> int:
+        """Capacity of one locality domain's share."""
+        with self._lock:
+            return self._dom_cap[domain]
+
+    def in_use_in(self, domain: int) -> int:
+        """Workers checked out of one domain's share."""
+        with self._lock:
+            return self._dom_out[domain]
+
+    def available_in(self, domain: int) -> int:
+        """Free workers in one domain's share (never negative)."""
+        with self._lock:
+            return max(self._dom_cap[domain] - self._dom_out[domain], 0)
+
+    def shrink_debt_of(self, domain: int) -> int:
+        """Per-domain analogue of :attr:`shrink_debt`."""
+        with self._lock:
+            return max(self._dom_out[domain] - self._dom_cap[domain], 0)
+
+    @property
+    def domain_capacities(self) -> tuple[int, ...]:
+        with self._lock:
+            return tuple(self._dom_cap)
+
+    @property
+    def in_use_by_domain(self) -> tuple[int, ...]:
+        with self._lock:
+            return tuple(self._dom_out)
 
     def add_resize_hook(self, hook: Callable[[int, int], None]) -> None:
         """Register ``hook(old_capacity, new_capacity)`` to run after every
@@ -150,9 +267,34 @@ class WorkerPool:
             # the *requested* reserve, so a grow restores what a previous
             # shrink took away instead of compounding the erosion
             self.high_priority_reserve = min(self._requested_reserve, self.capacity - 1)
+            if self.domains == 1:
+                self._dom_cap[0] = self.capacity
+            else:
+                # a whole-pool resize preserves the equal split; outstanding
+                # per-domain grants above the new share become per-domain debt
+                b = equal_ranges(self.capacity, self.domains)
+                self._dom_cap = [int(b[i + 1] - b[i]) for i in range(self.domains)]
         if old != self.capacity:
             for hook in list(self._resize_hooks):
                 hook(old, self.capacity)
+
+    def resize_domain(self, domain: int, new_capacity: int) -> None:
+        """Grow/shrink a single locality domain's share (the per-domain
+        governor path). The global capacity moves by the same delta; resize
+        hooks fire with the global totals so every capacity-change consumer
+        keeps observing scaling through the one path."""
+        if new_capacity < 1:
+            raise ValueError("domain capacity must be >= 1")
+        with self._lock:
+            old = self.capacity
+            delta = int(new_capacity) - self._dom_cap[domain]
+            if delta == 0:
+                return
+            self._dom_cap[domain] = int(new_capacity)
+            self.capacity += delta
+            self.high_priority_reserve = min(self._requested_reserve, self.capacity - 1)
+        for hook in list(self._resize_hooks):
+            hook(old, self.capacity)
 
 
 @dataclasses.dataclass
@@ -277,6 +419,7 @@ class ScheduleRun:
         eager_backlog: bool = False,
         order: np.ndarray | None = None,
         initial_grant: bool = True,
+        domain: int | None = None,
     ):
         self.pool = pool
         self.bounds = bounds
@@ -284,6 +427,10 @@ class ScheduleRun:
         self.priority = priority
         self.stealable = stealable
         self.eager_backlog = eager_backlog
+        # locality domain every grant of this run draws from (None = whole
+        # pool); placement decided it once per iteration, so a run never
+        # straddles a domain boundary
+        self.domain = domain
         if order is not None:
             self._order = np.asarray(order, dtype=np.int64)
         else:
@@ -304,7 +451,9 @@ class ScheduleRun:
         # consumer was just preempted to free (de-fused members re-queue
         # behind the high-priority session the fence served).
         self._granted = (
-            pool.request(self._requested, priority=priority) if initial_grant else 0
+            pool.request(self._requested, priority=priority, domain=domain)
+            if initial_grant
+            else 0
         )
         self.trace = ScheduleTrace(requested=self._requested)
 
@@ -377,7 +526,12 @@ class ScheduleRun:
         usable = largest_pow2_leq(self._granted)
         if usable < 1:
             return False
-        return largest_pow2_leq(self._granted + self.pool.available) <= usable
+        avail = (
+            self.pool.available
+            if self.domain is None
+            else self.pool.available_in(self.domain)
+        )
+        return largest_pow2_leq(self._granted + avail) <= usable
 
     @property
     def stealable_backlog(self) -> int:
@@ -456,13 +610,15 @@ class ScheduleRun:
             # until the event loop wakes us with capacity for our class
             self._preempt_pending = False
             if self._granted > 0:
-                self.pool.release(self._granted)
+                self.pool.release(self._granted, domain=self.domain)
                 self._granted = 0
             self.trace.preempted += 1
             return STALL_STEP
         # pool integrity: a step may never execute without holding a worker
         if self._granted <= 0:
-            self._granted = self.pool.request(1, priority=self.priority)
+            self._granted = self.pool.request(
+                1, priority=self.priority, domain=self.domain
+            )
             if self._granted <= 0:
                 return STALL_STEP
         if self._simple_seq or self.trace.released_early:
@@ -472,7 +628,9 @@ class ScheduleRun:
         # (or arrived) while the previous package executed.
         if self._granted < self._requested:
             self._granted += self.pool.request(
-                self._requested - self._granted, priority=self.priority
+                self._requested - self._granted,
+                priority=self.priority,
+                domain=self.domain,
             )
         usable = largest_pow2_leq(self._granted)
         if usable >= max(self.bounds.t_min, 2):
@@ -486,7 +644,7 @@ class ScheduleRun:
             # ``grinding`` and thieves treat it as full-width again.
             self._seq_done = 0
             if self._granted > usable:
-                self.pool.release(self._granted - usable)
+                self.pool.release(self._granted - usable, domain=self.domain)
                 self._granted = usable
             end = min(self._cursor + usable, self._fence) if self.stealable else self._fence
             batch = self._order[self._cursor : end]
@@ -504,7 +662,7 @@ class ScheduleRun:
         # give up on parallelism: release all but one worker and finish the
         # whole task sequentially (§4.3 last step)
         if self._granted > 1:
-            self.pool.release(self._granted - 1)
+            self.pool.release(self._granted - 1, domain=self.domain)
             self._granted = 1
         self.trace.released_early = True
         return self._seq_tail()
@@ -512,7 +670,7 @@ class ScheduleRun:
     def close(self) -> None:
         """Return the held grant to the pool (idempotent)."""
         if not self._closed:
-            self.pool.release(self._granted)
+            self.pool.release(self._granted, domain=self.domain)
             self._granted = 0
             self._closed = True
         self._preempt_pending = False  # a closed run can honor no fence
@@ -541,12 +699,14 @@ class PackageScheduler:
         eager_backlog: bool = False,
         order: np.ndarray | None = None,
         initial_grant: bool = True,
+        domain: int | None = None,
     ) -> ScheduleRun:
         """Start a stepwise run (requests the initial grant now unless
         ``initial_grant=False``, which starts it parked). ``order``
         restricts/overrides the dispatched package ids (fused gangs, residual
         runs of de-fused members); ``eager_backlog`` loosens the steal fence
-        for runs carrying several sessions' packages."""
+        for runs carrying several sessions' packages; ``domain`` pins every
+        grant of the run to one locality domain."""
         return ScheduleRun(
             self.pool,
             packages,
@@ -557,6 +717,7 @@ class PackageScheduler:
             eager_backlog=eager_backlog,
             order=order,
             initial_grant=initial_grant,
+            domain=domain,
         )
 
     def run(

@@ -30,7 +30,8 @@ session streams, per-query priority levels honoured by
 ``WorkerPool.request``, and an :class:`EngineReport` with latency
 percentiles and a pool-utilization timeline.
 
-``run_sessions(fuse=True)`` adds gang fusion (``core.fusion``): sessions
+``run_sessions(config=EngineConfig(fuse=True))`` adds gang fusion
+(``core.fusion``): sessions
 running the same algorithm on the same graph rendezvous at iteration
 boundaries and — when their summed ``T_max`` exceeds the pool capacity —
 merge their next iterations into one fused ``ScheduleRun`` whose trace is
@@ -43,7 +44,6 @@ import collections
 import dataclasses
 import heapq
 import time
-import warnings
 from typing import TYPE_CHECKING, Any, Callable, Protocol, Sequence
 
 import numpy as np
@@ -53,7 +53,7 @@ from .backends import ExecutionBackend, resolve_backend
 from .bounds import ThreadBounds
 from .config import EngineConfig
 from .feedback import CostFeedback
-from .contention import HardwareModel
+from .contention import HardwareModel, cross_domain_cost_ns
 from .cost_model import iteration_cost_ns
 from .descriptors import AlgorithmDescriptor
 from .fusion import (
@@ -77,6 +77,7 @@ from .scheduler import (
 )
 from .stealing import StealRegistry, graph_identity
 from .timeline import step_integral, step_mean
+from ..graph.partition import GraphPartition
 
 if TYPE_CHECKING:  # pragma: no cover - annotation-only import (no cycle)
     from .governor import CapacityGovernor
@@ -85,10 +86,6 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only import (no cycle)
 # that the victim's own grant re-evaluation keeps mattering, large enough to
 # amortize the claim
 STEAL_CHUNK = 4
-
-# distinguishes "caller did not pass the deprecated keyword" from every real
-# value (None, False, ... are all meaningful) in run_sessions' shim
-_UNSET: Any = object()
 
 
 class QueryExecutor(Protocol):
@@ -196,6 +193,19 @@ class EngineReport:
     fusion_events: list[tuple[float, int, int, int]] = dataclasses.field(
         default_factory=list
     )
+    # locality domains the pool was split into for this run (1 → the
+    # pre-domain engine: no partition built, no domain key anywhere)
+    domains: int = 1
+    # per-domain (modeled time_ns, workers in use) timelines — one list per
+    # domain, populated only when ``domains > 1`` (the governor's per-domain
+    # resize decisions read these)
+    utilization_by_domain: list[list[tuple[float, int]]] = dataclasses.field(
+        default_factory=list
+    )
+    # steals whose thief and victim sat on different locality domains (each
+    # paid the cross-domain remote factor + migration cost when the run's
+    # ``migration_penalty`` was on)
+    cross_domain_steals: int = 0
 
     @property
     def total_edges(self) -> float:
@@ -353,6 +363,24 @@ class EngineReport:
         if self.makespan_modeled_ns <= 0:
             return 0.0
         return self.total_stolen / (self.makespan_modeled_ns * 1e-9)
+
+    # -------------------------------------------------- locality domains
+    def cross_domain_steal_fraction(self) -> float:
+        """Share of steal events that crossed a domain boundary (0.0 on
+        steal-less or single-domain runs)."""
+        if not self.steal_events:
+            return 0.0
+        return self.cross_domain_steals / len(self.steal_events)
+
+    def mean_utilization_by_domain(self) -> list[float]:
+        """Time-weighted mean busy workers per domain (empty for D=1)."""
+        out: list[float] = []
+        for line in self.utilization_by_domain:
+            if len(line) < 2 or line[-1][0] <= line[0][0]:
+                out.append(0.0)
+            else:
+                out.append(step_mean(line, line[0][0], line[-1][0]))
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -536,6 +564,19 @@ class _SessionState:
     fusion: "FusionGroup | None" = None
     fused_member: "FusionMember | None" = None
     pending_shares: list = dataclasses.field(default_factory=list)
+    # locality domains (multi-domain runs only; all None/1.0 when
+    # domains == 1): ``domain`` is where this session's grants come from
+    # this iteration, ``home_domain`` is where its frontier's degree mass
+    # concentrates most; ``remote_factor`` scales every step of the
+    # iteration by the interconnect cost of the mass sitting *outside* the
+    # placed domain (1.0 ≤ factor ≤ c_remote_factor — locality placement
+    # minimizes it, blind placement pays it); ``pending_migration_ns`` is
+    # the one-time migration cost charged to the first step after a
+    # placement move
+    domain: int | None = None
+    home_domain: int | None = None
+    remote_factor: float = 1.0
+    pending_migration_ns: float = 0.0
 
 
 @dataclasses.dataclass
@@ -558,6 +599,9 @@ class _StealJob:
     # books the shares when the batch returns
     shares: list | None = None
     group: "FusionGroup | None" = None
+    # locality domain the thief's workers were requested from (None on
+    # single-domain runs); the completion release must return them there
+    domain: int | None = None
 
 
 class MultiQueryEngine:
@@ -669,13 +713,19 @@ class MultiQueryEngine:
         fsize: int,
         fdeg: np.ndarray | None,
         unvisited: float,
+        partition: GraphPartition | None = None,
+        frontier_vertices: np.ndarray | None = None,
     ) -> PreparedIteration:
         """Preparation step; topology-centric algorithms prepare once (§4.5).
 
         With width feedback active, the preparation consults the measured
         (algorithm, width) correction table, so the plan accounts for the
         widths thief gangs, fused gangs and post-preemption resumes actually
-        delivered in earlier iterations."""
+        delivered in earlier iterations. On a multi-domain run ``partition``
+        (+ optional ``frontier_vertices``) makes preparation the placement
+        decision point too: the plan carries the frontier's per-domain
+        degree mass, computed from the same sampled statistics that drive
+        packaging."""
         if prev is not None and executor.desc.kind != "data_driven":
             return prev
         return prepare_iteration(
@@ -687,6 +737,8 @@ class MultiQueryEngine:
             unvisited=unvisited,
             p=self.pool.capacity,
             feedback=self.feedback if self._width_fb_on else None,
+            partition=partition,
+            frontier_vertices=frontier_vertices,
         )
 
     def _execute_step(
@@ -695,17 +747,25 @@ class MultiQueryEngine:
         prep: PreparedIteration,
         step: ScheduleStep,
         modeled_ns: float = 0.0,
+        shard: Any = None,
     ) -> float:
         """Dispatch one schedule step through the execution backend; returns
         the backend's measured ns.
 
-        ``prepare`` runs (memoized per (executor, prep)) *before* the
+        ``prepare`` runs (memoized per (executor, prep, shard)) *before* the
         measured window — backend staging and jit warm-up never pollute the
         first step's measurement, so the width-feedback EWMA only ever sees
         steady-state execution time. ``modeled_ns`` is the step's modeled
         cost, passed through for substrates (ModeledBackend) that echo it
-        instead of measuring."""
-        plan = self.backend.prepare(executor, prep)
+        instead of measuring. ``shard`` (multi-domain runs) is the placed
+        domain's :class:`~..graph.partition.GraphShard`: substrates that
+        stage per-shard device tables (PallasBackend) dispatch against the
+        shard-local slices; the two-argument call is kept for duck-typed
+        backends that predate the shard axis."""
+        if shard is not None:
+            plan = self.backend.prepare(executor, prep, shard)
+        else:
+            plan = self.backend.prepare(executor, prep)
         return float(self.backend.execute(plan, step, modeled_ns=modeled_ns))
 
     def _step_cost_ns(
@@ -807,26 +867,16 @@ class MultiQueryEngine:
         sessions: int,
         queries_per_session: int,
         config: EngineConfig | None = None,
-        priorities: Sequence[int] | Callable[[int], int] | None = _UNSET,
-        arrivals: PoissonArrivals | Sequence[float] | None = _UNSET,
-        steal: bool = _UNSET,
-        governor: "CapacityGovernor | None" = _UNSET,
-        fuse: bool = _UNSET,
-        fusion: FusionConfig | None = _UNSET,
-        width_feedback: bool | None = _UNSET,
     ) -> EngineReport:
         """Run ``sessions`` concurrent sessions of repeated queries.
 
         The run's workload shape and engine features are described by one
-        :class:`~.config.EngineConfig` value (``config=``); the individual
-        keywords (``priorities``, ``arrivals``, ``steal``, ``governor``,
-        ``fuse``, ``fusion``, ``width_feedback``) are a deprecated
-        compatibility shim — they still work for one release, emit a
-        :class:`DeprecationWarning`, and cannot be mixed with ``config``.
-        ``config.backend`` additionally overrides the engine's execution
-        substrate for this run only (see :mod:`~.backends`); every schedule
-        step — plain, fused, stolen — dispatches through it, and its
-        measured times flow into the feedback plumbing.
+        :class:`~.config.EngineConfig` value (``config=``); ``None`` is the
+        bare engine (``EngineConfig()``). ``config.backend`` additionally
+        overrides the engine's execution substrate for this run only (see
+        :mod:`~.backends`); every schedule step — plain, fused, stolen —
+        dispatches through it, and its measured times flow into the
+        feedback plumbing.
 
         Discrete-event simulation on the modeled clock. Sessions arrive at
         t=0 (closed loop) or along an open-loop arrival stream; the admission
@@ -886,33 +936,24 @@ class MultiQueryEngine:
         width efficiency. ``width_feedback=False`` performs zero width-table
         calls and keeps every scheduling decision byte-identical to the
         width-feedback-less engine (the fig10–16 modeled rows are
-        unchanged)."""
-        legacy = {
-            k: v
-            for k, v in (
-                ("priorities", priorities),
-                ("arrivals", arrivals),
-                ("steal", steal),
-                ("governor", governor),
-                ("fuse", fuse),
-                ("fusion", fusion),
-                ("width_feedback", width_feedback),
-            )
-            if v is not _UNSET
-        }
-        if legacy:
-            if config is not None:
-                raise ValueError(
-                    "pass either config=EngineConfig(...) or the deprecated"
-                    f" keyword(s) {sorted(legacy)}, not both"
-                )
-            warnings.warn(
-                f"run_sessions keyword(s) {sorted(legacy)} are deprecated;"
-                " pass config=EngineConfig(...) instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            config = EngineConfig(**legacy)
+        unchanged).
+
+        ``config.domains > 1`` splits the pool into locality domains (NUMA
+        sockets, TPU slices): each session's graph is partitioned once into
+        ``domains`` contiguous degree-balanced shards, every iteration is
+        placed on a domain at preparation time (``placement="locality"``
+        follows the frontier's per-domain degree mass and re-evaluates when
+        the frontier drifts; ``"round_robin"`` is the locality-blind
+        control), grants come from the placed domain's capacity slice,
+        thieves prefer same-domain victims, gangs never straddle a domain
+        boundary (the rendezvous key carries the domain), a governor resizes
+        per-domain from per-domain utilization timelines, and — with
+        ``migration_penalty`` on — off-home steps pay the contention model's
+        remote factor while placement moves and cross-domain steals pay the
+        one-time migration cost. ``domains=1`` (the default) performs zero
+        partition/domain calls and keeps every scheduling decision
+        byte-identical to the pre-domain engine (the fig10–18 modeled rows
+        are unchanged)."""
         cfg = config if config is not None else EngineConfig()
         priorities = cfg.priorities
         arrivals = cfg.arrivals
@@ -921,6 +962,9 @@ class MultiQueryEngine:
         fuse = bool(cfg.fuse)
         fusion = cfg.fusion
         width_feedback = cfg.width_feedback
+        domains = int(cfg.domains)
+        placement = cfg.placement
+        migration_penalty = bool(cfg.migration_penalty)
 
         if priorities is None:
             prio = [0] * sessions
@@ -946,6 +990,35 @@ class MultiQueryEngine:
         prev_backend = self.backend
         if cfg.backend is not None:
             self.backend = resolve_backend(cfg.backend)
+        # locality domains: split the pool for this run only (restored in the
+        # teardown — set_domains requires zero outstanding grants, which the
+        # cleanup loop guarantees). ``domains == 1`` leaves the pool alone.
+        prev_domains = self.pool.domains
+        if domains != prev_domains:
+            self.pool.set_domains(domains)
+        # one GraphPartition per distinct graph (lazy, keyed by the stable
+        # graph identity — two sessions loading the same dataset into
+        # distinct objects share one partition); ``None`` marks a graph whose
+        # executor exposes no ``.graph`` (placement falls back to round-robin
+        # for its sessions)
+        partitions: dict[Any, GraphPartition | None] = {}
+
+        def _partition_for(st: _SessionState) -> GraphPartition | None:
+            if domains == 1 or st.graph_key is None:
+                return None
+            if st.graph_key not in partitions:
+                g = getattr(st.executor, "graph", None)
+                partitions[st.graph_key] = (
+                    GraphPartition.build(g, domains) if g is not None else None
+                )
+            return partitions[st.graph_key]
+
+        def _shard_for(st: _SessionState):
+            """The placed domain's shard (backend dispatch target), if any."""
+            if st.domain is None:
+                return None
+            part = partitions.get(st.graph_key)
+            return part.shards[st.domain] if part is not None else None
 
         records: list[QueryRecord] = []
         report = EngineReport(
@@ -954,8 +1027,11 @@ class MultiQueryEngine:
             makespan_measured_ns=0.0,
             pool_capacity=self.pool.capacity,
             admission_cap=self.admission.cap(self.pool),
+            domains=domains,
         )
         report.capacity_timeline.append((0.0, self.pool.capacity))
+        if domains > 1:
+            report.utilization_by_domain = [[] for _ in range(domains)]
         if governor is not None:
             governor.reset()
         t_start = time.perf_counter_ns()
@@ -1007,6 +1083,14 @@ class MultiQueryEngine:
             u = self.pool.in_use
             if not report.utilization or report.utilization[-1][1] != u:
                 report.utilization.append((t, u))
+            if domains > 1 and self.pool.domains == domains:
+                # (the second check skips the closing sample taken after the
+                # teardown already restored the pool's previous domain split)
+                by = self.pool.in_use_by_domain
+                for d in range(domains):
+                    line = report.utilization_by_domain[d]
+                    if not line or line[-1][1] != by[d]:
+                        line.append((t, by[d]))
 
         def _sample_inflight(t: float) -> None:
             n = self.admission.inflight
@@ -1027,7 +1111,13 @@ class MultiQueryEngine:
             still: list[_SessionState] = []
             for s in sorted(stalled, key=lambda s: -s.priority):
                 floor = 0 if s.priority >= 1 else self.pool.high_priority_reserve
-                if avail > floor:
+                ok = avail > floor
+                if ok and domains > 1 and s.domain is not None:
+                    # a parked multi-domain run re-requests from its placed
+                    # domain: waking it against global availability alone
+                    # would spin it through a zero-grant stall
+                    ok = self.pool.available_in(s.domain) > 0
+                if ok:
                     _push(t, EV_STEP, s)
                 else:
                     still.append(s)
@@ -1093,6 +1183,64 @@ class MultiQueryEngine:
                 st.record.finished_ns = t
             st.executor = None
 
+        def _place(st: _SessionState) -> None:
+            """Placement decision point (multi-domain only): pin the
+            session's next iteration to a domain.
+
+            ``locality`` follows the plan's per-domain degree mass — argmax,
+            with near-ties (≥ 98% of the max) broken toward the least-loaded
+            domain so whole-graph topology sessions spread instead of piling
+            onto shard 0 — and re-evaluates every preparation, i.e. exactly
+            when the frontier drifts. ``round_robin`` ignores the graph. A
+            placement *move* books the one-time migration cost against the
+            iteration's first step (the frontier state crosses the
+            interconnect once)."""
+            if domains == 1:
+                return
+            mass = st.prep.domain_mass if st.prep is not None else None
+            if mass is None or mass.size == 0 or float(mass.sum()) <= 0.0:
+                # no placement signal (no ``.graph`` on the executor, empty
+                # frontier): fall back to round-robin and call it home
+                new_dom = st.sid % domains
+                st.home_domain = new_dom
+                st.remote_factor = 1.0
+            else:
+                # "home" is any domain holding a near-maximal share of the
+                # frontier's degree mass (≥ 98% of the best) — on a
+                # degree-balanced partition a whole-graph frontier makes
+                # every domain home, and placement only matters when the
+                # frontier genuinely concentrates
+                best = float(mass.max())
+                cands = [d for d in range(domains) if mass[d] >= 0.98 * best]
+                if placement == "round_robin":
+                    new_dom = st.sid % domains
+                elif st.domain is not None and float(mass[st.domain]) >= 0.5 * best:
+                    # movement hysteresis: a placement move costs a real
+                    # migration, so the frontier must drift *materially* —
+                    # the placed domain's share decaying below half the best
+                    # — before the session follows it (chasing every argmax
+                    # flip of a wandering frontier churns migrations faster
+                    # than the remote factor it saves)
+                    new_dom = st.domain
+                else:
+                    new_dom = min(cands, key=lambda d: (self.pool.in_use_in(d), d))
+                st.home_domain = new_dom if new_dom in cands else int(np.argmax(mass))
+                # the interconnect cost is proportional to the degree mass
+                # sitting *outside* the placed domain: a step streams that
+                # fraction remotely. A concentrated frontier placed on its
+                # shard pays ~1.0; placed blindly it pays ~c_remote_factor;
+                # a uniform whole-graph frontier pays the same everywhere
+                # (placement genuinely does not matter there)
+                remote_share = 1.0 - float(mass[new_dom]) / float(mass.sum())
+                st.remote_factor = (
+                    1.0 + (self.hw.c_remote_factor - 1.0) * remote_share
+                    if migration_penalty
+                    else 1.0
+                )
+            if st.domain is not None and new_dom != st.domain and migration_penalty:
+                st.pending_migration_ns = self.hw.c_migration_ns
+            st.domain = new_dom
+
         def _try_steal(thief: _SessionState, t: float) -> bool:
             """Claim a batch from the best victim and start executing it.
             Returns True when a steal job was launched (EV_STEAL pushed).
@@ -1104,7 +1252,10 @@ class MultiQueryEngine:
             tried: set = set()
             while True:
                 entry = registry.pick_victim(
-                    thief_key=thief.sid, graph_key=thief.graph_key, exclude=tried
+                    thief_key=thief.sid,
+                    graph_key=thief.graph_key,
+                    exclude=tried,
+                    domain=thief.domain,
                 )
                 if entry is None:
                     return False
@@ -1140,14 +1291,15 @@ class MultiQueryEngine:
                 got = self.pool.request(
                     want,
                     priority=max(thief.priority, entry.priority),
+                    domain=thief.domain,
                 )
                 usable = largest_pow2_leq(got)
                 if usable < 1:
                     if got:
-                        self.pool.release(got)
+                        self.pool.release(got, domain=thief.domain)
                     continue
                 if got > usable:
-                    self.pool.release(got - usable)
+                    self.pool.release(got - usable, domain=thief.domain)
                 # a grinding victim moves at 1-wide, so take a few packages
                 # per thief worker; a width-capped parallel victim still
                 # moves at T_max, so take only one per worker to stay
@@ -1155,10 +1307,20 @@ class MultiQueryEngine:
                 chunk = usable * (STEAL_CHUNK if entry.run.grinding else 1)
                 batch = entry.run.donate(chunk, workers=usable)
                 if batch.size == 0:
-                    self.pool.release(usable)
+                    self.pool.release(usable, domain=thief.domain)
                     continue
                 break
             mode = "parallel" if usable >= 2 else "sequential"
+            # a cross-domain steal executes the victim's packages on workers
+            # of another domain: the batch streams over the interconnect
+            # (remote factor) and the claim itself migrates once
+            cross = (
+                thief.domain is not None
+                and entry.domain is not None
+                and entry.domain != thief.domain
+            )
+            if cross:
+                report.cross_domain_steals += 1
             if entry.fused:
                 # fused victim: the claimed ids are fused slots — split them
                 # back per member, run each member's share through its own
@@ -1167,6 +1329,14 @@ class MultiQueryEngine:
                 group = victim.fusion
                 assert group is not None
                 shares, step_ns = _execute_fused_batch(group, batch, mode, usable)
+                if cross and migration_penalty and step_ns > 0:
+                    # scale the batch total and every member's modeled share
+                    # pro rata, so the split-back accounting carries the
+                    # interconnect cost to the records that caused it
+                    scale = cross_domain_cost_ns(self.hw, step_ns) / step_ns
+                    step_ns *= scale
+                    for s in shares:
+                        s[3] *= scale
                 for slot, positions, local_ids, *_ in shares:
                     group.mark_donated(slot, positions, local_ids, usable)
                 thief.steal = _StealJob(
@@ -1179,11 +1349,14 @@ class MultiQueryEngine:
                     measured_ns=sum(s[4] for s in shares),
                     shares=[(s[0], s[2], s[3], s[4]) for s in shares],
                     group=group,
+                    domain=thief.domain,
                 )
             else:
                 assert victim.executor is not None and victim.prep is not None
                 step = ScheduleStep(batch, mode, usable)
                 step_ns = self._step_cost_ns(victim.executor.desc, victim.prep, step)
+                if cross and migration_penalty:
+                    step_ns = cross_domain_cost_ns(self.hw, step_ns)
                 measured = self._execute_step(
                     victim.executor, victim.prep, step, step_ns
                 )
@@ -1200,6 +1373,7 @@ class MultiQueryEngine:
                     workers=usable,
                     modeled_ns=step_ns,
                     measured_ns=measured,
+                    domain=thief.domain,
                 )
             report.steal_events.append((t, thief.sid, victim.sid, int(batch.size)))
             _sample(t)
@@ -1235,6 +1409,7 @@ class MultiQueryEngine:
                 stealable=fenced and bounds.parallel,
                 order=order,
                 initial_grant=initial_grant,
+                domain=st.domain,
             )
             if registry is not None and st.srun.stealable:
                 registry.publish(
@@ -1246,6 +1421,7 @@ class MultiQueryEngine:
                     algorithm=(
                         st.executor.desc.name if st.executor is not None else None
                     ),
+                    domain=st.domain,
                 )
             st.iter_modeled_ns = 0.0
             st.iter_measured_ns = 0.0
@@ -1274,6 +1450,9 @@ class MultiQueryEngine:
                     t_eff,
                     local_ids.size / max(slot.prep.packages.n_packages, 1),
                 )
+                # each member drags its own off-domain mass over the
+                # interconnect even inside a gang (1.0 on single-domain runs)
+                work_ns *= slot.payload.remote_factor
                 shares.append([slot, positions, local_ids, work_ns, 0.0])
                 total += work_ns
             ov = gang_overhead_ns(self.hw, t_eff, int(batch.size), group.n_packages)
@@ -1313,6 +1492,13 @@ class MultiQueryEngine:
             """Fuse the staged chunk into one gang and start its driver."""
             nonlocal driver_sid
             staged_triples = [(s, s.prep, b) for s, b in chunk]
+            # the rendezvous key carries the members' shared domain (None on
+            # single-domain runs): the gang is sized against — and its grants
+            # drawn from — that domain's capacity slice, never the whole pool
+            dom = key[2]
+            gang_cap = (
+                self.pool.capacity_of(dom) if dom is not None else self.pool.capacity
+            )
             gang_width = None
             if self._width_fb_on:
                 # measured-width planning: one thread_bounds call on the
@@ -1323,11 +1509,14 @@ class MultiQueryEngine:
                     staged_triples,
                     chunk[0][0].executor.desc,
                     self.hw,
-                    capacity=self.pool.capacity,
+                    capacity=gang_cap,
                     feedback=self.feedback,
                 )
             group = FusionGroup.build(
-                staged_triples, capacity=self.pool.capacity, gang_width=gang_width
+                staged_triples,
+                capacity=gang_cap,
+                gang_width=gang_width,
+                domain=dom,
             )
             driver_sid -= 1
             driver = _SessionState(
@@ -1335,6 +1524,7 @@ class MultiQueryEngine:
             )
             driver.fusion = group
             driver.graph_key = key[0]
+            driver.domain = dom
             for slot in group.members:
                 slot.payload.fused_member = slot
             scheduler = PackageScheduler(
@@ -1348,7 +1538,11 @@ class MultiQueryEngine:
             # eagerly: workers the gang's power-of-2 rounding cannot absorb
             # are better spent on a thief's second gang
             driver.srun = scheduler.begin(
-                group.packages, group.bounds, stealable=True, eager_backlog=True
+                group.packages,
+                group.bounds,
+                stealable=True,
+                eager_backlog=True,
+                domain=dom,
             )
             if registry is not None:
                 registry.publish(
@@ -1359,6 +1553,7 @@ class MultiQueryEngine:
                     payload=driver,
                     fused=True,
                     algorithm=chunk[0][0].executor.desc.name,
+                    domain=dom,
                 )
             drivers.append(driver)
             _sync_running()
@@ -1377,6 +1572,13 @@ class MultiQueryEngine:
             if not staged:
                 return
             assert fusing is not None
+            # contention is judged against the staging domain's capacity
+            # slice — the resource the would-be gang actually contends for
+            flush_cap = (
+                self.pool.capacity_of(key[2])
+                if key[2] is not None
+                else self.pool.capacity
+            )
             solo: list[tuple[_SessionState, ThreadBounds]] = []
             while len(staged) >= 2:
                 chunk, staged = (
@@ -1384,7 +1586,7 @@ class MultiQueryEngine:
                     staged[fusing.max_members :],
                 )
                 if should_fuse(
-                    [(s, s.prep, b) for s, b in chunk], capacity=self.pool.capacity
+                    [(s, s.prep, b) for s, b in chunk], capacity=flush_cap
                 ):
                     _launch_group(key, chunk, t)
                 else:
@@ -1512,6 +1714,9 @@ class MultiQueryEngine:
                         utilization=report.utilization,
                         stalled=stalled,
                         running=running_view,
+                        utilization_by_domain=(
+                            report.utilization_by_domain if domains > 1 else None
+                        ),
                     )
 
                 if kind == EV_GOV:
@@ -1556,7 +1761,7 @@ class MultiQueryEngine:
                             rec = slot.payload.record
                             if rec is not None:
                                 rec.stolen_packages += int(local_ids.size)
-                        self.pool.release(job.workers)
+                        self.pool.release(job.workers, domain=job.domain)
                         _sample(t)
                         for slot, *_ in job.shares:
                             if slot.finished:
@@ -1590,7 +1795,7 @@ class MultiQueryEngine:
                     victim.iter_measured_ns += job.measured_ns
                     if job.record is not None:
                         job.record.stolen_packages += int(job.batch.size)
-                    self.pool.release(job.workers)
+                    self.pool.release(job.workers, domain=job.domain)
                     _sample(t)
                     if victim.joining and job.run.outstanding_donations == 0:
                         victim.joining = False
@@ -1660,6 +1865,17 @@ class MultiQueryEngine:
                     assert rec is not None
                     if rec.started_ns == 0.0 and rec.iterations == 0:
                         rec.started_ns = t
+                    # multi-domain: preparation doubles as the placement
+                    # decision point — the partition hands the plan its
+                    # per-domain degree mass, from the exact frontier when
+                    # the executor exposes one (data-driven), or the static
+                    # degree mass (topology-centric whole-graph frontiers)
+                    part = _partition_for(st)
+                    fvert = None
+                    if part is not None:
+                        fv_fn = getattr(ex, "frontier_vertices", None)
+                        if callable(fv_fn):
+                            fvert = fv_fn()
                     if (
                         fusing is not None
                         and st.prep is None
@@ -1706,11 +1922,28 @@ class MultiQueryEngine:
                         )
                         cached = prep_cache.get(ck)
                         if cached is None or cached[0] != ver:
-                            cached = (ver, self._prepare(ex, None, fsize, fdeg, unvisited))
+                            # topology-centric plans carry the partition's
+                            # *static* degree mass — identical per graph, so
+                            # the shared cache stays valid across sessions
+                            cached = (
+                                ver,
+                                self._prepare(
+                                    ex, None, fsize, fdeg, unvisited, partition=part
+                                ),
+                            )
                             prep_cache[ck] = cached
                         st.prep = cached[1]
                     else:
-                        st.prep = self._prepare(ex, st.prep, fsize, fdeg, unvisited)
+                        st.prep = self._prepare(
+                            ex,
+                            st.prep,
+                            fsize,
+                            fdeg,
+                            unvisited,
+                            partition=part,
+                            frontier_vertices=fvert,
+                        )
+                    _place(st)
                     bounds = self._decide(st.prep)
                     if (
                         fusing is not None
@@ -1721,7 +1954,12 @@ class MultiQueryEngine:
                         # (graph, algorithm) key; the first stager arms the
                         # flush that decides fuse-vs-solo for everyone who
                         # reached a boundary within the hold window
-                        fkey = (st.graph_key, ex.desc.name)
+                        # the rendezvous key carries the placed domain: a
+                        # gang's members share one grant and one interleaved
+                        # package table, so a gang must never straddle a
+                        # domain boundary (``None`` on single-domain runs —
+                        # the key degenerates to the old (graph, algorithm))
+                        fkey = (st.graph_key, ex.desc.name, st.domain)
                         waiting = fusion_staged.setdefault(fkey, [])
                         if not waiting:
                             _push(t + fusing.hold_ns, EV_FUSE, fkey)
@@ -1784,7 +2022,18 @@ class MultiQueryEngine:
 
                 assert st.executor is not None and st.prep is not None
                 step_ns = self._step_cost_ns(st.executor.desc, st.prep, step)
-                step_measured = self._execute_step(st.executor, st.prep, step, step_ns)
+                if st.remote_factor != 1.0:
+                    # off-domain degree mass streams over the interconnect on
+                    # every step — locality-blind placement pays close to the
+                    # full remote factor on concentrated frontiers, locality
+                    # placement close to nothing
+                    step_ns *= st.remote_factor
+                if st.pending_migration_ns:
+                    step_ns += st.pending_migration_ns
+                    st.pending_migration_ns = 0.0
+                step_measured = self._execute_step(
+                    st.executor, st.prep, step, step_ns, shard=_shard_for(st)
+                )
                 st.iter_measured_ns += step_measured
                 st.iter_modeled_ns += step_ns
                 # plain schedule steps (including post-preemption residual
@@ -1820,13 +2069,18 @@ class MultiQueryEngine:
                     s.srun.close()
                     s.srun = None
                 if s.steal is not None:
-                    self.pool.release(s.steal.workers)
+                    self.pool.release(s.steal.workers, domain=s.steal.domain)
                     s.steal = None
                 s.fusion = None
                 s.fused_member = None
             drivers.clear()
             fusion_staged.clear()
             self.admission.reset()
+            # the domain split is per-run state on the shared pool; restore
+            # it last — every grant is released by now, which set_domains
+            # requires
+            if self.pool.domains != prev_domains:
+                self.pool.set_domains(prev_domains)
 
         if governor is not None:
             report.resize_events = list(governor.resize_events)

@@ -92,6 +92,10 @@ class StealEntry:
     # algorithm name of the victim's query (gang members share one): the key
     # thieves use to look up measured width efficiency when sizing their gang
     algorithm: str | None = None
+    # locality domain the victim's run is placed on (None = single-domain
+    # pool); thieves prefer same-domain victims and pay the contention
+    # model's migration penalty when they reach across
+    domain: int | None = None
 
     @property
     def backlog(self) -> int:
@@ -120,6 +124,7 @@ class StealRegistry:
         payload: Any = None,
         fused: bool = False,
         algorithm: str | None = None,
+        domain: int | None = None,
     ) -> StealEntry:
         """Register ``run`` as a claimable victim under ``key`` (replacing
         any previous entry for that key); returns the live entry."""
@@ -131,6 +136,7 @@ class StealRegistry:
             payload=payload,
             fused=fused,
             algorithm=algorithm,
+            domain=domain,
         )
         self._entries[key] = entry
         return entry
@@ -204,13 +210,17 @@ class StealRegistry:
         graph_key: Hashable = None,
         min_backlog: int = 1,
         exclude: "set[Hashable] | None" = None,
+        domain: int | None = None,
     ) -> StealEntry | None:
-        """Rank victims: same-graph first (locality), then priority (help the
-        latency-sensitive query first), then the most backlogged. Returns
-        ``None`` when nothing claimable is published. ``exclude`` skips keys
-        a thief already tried and found unusable this round."""
+        """Rank victims: same-domain first (a cross-domain claim pays the
+        contention model's migration penalty), then same-graph (locality),
+        then priority (help the latency-sensitive query first), then the
+        most backlogged. A thief with ``domain=None`` (single-domain pool)
+        ranks exactly as before domains existed. Returns ``None`` when
+        nothing claimable is published. ``exclude`` skips keys a thief
+        already tried and found unusable this round."""
         best: StealEntry | None = None
-        best_rank: tuple[bool, int, int] | None = None
+        best_rank: tuple[bool, bool, int, int] | None = None
         for e in self._entries.values():
             if e.key == thief_key or (exclude is not None and e.key in exclude):
                 continue
@@ -218,6 +228,7 @@ class StealRegistry:
             if backlog < min_backlog:
                 continue
             rank = (
+                domain is not None and e.domain == domain,
                 graph_key is not None and e.graph_key == graph_key,
                 e.priority,
                 backlog,

@@ -1,13 +1,21 @@
 from .structure import CSRGraph, Graph, GraphStats, build_graph, pad_edges
-from .rmat import rmat_edges, rmat_graph, uniform_random_graph, grid_graph
+from .rmat import (
+    clustered_graph,
+    grid_graph,
+    rmat_edges,
+    rmat_graph,
+    uniform_random_graph,
+)
 from .datasets import load_dataset, all_dataset_names, SNAP_SPECS
 from .sampler import sample_fanout, plan_capacity, SampledBlock, block_to_device
 from . import partition
+from .partition import GraphPartition, GraphShard, partition_graph
 
 __all__ = [
     "CSRGraph", "Graph", "GraphStats", "build_graph", "pad_edges",
     "rmat_edges", "rmat_graph", "uniform_random_graph", "grid_graph",
+    "clustered_graph",
     "load_dataset", "all_dataset_names", "SNAP_SPECS",
     "sample_fanout", "plan_capacity", "SampledBlock", "block_to_device",
-    "partition",
+    "partition", "GraphPartition", "GraphShard", "partition_graph",
 ]

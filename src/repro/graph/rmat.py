@@ -58,6 +58,48 @@ def uniform_random_graph(n_vertices: int, n_edges: int, *, seed: int = 0, name: 
     return build_graph(src, dst, n_vertices, name=name)
 
 
+def clustered_graph(
+    scale: int,
+    clusters: int,
+    edge_factor: int = 16,
+    *,
+    seed: int = 0,
+    cross_fraction: float = 0.02,
+    name: str | None = None,
+) -> Graph:
+    """Block-structured graph: ``clusters`` contiguous RMAT communities of
+    ``2**scale`` vertices each, plus a ``cross_fraction`` share of uniform
+    cross-community edges.
+
+    Community ``k`` owns the contiguous vertex range
+    ``[k * 2**scale, (k+1) * 2**scale)``, so a contiguous degree-balanced
+    partition (graph.partition) recovers the communities almost exactly —
+    the natural stress case for locality domains: a traversal seeded inside
+    one community keeps its frontier's degree mass on one shard, and
+    placement either exploits that or pays the interconnect."""
+    block = 1 << scale
+    n_vertices = clusters * block
+    srcs, dsts = [], []
+    for k in range(clusters):
+        s, d = rmat_edges(scale, edge_factor, seed=seed + k)
+        srcs.append(s + k * block)
+        dsts.append(d + k * block)
+    n_cross = int(cross_fraction * clusters * block * edge_factor)
+    if n_cross > 0:
+        rng = np.random.default_rng(seed + 7919)
+        srcs.append(rng.integers(0, n_vertices, size=n_cross, dtype=np.int64))
+        dsts.append(rng.integers(0, n_vertices, size=n_cross, dtype=np.int64))
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    return build_graph(
+        src,
+        dst,
+        n_vertices,
+        name=name or f"clustered_sf{scale}x{clusters}",
+        surrogate=False,
+    )
+
+
 def grid_graph(side: int, *, name: str = "grid") -> Graph:
     """2-D grid / road-network-like graph: constant degree ≤ 4, long diameter."""
     n = side * side

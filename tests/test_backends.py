@@ -367,30 +367,19 @@ def test_custom_backend_instance_via_engine_config(small_rmat):
     assert eng.backend is default
 
 
-# ---------------- kwarg deprecation ----------------
+# ---------------- config-only surface ----------------
 
-def test_run_sessions_legacy_kwargs_warn_and_still_work(small_rmat):
+def test_run_sessions_rejects_legacy_kwargs(small_rmat):
+    """The PR-6 one-release keyword shim is gone: the individual feature
+    keywords are plain unknown arguments now, not a deprecation path."""
     eng = _engine()
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        rep = eng.run_sessions(
+    with pytest.raises(TypeError):
+        eng.run_sessions(
             _mixed_mk(small_rmat), sessions=2, queries_per_session=1, steal=True
         )
-    assert len(rep.records) == 2
-
-    eng2 = _engine()
-    rep2 = eng2.run_sessions(
+    # the consolidated surface is unaffected
+    rep = eng.run_sessions(
         _mixed_mk(small_rmat), sessions=2, queries_per_session=1,
         config=EngineConfig(steal=True),
     )
-    assert [r.modeled_ns for r in rep.records] == [
-        r.modeled_ns for r in rep2.records
-    ]
-
-
-def test_run_sessions_rejects_mixed_config_and_kwargs(small_rmat):
-    eng = _engine()
-    with pytest.raises(ValueError, match="config"):
-        eng.run_sessions(
-            _mixed_mk(small_rmat), sessions=2, queries_per_session=1,
-            config=EngineConfig(), steal=True,
-        )
+    assert len(rep.records) == 2

@@ -82,24 +82,23 @@ def test_predict_uses_width_when_given():
     assert fb.predict("a", True, 100.0, width=8) == pytest.approx(400.0)
 
 
-# ---------------- deprecated signatures (ISSUE 6 satellite) ----------------
+# ---------------- removed legacy signatures (post-grace-period) ----------------
 
-def test_legacy_bool_observe_warns_and_delegates():
-    """``observe(alg, True/False, modeled, measured)`` survives one release:
-    it warns and lands in the same mode-level table as the unified call."""
+def test_legacy_bool_observe_is_gone():
+    """The PR-6 one-release bool-mode shim expired: a bool is just a bad
+    mode now."""
     fb = CostFeedback(alpha=1.0)
-    with pytest.warns(DeprecationWarning, match="observe"):
-        fb.observe("a", True, 1.0, 2.0)
-    assert fb.correction("a", True) == pytest.approx(2.0)
-    with pytest.warns(DeprecationWarning):
-        fb.observe("a", False, 1.0, 0.5)
-    assert fb.correction("a", False) == pytest.approx(0.5)
+    with pytest.raises(ValueError):
+        fb.observe("a", True, modeled_ns=1.0, measured_ns=2.0)
+    with pytest.raises(ValueError):
+        fb.observe("a", False, modeled_ns=1.0, measured_ns=0.5)
 
 
-def test_legacy_observe_width_warns_and_delegates():
+def test_legacy_observe_width_is_gone():
     fb = CostFeedback(alpha=1.0)
-    with pytest.warns(DeprecationWarning, match="observe_width"):
-        fb.observe_width("a", 8, 1.0, 4.0)
+    assert not hasattr(fb, "observe_width")
+    # the unified call is the only width entry point
+    fb.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=4.0)
     assert fb.correction("a", True, width=8) == pytest.approx(4.0)
     assert fb.width_observations == 1
 

@@ -1,0 +1,113 @@
+"""Locality domains end to end: the ``domains=1`` opt-out guarantee, domain
+placement and per-domain reporting at ``domains > 1``, cross-domain steal
+accounting, pool restore after a run, and the fig19 ordering (locality-aware
+placement beats locality-blind on a clustered BFS burst)."""
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import EngineConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import clustered_graph
+
+
+BLOCK = 1 << 10
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    # four closed RMAT communities — the frontier never leaks off its shard,
+    # so placement either follows the mass or pays the remote factor
+    return clustered_graph(10, 4, seed=3, cross_fraction=0.0)
+
+
+def _mk_burst(graph):
+    """BFS-heavy mixed burst; BFS sources deliberately sit in community
+    ``(sid + 1) % 4`` so locality-blind round-robin (``sid % 4``) places
+    every traversal off its community."""
+
+    def make(sid, q):
+        if sid % 4 == 3:
+            return PageRankExecutor(graph, mode="pull", max_iters=2, tol=0)
+        src = ((sid + 1) % 4) * BLOCK + (sid * 131 + q * 17) % BLOCK
+        return BFSExecutor(graph, source=src)
+
+    return make
+
+
+def _run(graph, **cfg):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
+    return eng.run_sessions(
+        _mk_burst(graph),
+        sessions=8,
+        queries_per_session=3,
+        config=EngineConfig(steal=True, fuse=True, **cfg),
+    )
+
+
+# ---------------- config validation ----------------
+
+def test_engine_config_rejects_bad_domains():
+    with pytest.raises(ValueError):
+        EngineConfig(domains=0)
+    with pytest.raises(ValueError):
+        EngineConfig(placement="nearest")
+
+
+# ---------------- domains=1 opt-out ----------------
+
+def test_domains_one_is_the_default_engine(clustered):
+    """domains=1 must be bit-identical to not mentioning domains at all —
+    the opt-out guarantee the gated fig10–18 rows rely on."""
+    base = _run(clustered)
+    d1 = _run(clustered, domains=1, placement="round_robin", migration_penalty=False)
+    assert d1.makespan_modeled_ns == base.makespan_modeled_ns
+    assert [r.modeled_ns for r in d1.records] == [r.modeled_ns for r in base.records]
+    assert d1.domains == 1
+    assert d1.utilization_by_domain == []
+    assert d1.cross_domain_steals == 0
+
+
+# ---------------- domains>1 smoke ----------------
+
+def test_multi_domain_report_and_pool_restore(clustered):
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=16, policy="scheduler")
+    assert eng.pool.domains == 1
+    rep = eng.run_sessions(
+        _mk_burst(clustered),
+        sessions=8,
+        queries_per_session=2,
+        config=EngineConfig(steal=True, fuse=True, domains=4),
+    )
+    # the run completed every query and restored the pool's domain layout
+    assert len(rep.records) == 16
+    assert all(r.finished_ns > 0 for r in rep.records)
+    assert eng.pool.domains == 1
+    assert eng.pool.in_use == 0
+    # per-domain reporting is populated with one timeline per domain
+    assert rep.domains == 4
+    assert len(rep.utilization_by_domain) == 4
+    assert all(len(line) > 0 for line in rep.utilization_by_domain)
+    # mean busy workers per domain: every domain saw work, and the sum can
+    # never exceed the pool
+    means = rep.mean_utilization_by_domain()
+    assert len(means) == 4 and all(m > 0.0 for m in means)
+    assert sum(means) <= 16.0
+    assert 0.0 <= rep.cross_domain_steal_fraction() <= 1.0
+
+
+def test_round_robin_placement_pays_on_mismatched_sources(clustered):
+    """The tentpole ordering: on a clustered BFS burst whose sources sit off
+    the round-robin domain, locality-aware placement must beat the
+    locality-blind control, and dropping the penalty must not be slower
+    than paying it."""
+    local = _run(clustered, domains=4, placement="locality")
+    blind = _run(clustered, domains=4, placement="round_robin")
+    nopen = _run(clustered, domains=4, placement="round_robin", migration_penalty=False)
+    assert local.makespan_modeled_ns < blind.makespan_modeled_ns
+    assert nopen.makespan_modeled_ns <= blind.makespan_modeled_ns
+
+
+def test_cross_domain_steals_counted(clustered):
+    rep = _run(clustered, domains=4, placement="round_robin")
+    # steal accounting never exceeds the steal-event total
+    assert 0 <= rep.cross_domain_steals <= len(rep.steal_events)

@@ -1,0 +1,201 @@
+"""graph.partition edge cases: zero-degree graphs, parts > num_vertices,
+duplicate/clamped bounds from heavy hubs, shard boundary monotonicity, and
+the heavy_first_order empty-package work-attribution regression.
+"""
+import numpy as np
+import pytest
+
+from repro.graph import build_graph, clustered_graph
+from repro.graph.partition import (
+    GraphPartition,
+    degree_balanced_ranges,
+    equal_ranges,
+    heavy_first_order,
+    partition_graph,
+)
+
+
+def hub_graph(n=16, fan=64):
+    """Vertex 0 carries ``fan`` out-edges; everyone else has none."""
+    src = np.zeros(fan, dtype=np.int64)
+    dst = np.arange(fan, dtype=np.int64) % n
+    return build_graph(src, dst, n, name="hub")
+
+
+def edgeless_graph(n=8):
+    return build_graph(
+        np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64), n, name="empty"
+    )
+
+
+# ---------------------------------------------------------------------------
+# degree_balanced_ranges / equal_ranges
+# ---------------------------------------------------------------------------
+
+def test_zero_degree_falls_back_to_equal_ranges():
+    degrees = np.zeros(10, dtype=np.int64)
+    bounds = degree_balanced_ranges(degrees, 4)
+    assert np.array_equal(bounds, equal_ranges(10, 4))
+    assert bounds[0] == 0 and bounds[-1] == 10
+
+
+def test_parts_exceeding_vertices_yield_empty_ranges():
+    degrees = np.ones(3, dtype=np.int64)
+    bounds = degree_balanced_ranges(degrees, 8)
+    assert len(bounds) == 9
+    assert bounds[0] == 0 and bounds[-1] == 3
+    assert np.all(np.diff(bounds) >= 0)  # monotone, duplicates allowed
+    # every vertex is covered exactly once by the non-empty ranges
+    assert np.diff(bounds).sum() == 3
+
+
+def test_heavy_vertex_produces_duplicate_bounds():
+    # one vertex holds all the mass: every per-range target lands on it
+    degrees = np.array([100, 0, 0, 0], dtype=np.int64)
+    bounds = degree_balanced_ranges(degrees, 4)
+    assert bounds[0] == 0 and bounds[-1] == 4
+    assert np.all(np.diff(bounds) >= 0)
+    assert np.any(np.diff(bounds) == 0)  # the hub swallowed some targets
+
+
+def test_bounds_monotone_on_random_degrees():
+    rng = np.random.default_rng(0)
+    for parts in (1, 2, 3, 7, 16, 40):
+        degrees = rng.integers(0, 50, size=33)
+        bounds = degree_balanced_ranges(degrees, parts)
+        assert len(bounds) == parts + 1
+        assert bounds[0] == 0 and bounds[-1] == 33
+        assert np.all(np.diff(bounds) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# heavy_first_order: empty packages must carry zero work (regression)
+# ---------------------------------------------------------------------------
+
+def test_heavy_first_order_masks_empty_packages():
+    # np.add.reduceat on a duplicated index returns the *element at that
+    # index*, not 0 — before the fix, the empty package right after the hub
+    # was credited with the hub's full degree and sorted first.
+    degrees = np.array([100, 1, 1, 1], dtype=np.int64)
+    bounds = degree_balanced_ranges(degrees, 4)
+    assert np.any(np.diff(bounds) == 0)  # precondition: an empty package
+    order = heavy_first_order(degrees, bounds)
+    widths = np.diff(bounds)
+    # the hub's package runs first; all empty packages sort strictly after
+    # every non-empty one
+    assert widths[order[0]] > 0
+    n_nonempty = int((widths > 0).sum())
+    assert all(widths[p] > 0 for p in order[:n_nonempty])
+    assert all(widths[p] == 0 for p in order[n_nonempty:])
+
+
+def test_heavy_first_order_orders_by_work():
+    degrees = np.array([1, 1, 50, 1, 1, 1], dtype=np.int64)
+    bounds = np.array([0, 2, 3, 6], dtype=np.int64)
+    order = heavy_first_order(degrees, bounds)
+    assert order[0] == 1  # the package holding the degree-50 vertex
+
+
+# ---------------------------------------------------------------------------
+# GraphPartition
+# ---------------------------------------------------------------------------
+
+def test_partition_rejects_bad_domain_count():
+    with pytest.raises(ValueError):
+        GraphPartition.build(hub_graph(), 0)
+
+
+def test_partition_edgeless_graph():
+    part = partition_graph(edgeless_graph(8), 4)
+    assert part.num_domains == 4
+    assert part.num_vertices == 8
+    assert np.all(part.degree_mass == 0)
+    for shard in part.shards:
+        assert shard.num_edges == 0
+        assert shard.cut_edges == 0 and shard.halo == 0
+        assert shard.cut_fraction == 0.0
+        assert shard.indptr[0] == 0
+    # whole-graph mass is all zeros; dominant_domain still resolves
+    assert part.dominant_domain() == 0
+
+
+def test_partition_more_domains_than_vertices():
+    g = build_graph(
+        np.array([0, 1], dtype=np.int64), np.array([1, 0], dtype=np.int64), 2
+    )
+    part = partition_graph(g, 5)
+    assert part.num_domains == 5
+    assert np.all(np.diff(part.bounds) >= 0)
+    assert sum(s.num_vertices for s in part.shards) == 2
+    assert sum(s.num_edges for s in part.shards) == 2
+    # every vertex resolves to exactly one owning shard
+    for v in range(2):
+        d = part.shard_of(v)
+        assert part.shards[d].v_lo <= v < part.shards[d].v_hi
+
+
+def test_partition_hub_graph_duplicate_bounds():
+    part = partition_graph(hub_graph(n=16, fan=64), 4)
+    widths = np.diff(part.bounds)
+    assert np.any(widths == 0)  # the hub swallowed per-shard targets
+    # empty shards carry no mass and never win placement
+    for d, shard in enumerate(part.shards):
+        if shard.num_vertices == 0:
+            assert part.degree_mass[d] == 0
+    assert part.degree_mass.sum() == 64
+    assert part.dominant_domain() == int(np.argmax(part.degree_mass))
+
+
+def test_shard_boundaries_partition_the_vertex_range():
+    g = clustered_graph(6, 4, edge_factor=4, seed=1, cross_fraction=0.02)
+    part = partition_graph(g, 4)
+    assert part.bounds[0] == 0
+    assert part.bounds[-1] == part.num_vertices
+    assert np.all(np.diff(part.bounds) >= 0)
+    # shards tile [0, nv) exactly, in order
+    for d in range(1, part.num_domains):
+        assert part.shards[d].v_lo == part.shards[d - 1].v_hi
+    # shard-local CSR views are rebased and consistent with the mass
+    for d, shard in enumerate(part.shards):
+        assert shard.indptr[0] == 0
+        assert shard.indptr[-1] == shard.num_edges
+        assert np.all(np.diff(shard.indptr) >= 0)
+        assert part.degree_mass[d] == shard.num_edges
+        assert shard.internal_edges + shard.cut_edges == shard.num_edges
+        assert shard.halo <= shard.cut_edges
+
+
+def test_shard_of_bounds_checked():
+    part = partition_graph(hub_graph(), 2)
+    with pytest.raises(ValueError):
+        part.shard_of(-1)
+    with pytest.raises(ValueError):
+        part.shard_of(part.num_vertices)
+
+
+def test_domain_mass_empty_and_weighted_frontiers():
+    part = partition_graph(clustered_graph(5, 4, edge_factor=4, seed=2), 4)
+    assert np.all(part.domain_mass(np.empty(0, dtype=np.int64)) == 0.0)
+    # an unweighted frontier counts vertices; a weighted one sums degrees
+    block = 1 << 5
+    frontier = np.arange(3, dtype=np.int64) + 2 * block  # community 2
+    mass = part.domain_mass(frontier)
+    assert mass.sum() == 3
+    weighted = part.domain_mass(frontier, degrees=np.array([5.0, 1.0, 2.0]))
+    assert weighted.sum() == 8.0
+    assert part.dominant_domain(frontier) == int(np.argmax(mass))
+
+
+def test_clustered_graph_partition_recovers_communities():
+    # no cross edges: each community is a closed block, so a contiguous
+    # degree-balanced split has (near-)zero cut and a frontier seeded in
+    # community k lands its mass on shard k
+    g = clustered_graph(6, 4, edge_factor=4, seed=3, cross_fraction=0.0)
+    part = partition_graph(g, 4)
+    block = 1 << 6
+    for k in range(4):
+        seed_frontier = np.array([k * block + 1], dtype=np.int64)
+        assert part.dominant_domain(seed_frontier) == part.shard_of(k * block + 1)
+    assert sum(s.cut_edges for s in part.shards) <= sum(
+        s.num_edges for s in part.shards
+    ) * 0.05

@@ -70,3 +70,70 @@ def test_pool_invariants_under_random_interleavings(seed, capacity, reserve_frac
     assert pool.available == pool.capacity
     assert pool.request(1, priority=0) == 1  # priority-0 never starved
     pool.release(1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    capacity=st.integers(2, 32),
+    domains=st.integers(2, 4),
+)
+def test_per_domain_invariants_under_random_interleavings(seed, capacity, domains):
+    """Locality-domain accounting: under random request/release/resize/
+    resize_domain interleavings, every domain independently satisfies
+    ``in_use[d] <= capacity[d] + shrink_debt[d]``, the per-domain ledgers
+    always sum to the global ones, and a domain-scoped grant never comes
+    from another domain's slice."""
+    domains = min(domains, capacity)
+    pool = WorkerPool(capacity)
+    pool.set_domains(domains)
+    rng = np.random.default_rng(seed)
+    outstanding = []  # (grant, domain) pairs we hold
+
+    for _ in range(200):
+        op = rng.integers(0, 5)
+        if op == 0:  # domain-scoped request
+            d = int(rng.integers(0, domains))
+            n = int(rng.integers(1, capacity + 1))
+            before = pool.in_use_in(d)
+            grant = pool.request(n, domain=d)
+            assert 0 <= grant <= n
+            # the grant is booked against d's slice only
+            assert pool.in_use_in(d) == before + grant
+            if grant:
+                outstanding.append((grant, d))
+        elif op == 1:  # spread request (no domain)
+            n = int(rng.integers(1, capacity + 1))
+            by_before = list(pool.in_use_by_domain)
+            grant = pool.request(n)
+            by_after = list(pool.in_use_by_domain)
+            deltas = [a - b for a, b in zip(by_after, by_before)]
+            assert sum(deltas) == grant
+            for d, delta in enumerate(deltas):
+                if delta > 0:
+                    outstanding.append((delta, d))
+        elif op == 2 and outstanding:  # release one held grant
+            g, d = outstanding.pop(int(rng.integers(0, len(outstanding))))
+            pool.release(g, domain=d)
+        elif op == 3:  # global resize (re-splits the domain slices)
+            pool.resize(int(rng.integers(domains, 2 * capacity + 1)))
+        else:  # single-domain resize
+            d = int(rng.integers(0, domains))
+            pool.resize_domain(d, int(rng.integers(1, capacity + 1)))
+
+        by = pool.in_use_by_domain
+        caps = pool.domain_capacities
+        assert len(by) == len(caps) == domains
+        assert sum(by) == pool.in_use
+        assert sum(caps) == pool.capacity
+        for d in range(domains):
+            assert by[d] >= 0
+            assert caps[d] >= 1 or pool.shrink_debt_of(d) > 0
+            # the per-domain over-commit bound: debt is the only excess
+            assert by[d] <= caps[d] + pool.shrink_debt_of(d)
+            assert pool.available_in(d) == max(caps[d] - by[d], 0)
+
+    for g, d in outstanding:
+        pool.release(g, domain=d)
+    assert pool.in_use == 0
+    assert all(u == 0 for u in pool.in_use_by_domain)
