@@ -68,7 +68,7 @@ def run_single_query(algorithm: str, graph, policy: str) -> tuple[float, float, 
 
 
 def run_sessions(
-    algorithm: str,
+    algorithm: "str | list[str]",
     graph,
     policy: str,
     sessions: int,
@@ -88,8 +88,13 @@ def run_sessions(
     domains: int = 1,
     placement: str = "locality",
     migration_penalty: bool = True,
+    hetero_fuse: bool = False,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
+
+    ``algorithm`` is one algorithm name for a homogeneous workload, or a
+    list — one entry per session (cycled if shorter) — for a *mixed* burst
+    (fig20's PR+BFS+degree tenants on one hot graph).
 
     ``arrivals``/``priorities`` pass through to the engine so figures can
     model open-loop (bursty) traffic and mixed priority classes. ``steal``
@@ -97,7 +102,9 @@ def run_sessions(
     ``pool_capacity``/``admission``/``governor`` let figures pin the machine
     size, install per-priority admission quotas, and enable the elastic
     capacity governor (fig15). ``fuse``/``fusion`` enable same-graph gang
-    fusion (fig16). ``feedback``/``width_feedback`` install the §4.4 cost
+    fusion (fig16); ``hetero_fuse`` drops the algorithm from the fusion
+    rendezvous key so mixed-algorithm sessions merge into scan-shared gangs
+    (fig20). ``feedback``/``width_feedback`` install the §4.4 cost
     feedback loop and toggle its width-keyed table (fig17). ``backend``
     selects the execution substrate ("modeled" | "inline" | "pallas" or an
     ExecutionBackend instance; fig18). ``domains``/``placement``/
@@ -113,8 +120,10 @@ def run_sessions(
         kwargs["feedback"] = feedback
     eng = MultiQueryEngine(XEON_E5_2660V4, policy=policy, **kwargs)
 
+    algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
+
     def mk(s, q):
-        return make_executor(algorithm, graph, seed=s)
+        return make_executor(algos[s % len(algos)], graph, seed=s)
 
     t0 = time.perf_counter_ns()
     rep = eng.run_sessions(
@@ -133,6 +142,7 @@ def run_sessions(
             domains=domains,
             placement=placement,
             migration_penalty=migration_penalty,
+            hetero_fuse=hetero_fuse,
         ),
     )
     us = (time.perf_counter_ns() - t0) / 1e3

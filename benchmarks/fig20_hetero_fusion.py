@@ -1,0 +1,83 @@
+"""Fig. 20 (beyond the paper): heterogeneous scan-sharing fusion on a
+mixed-algorithm burst.
+
+The realistic multi-tenant regime (§5's 16-session setting, mixed): tenants
+run *different* queries — PageRank, BFS, degree counting — on the same hot
+sf13 graph at once. PR-4's gang fusion keys its rendezvous on
+(graph, algorithm), so this burst fragments into three small per-algorithm
+gangs; each still traverses the same CSR topology independently. The
+two-level concurrent scheduler (arXiv:1806.00777) shows the dominant cost in
+that regime is the redundant edge scan itself — so the ``heterofuse``
+variant (``EngineConfig(hetero_fuse=True)``) drops the algorithm from the
+rendezvous key: every session on the (graph, domain) pair merges into one
+scan-shared gang — a single topology traversal per fused step, N
+per-algorithm compute bodies, the shared edge-stream cost charged once
+(the widest member's scan) instead of once per member, and exact
+per-member split-back throughout.
+
+Three variants, always emitted so ``BENCH_sessions.json`` carries the
+ladder and ``check_trend.py`` gates the modeled PEPS rows: ``nofuse`` (no
+fusion at all), ``homofuse`` (PR-4 per-algorithm gangs), ``heterofuse``
+(one scan-shared gang). Wall time is reported, never gated.
+"""
+import time
+
+from repro.core import EngineConfig, FusionConfig, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import rmat_graph
+
+from . import common
+from .common import Row, make_executor
+
+# tenant mix: the scan-heavy class (PR) dominates, with BFS readers and a
+# couple of atomic-bound degree analytics riding the same hot graph
+N_PR, N_BFS, N_DEG = 6, 4, 2
+POOL = 16
+HOLD_NS = 5e4     # rendezvous window: wide enough to catch the BFS sessions'
+                  # later parallel iterations at the gang boundary
+MAX_MEMBERS = 12  # one burst-wide gang instead of several fragments
+ALGOS = ("pr_pull",) * N_PR + ("bfs",) * N_BFS + ("degree_count",) * N_DEG
+
+
+def _make_mk(graph):
+    def mk(s, q):
+        return make_executor(ALGOS[s], graph, seed=s)
+
+    return mk
+
+
+def run() -> list[Row]:
+    g = rmat_graph(13, seed=3)
+    mk = _make_mk(g)
+    n = len(ALGOS)
+    rows: list[Row] = []
+    variants = (
+        ("nofuse", False, False),
+        ("homofuse", True, False),
+        ("heterofuse", True, True),
+    )
+    for label, fuse, hetero in variants:
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler")
+        t0 = time.perf_counter_ns()
+        rep = eng.run_sessions(
+            mk,
+            sessions=n,
+            queries_per_session=1,
+            config=EngineConfig(
+                steal=common.STEAL,
+                fuse=fuse,
+                fusion=FusionConfig(hold_ns=HOLD_NS, max_members=MAX_MEMBERS)
+                if fuse
+                else None,
+                hetero_fuse=hetero,
+            ),
+        )
+        us = (time.perf_counter_ns() - t0) / 1e3
+        base = f"fig20/hetero_burst/sf13/{label}/s{n}"
+        rows.append((base, us, rep.throughput_modeled()))
+        rows.append((f"{base}/mean_util", us, rep.mean_utilization()))
+        rows.append((f"{base}/fusion_groups", us, float(len(rep.fusion_events))))
+        rows.append((f"{base}/fused_packages", us, float(rep.total_fused)))
+        rows.append(
+            (f"{base}/p95_latency_us", us, rep.latency_percentiles()["p95"] / 1e3)
+        )
+    return rows

@@ -13,7 +13,8 @@
 #   always emits all three execution backends (modeled/inline/pallas), with
 #   real wall-clock rows flagged informational (reported, never gated);
 #   fig19 always emits all four locality-domain variants
-#   (d1/d4_local/d4_blind/d4_nopen).
+#   (d1/d4_local/d4_blind/d4_nopen); fig20 always emits the mixed-burst
+#   fusion ladder (nofuse/homofuse/heterofuse scan-sharing).
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
 #   but do not commit its numbers over the gated baseline.
@@ -41,6 +42,7 @@ MODULES = [
     "fig17_width_feedback",
     "fig18_substrate",
     "fig19_locality",
+    "fig20_hetero_fusion",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"

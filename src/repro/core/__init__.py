@@ -29,6 +29,7 @@ from .contention import (
     calibrate_from_runs,
     counter_array_bytes,
     cross_domain_cost_ns,
+    recalibrate_preset,
 )
 from .cost_model import (
     IterationWork,
@@ -66,7 +67,10 @@ from .fusion import (
     FusionGroup,
     FusionMember,
     aggregate_work,
+    apply_scan_sharing,
+    member_scan_ns,
     plan_gang_width,
+    plan_hetero_gang_width,
 )
 from .governor import CapacityGovernor, GovernorConfig
 from .session import (
@@ -87,6 +91,7 @@ __all__ = [
     "PR_PULL", "PR_PUSH",
     "PRESETS", "TPU_V5E_POD", "XEON_E5_2660V4", "HardwareModel", "MemoryLevel",
     "calibrate_from_runs", "counter_array_bytes", "cross_domain_cost_ns",
+    "recalibrate_preset",
     "IterationWork", "c_sub", "c_vertex_sequential", "c_vertex_total",
     "iteration_cost_ns", "touched_memory_bytes",
     "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",
@@ -97,7 +102,9 @@ __all__ = [
     "StealEntry", "StealRegistry", "graph_identity",
     "DevicePlan", "ExecutionBackend", "InlineBackend", "ModeledBackend",
     "PallasBackend", "resolve_backend", "EngineConfig",
-    "FusionConfig", "FusionGroup", "FusionMember", "aggregate_work", "plan_gang_width",
+    "FusionConfig", "FusionGroup", "FusionMember", "aggregate_work",
+    "apply_scan_sharing", "member_scan_ns", "plan_gang_width",
+    "plan_hetero_gang_width",
     "CapacityGovernor", "GovernorConfig",
     "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
     "QueryExecutor", "QueryRecord",

@@ -271,8 +271,31 @@ class PallasBackend:
     def __init__(self, *, interpret: bool = True):
         self.interpret = bool(interpret)
         self._memo = _PlanMemo()
-        # graph-level device tables, shared by every plan on the same graph
+        # graph-level device state, shared by every plan on the same graph:
+        # raw tile tables under (gkey, "in"|"out"), and *whole warmed
+        # handles* under (gkey, kind, shard_key) — the topology is staged
+        # and the kernel warmed once per (graph, shard), so N concurrent
+        # sessions (same or different algorithms, scan-shared gangs
+        # included) load it once, not once per prep
         self._graph_tables: dict[tuple, _PallasHandle] = {}
+
+    def _handle_key(self, executor: "QueryExecutor", kind: str, gkey, shard) -> tuple | None:
+        """Shared-handle cache key: everything the staged device state
+        depends on besides the graph itself. ``None`` when the lowering has
+        no shareable state (inline fallback) or the graph has no identity."""
+        if gkey is None:
+            return None
+        if kind == "pr_pull":
+            skey = (
+                (int(shard.v_lo), int(shard.v_hi)) if shard is not None else None
+            )
+            return (gkey, kind, skey)
+        if kind == "bfs":
+            return (gkey, kind, None)
+        if kind == "degree_count":
+            # ids_pad is reduced mod the counter-array size
+            return (gkey, kind, int(executor.num_counters))
+        return None
 
     # ------------------------------------------------------------ staging
     def _spmv_tables(
@@ -327,6 +350,15 @@ class PallasBackend:
         # run_packages carries extra semantics — direction-optimized BFS —
         # opts back out by clearing the attribute)
         kind = getattr(executor, "pallas_lowering", None)
+        hkey = self._handle_key(executor, kind, gkey, shard) if kind else None
+        if hkey is not None:
+            shared = self._graph_tables.get(hkey)
+            if shared is not None:
+                # another session (or a previous prep of this one) already
+                # staged and warmed this (graph, kind, shard) — reuse it
+                return self._memo.put(
+                    DevicePlan(executor, prep, shared, shard=shard)
+                )
         handle: _PallasHandle
         if kind == "pr_pull":
             in_src, in_dst = executor.pull_edges()
@@ -398,6 +430,8 @@ class PallasBackend:
             )
         else:
             handle = _PallasHandle(kind="inline")
+        if hkey is not None:
+            self._graph_tables[hkey] = handle
         return self._memo.put(DevicePlan(executor, prep, handle, shard=shard))
 
     # ---------------------------------------------------------- execution

@@ -63,6 +63,23 @@ class EngineConfig:
       steals pay the contention model's remote factor + migration cost
       (``c_remote_factor`` / ``c_migration_ns``); only meaningful with
       ``domains > 1``.
+    * ``hetero_fuse`` — heterogeneous scan-sharing fusion: the fusion
+      rendezvous key drops the algorithm, so sessions of *different*
+      algorithms on the same ``(graph, domain)`` merge into one scan-shared
+      gang (one topology traversal per fused step, N compute bodies, the
+      shared edge-scan cost charged once). Implies ``fuse``. Default off —
+      homogeneous-only fusion stays byte-identical.
+    * ``adaptive_admission`` — derive the admission controller's
+      ``target_share`` from the width table's measured efficiency frontier
+      instead of the static worker-count heuristic (admit more sessions when
+      wide execution measures poorly anyway). Requires width feedback to be
+      active; a cold table is byte-identical to the static heuristic.
+    * ``recalibrate`` — censor-triggered hardware recalibration: when the
+      width table's censoring gate trips (the modeled clock is so far off
+      the executing host that ratios clip en masse), refit the
+      ``HardwareModel`` from the accumulated (modeled, measured) pairs via
+      ``calibrate_from_runs`` and reset the width state, instead of just
+      neutralizing the table.
     """
 
     priorities: Sequence[int] | Callable[[int], int] | None = None
@@ -76,6 +93,9 @@ class EngineConfig:
     domains: int = 1
     placement: str = "locality"
     migration_penalty: bool = True
+    hetero_fuse: bool = False
+    adaptive_admission: bool = False
+    recalibrate: bool = False
 
     def __post_init__(self) -> None:
         if self.domains < 1:

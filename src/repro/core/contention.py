@@ -217,6 +217,77 @@ def calibrate_from_runs(
     )
 
 
+def recalibrate_preset(
+    hw: HardwareModel,
+    pairs: Sequence[tuple[int, float, float]],
+    *,
+    name: str | None = None,
+) -> HardwareModel:
+    """Converge a preset toward the executing host from runtime observations.
+
+    ``pairs`` are the raw per-step ``(width, modeled_ns, measured_ns)``
+    tuples the §4.4 feedback loop accumulates
+    (:meth:`~.feedback.CostFeedback.recalibration_pairs`). When the
+    censoring gate trips — the host is so far from the preset that every
+    clipped ratio pins at the bound and the width table carries no readable
+    differential — the honest fix is re-training the latency tables, not
+    neutralizing the corrections.
+
+    Procedure (the §5.1 training path, re-driven by runtime data): each pair
+    is bucketed onto the preset's nearest measured thread count
+    (geometrically — the tables are log-spaced); the per-slot *median*
+    measured/modeled ratio scales that slot's latency column, empty slots
+    inherit the global median (a uniform host offset recalibrates every
+    width even from narrow observations). The scaled table is then fed
+    through :func:`calibrate_from_runs` — one synthetic size per memory
+    level, just under its capacity, so the §5.1 largest-fitting-size
+    selection reconstructs exactly the scaled per-level rows — yielding a
+    model whose predicted ratios land back inside the clip window, making
+    the differential width signal readable again.
+
+    With no usable pairs the preset is returned unchanged (same object)."""
+    ratios: dict[int, list[float]] = {}
+    all_ratios: list[float] = []
+    ts = hw.thread_counts
+    for width, modeled_ns, measured_ns in pairs:
+        if modeled_ns <= 0 or measured_ns <= 0:
+            continue
+        w = max(int(width), 1)
+        # nearest measured thread count in log space (the tables' own axis)
+        slot = min(
+            range(len(ts)),
+            key=lambda i: abs(math.log(ts[i]) - math.log(w)),
+        )
+        r = measured_ns / modeled_ns
+        ratios.setdefault(slot, []).append(r)
+        all_ratios.append(r)
+    if not all_ratios:
+        return hw
+    global_scale = float(np.median(all_ratios))
+    scale = np.array(
+        [
+            float(np.median(ratios[i])) if i in ratios else global_scale
+            for i in range(len(ts))
+        ]
+    )
+    sizes = [0.5 * lvl.capacity for lvl in hw.levels]
+    measured = np.asarray(hw.lat_atomic, dtype=np.float64) * scale[None, :]
+    return calibrate_from_runs(
+        name or f"{hw.name}+recal",
+        hw.levels,
+        ts,
+        sizes,
+        measured,
+        l_op=hw.l_op * global_scale,
+        c_thread_overhead_ns=hw.c_thread_overhead_ns,
+        c_para_startup_ns=hw.c_para_startup_ns,
+        c_t_min_work_ns=hw.c_t_min_work_ns,
+        max_packages_factor=hw.max_packages_factor,
+        c_remote_factor=hw.c_remote_factor,
+        c_migration_ns=hw.c_migration_ns,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Presets
 # ---------------------------------------------------------------------------

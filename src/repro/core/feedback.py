@@ -68,6 +68,12 @@ def _pow2_bucket(width: int) -> int:
     return largest_pow2_leq(max(int(width), 1))
 
 
+# raw (width, modeled_ns, measured_ns) pairs kept for recalibration: bounded
+# so a long-lived engine cannot grow without bound (drop-oldest — the newest
+# pairs describe the host best)
+_RAW_PAIR_CAP = 4096
+
+
 @dataclasses.dataclass
 class CostFeedback:
     """Width-aware multiplicative cost corrections, EWMA'd in log space.
@@ -96,6 +102,10 @@ class CostFeedback:
     _log_bucket: dict = dataclasses.field(default_factory=dict)
     # ("mode"|"width"|"bucket", *key) -> (censored_count, total_count)
     _censor: dict = dataclasses.field(default_factory=dict)
+    # raw width-level (width, modeled_ns, measured_ns) pairs, *unclipped*:
+    # the recalibration input (censor-triggered calibrate_from_runs) needs
+    # the true host ratios the clip window hid from the EWMA tables
+    _raw_pairs: list = dataclasses.field(default_factory=list)
     observations: int = 0
     width_observations: int = 0
 
@@ -190,6 +200,73 @@ class CostFeedback:
             return 1.0
         return self._clamped(log_corr) / mode
 
+    def width_censored(self, algorithm: str, width: int) -> bool:
+        """True when :meth:`width_ratio` for this key returns the neutral 1.0
+        *because of censoring* — the signal it would consult (exact width,
+        else pow2 bucket, or its mode reference) is predominantly clipped.
+
+        A cold key is **not** censored: its neutral 1.0 is exact, not a
+        bound. Heterogeneous gang planning uses this to detect algorithms
+        whose width entries cannot rank widths (the most-conservative-member
+        fallback of :func:`~.fusion.plan_hetero_gang_width`)."""
+        w = int(width)
+        entry_key = (algorithm, w)
+        if entry_key in self._log_width:
+            level = "width"
+        else:
+            entry_key = (algorithm, _pow2_bucket(w))
+            if entry_key not in self._log_bucket:
+                return False  # cold, not censored
+            level = "bucket"
+        ref_mode = w >= 2
+        if self._key(algorithm, ref_mode) not in self._log_corr and (
+            self._key(algorithm, not ref_mode) in self._log_corr
+        ):
+            ref_mode = not ref_mode
+        return self._distrusted(level, *entry_key) or self._distrusted(
+            "mode", algorithm, ref_mode
+        )
+
+    def width_algorithms(self) -> list[str]:
+        """Algorithms with at least one width-level observation (sorted):
+        the population the admission controller's measured efficiency
+        frontier is computed over."""
+        return sorted({a for a, _ in self._log_width})
+
+    # ------------------------------------------------------- recalibration
+    def censor_tripped(self, *, min_observations: int = 8) -> bool:
+        """The PR-5 censoring gate: True when the width-level observations
+        are *predominantly* censored overall (fraction ≥ ``censor_trust``
+        over ≥ ``min_observations`` samples) — the modeled clock is so far
+        off the executing host that the clip window hides the differential
+        width signal. The cure is not neutralizing the table but
+        recalibrating the hardware model from the accumulated raw pairs
+        (:func:`~.contention.recalibrate_preset`)."""
+        c = t = 0
+        for (kind, *_key), (ck, tk) in self._censor.items():
+            if kind == "width":
+                c += ck
+                t += tk
+        return t >= min_observations and c / t >= self.censor_trust
+
+    def recalibration_pairs(self) -> list[tuple[int, float, float]]:
+        """The accumulated raw ``(width, modeled_ns, measured_ns)`` pairs
+        (unclipped — the true host ratios), newest last."""
+        return list(self._raw_pairs)
+
+    def reset_width_state(self) -> None:
+        """Forget every measured correction and censor count (mode, width,
+        bucket) and the raw pair buffer. Called after a recalibration swaps
+        the hardware model underneath the tables: corrections learned
+        against the old model are systematically wrong against the new one,
+        and the censor history would keep reporting a gate that the
+        recalibration just addressed."""
+        self._log_corr.clear()
+        self._log_width.clear()
+        self._log_bucket.clear()
+        self._censor.clear()
+        self._raw_pairs.clear()
+
     # -------------------------------------------------------------- updates
     def _ewma(self, table: dict, key: tuple, ratio: float) -> None:
         prev = table.get(key, 0.0)
@@ -264,6 +341,9 @@ class CostFeedback:
             return
         ratio, censored = clipped
         w = max(int(width), 1)
+        self._raw_pairs.append((w, float(modeled_ns), float(measured_ns)))
+        if len(self._raw_pairs) > _RAW_PAIR_CAP:
+            del self._raw_pairs[: len(self._raw_pairs) - _RAW_PAIR_CAP]
         self._ewma(self._log_width, (algorithm, w), ratio)
         self._note_censor("width", (algorithm, w), censored)
         bucket = (algorithm, _pow2_bucket(w))

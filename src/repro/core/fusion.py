@@ -108,10 +108,19 @@ class FusedPackages:
     space: fused id *i* is the *i*-th slot of the round-robin interleave of
     the members' package orders. Only the surface :class:`ScheduleRun` reads
     (``order``/``n_packages``) exists — executors never see fused ids, the
-    group splits every batch back to member-local ids first."""
+    group splits every batch back to member-local ids first.
+
+    ``tags`` (heterogeneous gangs) carries the *algorithm name per fused
+    slot*: the interleaved package table of a scan-shared gang mixes
+    packages of different algorithms, and downstream consumers — a thief
+    sizing its gang against the claimable tail, the de-fuse handover — need
+    to know which compute body each slot belongs to without consulting the
+    group. ``None`` on homogeneous gangs (every slot is the one algorithm
+    the rendezvous key carried)."""
 
     order: np.ndarray
     n_packages: int
+    tags: np.ndarray | None = None
 
 
 @dataclasses.dataclass
@@ -135,6 +144,11 @@ class FusionMember:
     measured_ns: float = 0.0
     finished: bool = False       # iteration accounted, member left the gang
     defused: bool = False        # gang dissolved; member runs its residual
+    # algorithm name of the member's query — always the gang's one algorithm
+    # on a homogeneous gang, per-member on a heterogeneous scan-shared gang
+    # (None when the caller did not tag members; split-back still resolves
+    # the compute body through ``payload``)
+    algorithm: str | None = None
 
     @property
     def n_packages(self) -> int:
@@ -152,7 +166,15 @@ class FusionMember:
 
 
 class FusionGroup:
-    """The fused iteration of ≥ 2 same-(graph, algorithm) sessions."""
+    """The fused iteration of ≥ 2 same-graph sessions.
+
+    Homogeneous gangs (PR 4) carry one algorithm — the rendezvous key
+    included it. A *heterogeneous scan-shared* gang (``scan_shared=True``)
+    fuses sessions of **different** algorithms on the same graph/domain: one
+    interleaved package table, one grant, one topology traversal per fused
+    step, with each member's own compute body applied to its share of the
+    shared scan (the split-back machinery is algorithm-agnostic already —
+    every share executes through its member's executor)."""
 
     def __init__(
         self,
@@ -161,6 +183,7 @@ class FusionGroup:
         pos_of: np.ndarray,
         bounds: ThreadBounds,
         domain: int | None = None,
+        scan_shared: bool = False,
     ):
         self.members = members
         self._member_of = member_of   # [n_fused] member index per fused id
@@ -170,11 +193,46 @@ class FusionGroup:
         # members' placement, so a gang never straddles a domain boundary and
         # its single grant draws from one domain's share
         self.domain = domain
+        # heterogeneous topology sharing: members of different algorithms
+        # ride one CSR traversal per fused step — the modeled edge-stream
+        # cost is charged once per step, not once per member
+        self.scan_shared = bool(scan_shared)
         self.n_packages = int(member_of.size)
+        tags = None
+        if any(m.algorithm is not None for m in members):
+            # per-fused-slot algorithm tags: carried by the interleaved
+            # package table so the scheduler/steal path can reason about
+            # which compute body a slot belongs to without the group
+            names = [m.algorithm or "" for m in members]
+            tags = np.asarray([names[int(i)] for i in member_of])
         self.packages = FusedPackages(
             order=np.arange(self.n_packages, dtype=np.int64),
             n_packages=self.n_packages,
+            tags=tags,
         )
+
+    @property
+    def algorithms(self) -> list[str]:
+        """Distinct member algorithms, first-member order (one entry on a
+        homogeneous gang, several on a scan-shared heterogeneous one)."""
+        seen: list[str] = []
+        for m in self.members:
+            if m.algorithm is not None and m.algorithm not in seen:
+                seen.append(m.algorithm)
+        return seen
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when members run more than one distinct algorithm."""
+        return len(self.algorithms) > 1
+
+    def member_groups(self) -> dict[str, list[FusionMember]]:
+        """Members keyed by algorithm (the per-algorithm member groups a
+        heterogeneous gang de-fuses back into)."""
+        groups: dict[str, list[FusionMember]] = {}
+        for m in self.members:
+            groups.setdefault(m.algorithm or "", []).append(m)
+        return groups
 
     @classmethod
     def build(
@@ -184,6 +242,8 @@ class FusionGroup:
         capacity: int,
         gang_width: int | None = None,
         domain: int | None = None,
+        algorithms: list[str] | None = None,
+        scan_shared: bool = False,
     ) -> "FusionGroup":
         """Fuse ``(payload, prep, bounds)`` triples into one group.
 
@@ -194,9 +254,15 @@ class FusionGroup:
         the members' summed ``T_max`` capped at the pool capacity — one grant
         request for the whole gang; ``gang_width`` (from
         :func:`plan_gang_width`'s measured-width sweep) overrides it, still
-        clamped to ``[t_min, capacity]``."""
+        clamped to ``[t_min, capacity]``.
+
+        ``algorithms`` tags each staged member with its algorithm name
+        (parallel to ``staged``); ``scan_shared=True`` marks the gang as a
+        heterogeneous topology-sharing gang whose members charge the CSR
+        edge scan once per fused step (:func:`apply_scan_sharing`). Both
+        default to the PR-4 homogeneous behavior."""
         members: list[FusionMember] = []
-        for payload, prep, bounds in staged:
+        for i, (payload, prep, bounds) in enumerate(staged):
             pkgs = prep.packages
             order = np.asarray(pkgs.order[: pkgs.n_packages], dtype=np.int64)
             members.append(
@@ -207,6 +273,7 @@ class FusionGroup:
                     order=order,
                     covered=np.zeros(order.size, dtype=bool),
                     trace=ScheduleTrace(requested=0),
+                    algorithm=algorithms[i] if algorithms is not None else None,
                 )
             )
         member_of: list[int] = []
@@ -239,6 +306,7 @@ class FusionGroup:
             np.asarray(pos_of, dtype=np.int64),
             fused_bounds,
             domain=domain,
+            scan_shared=scan_shared,
         )
 
     # ------------------------------------------------------------- splitting
@@ -325,6 +393,146 @@ def member_work_ns(
     if t > 1:
         total /= t
     return total * fraction
+
+
+def member_scan_ns(
+    desc: AlgorithmDescriptor,
+    hw: HardwareModel,
+    work: Any,
+    t: int,
+    fraction: float,
+) -> float:
+    """The topology-streaming slice of a member's share of one gang step:
+    the plain-memory portion of the edge term in Eq. (8) — the CSR
+    adjacency/offset loads every algorithm performs identically when it
+    walks the frontier's out-edges. This is the cost a heterogeneous
+    scan-shared gang pays once per fused step instead of once per member
+    (:func:`apply_scan_sharing`). Atomics and op terms stay per-member:
+    those are the algorithm's *compute body* on the shared scan.
+
+    Structurally a strict lower bound on :func:`member_work_ns` for any
+    descriptor with nonzero vertex/compute terms — the discount can never
+    drive a member's share negative."""
+    s = max(work.frontier, 1.0)
+    epv = work.edges / s
+    scan = work.frontier * epv * desc.e.n_mem * hw.l_mem(work.m_bytes)
+    if t > 1:
+        scan /= t
+    return scan * fraction
+
+
+def apply_scan_sharing(shares_ns: list[float], scans_ns: list[float]) -> list[float]:
+    """Discount per-member gang-step shares so the shared topology scan is
+    charged once across the gang instead of once per member.
+
+    ``shares_ns[i]`` is member *i*'s full modeled share of the fused step
+    (:func:`member_work_ns`, remote factor included); ``scans_ns[i]`` is the
+    scan slice inside it (:func:`member_scan_ns`, same factors). The gang
+    pays ``max(scans_ns)`` — the widest member's traversal covers everyone
+    riding it — so the savings ``Σ scan − max(scan)`` are subtracted from the
+    members pro rata to their scan share. Conservation is exact:
+    ``Σ adjusted == Σ shares − savings`` (the property the split-back tests
+    pin down), and every adjusted share stays ≥ its compute-only part."""
+    if len(shares_ns) <= 1:
+        return list(shares_ns)
+    total_scan = sum(scans_ns)
+    if total_scan <= 0.0:
+        return list(shares_ns)
+    savings = total_scan - max(scans_ns)
+    if savings <= 0.0:
+        return list(shares_ns)
+    return [
+        share - savings * (scan / total_scan)
+        for share, scan in zip(shares_ns, scans_ns)
+    ]
+
+
+def plan_hetero_gang_width(
+    staged: list[tuple[Any, Any, ThreadBounds]],
+    descs: list[AlgorithmDescriptor],
+    hw: HardwareModel,
+    *,
+    capacity: int,
+    feedback: "CostFeedback | None" = None,
+) -> int:
+    """Measured-width planning for a *heterogeneous* gang: score the
+    combined per-algorithm :class:`~.cost_model.IterationWork` with **each
+    member algorithm's own** width correction.
+
+    ``descs`` is parallel to ``staged``. Members are grouped by algorithm;
+    each group's work aggregates (:func:`aggregate_work`) and a power-of-two
+    sweep scores every candidate width by the *sum* of per-algorithm
+    corrected compute costs plus the once-per-gang launch overhead — the
+    argmin over corrected cost wins. When any algorithm's width entry is
+    censored at a candidate (:meth:`~.feedback.CostFeedback.width_censored`
+    — its measured ratios clipped so hard the table distrusts them), the
+    sweep is abandoned and the gang falls back to the **most conservative
+    member**: the smallest of the per-algorithm pure-model preferred widths,
+    so an algorithm with unreadable feedback never drags the others wide.
+    Degenerate single-algorithm input delegates to :func:`plan_gang_width`
+    (byte-identical homogeneous behavior)."""
+    by_algo: dict[str, list[int]] = {}
+    for i, d in enumerate(descs):
+        by_algo.setdefault(d.name, []).append(i)
+    if len(by_algo) == 1:
+        return plan_gang_width(
+            staged, descs[0], hw, capacity=capacity, feedback=feedback
+        )
+    capped_sum = min(sum(max(b.t_max, 1) for _, _, b in staged), capacity)
+    groups = []  # (desc, aggregate work) per algorithm
+    for name, idxs in by_algo.items():
+        agg = aggregate_work([staged[i][1].work for i in idxs])
+        groups.append((descs[idxs[0]], agg))
+
+    def pure_cost(desc: AlgorithmDescriptor, agg: IterationWork, t: int) -> float:
+        return max(agg.frontier, 1.0) * c_vertex_total(desc, hw, agg, t) / t
+
+    def preferred_pure_width(desc: AlgorithmDescriptor, agg: IterationWork) -> int:
+        best_t, best_cost = 2, float("inf")
+        t = 2
+        while t <= capped_sum:
+            cost = (
+                pure_cost(desc, agg, t)
+                + hw.c_thread_overhead_ns * t
+                + hw.c_para_startup_ns
+            )
+            if cost < best_cost:
+                best_t, best_cost = t, cost
+            t <<= 1
+        return best_t
+
+    if feedback is not None:
+        censored = False
+        t = 2
+        while t <= capped_sum and not censored:
+            censored = any(
+                feedback.width_censored(desc.name, t) for desc, _ in groups
+            )
+            t <<= 1
+        if censored:
+            # most conservative member: an algorithm whose differential
+            # width signal is unreadable must not be run wider than its own
+            # pure model would pick, and neither should the gang it rides in
+            return max(
+                min(preferred_pure_width(desc, agg) for desc, agg in groups), 2
+            )
+    best_t, best_cost = None, float("inf")
+    t = 2
+    while t <= capped_sum:
+        cost = hw.c_thread_overhead_ns * t + hw.c_para_startup_ns
+        for desc, agg in groups:
+            ratio = (
+                feedback.width_ratio(desc.name, t)
+                if feedback is not None
+                else 1.0
+            )
+            cost += pure_cost(desc, agg, t) * ratio
+        if cost < best_cost:
+            best_t, best_cost = t, cost
+        t <<= 1
+    if best_t is None:
+        return max(capped_sum, 2)
+    return max(best_t, 2)
 
 
 def gang_overhead_ns(hw: HardwareModel, t: int, k: int, n_fused: int) -> float:
@@ -440,9 +648,12 @@ __all__ = [
     "FusionGroup",
     "FusionMember",
     "aggregate_work",
+    "apply_scan_sharing",
     "gang_overhead_ns",
+    "member_scan_ns",
     "member_work_ns",
     "merge_member_trace",
     "plan_gang_width",
+    "plan_hetero_gang_width",
     "should_fuse",
 ]

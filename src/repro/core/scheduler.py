@@ -420,6 +420,7 @@ class ScheduleRun:
         order: np.ndarray | None = None,
         initial_grant: bool = True,
         domain: int | None = None,
+        tags: np.ndarray | None = None,
     ):
         self.pool = pool
         self.bounds = bounds
@@ -435,6 +436,11 @@ class ScheduleRun:
             self._order = np.asarray(order, dtype=np.int64)
         else:
             self._order = packages.order[: packages.n_packages]
+        # per-package algorithm tags, indexed by *package id* (heterogeneous
+        # fused gangs interleave several algorithms in one order; the fused
+        # id universe is 0..n-1 so the id doubles as the index). None on
+        # single-algorithm runs — every slot is the run's one algorithm.
+        self._tags = tags
         self._cursor = 0
         self._fence = len(self._order)  # thieves claim from the tail down
         self._donations = 0             # claimed batches not yet executed
@@ -555,6 +561,27 @@ class ScheduleRun:
         ):
             return 0
         return max(self._fence - self._cursor, 0)
+
+    def tail_tags(self, k: int) -> list[str]:
+        """Distinct algorithm tags among the (up to) ``k`` trailing claimable
+        packages — exactly the slots the next :meth:`donate` of size ``k``
+        would take. A thief sizing its gang against a heterogeneous fused
+        victim scores its width per the algorithms it would actually run;
+        empty when the run carries no tags (single-algorithm) or nothing is
+        claimable."""
+        if self._tags is None:
+            return []
+        with self._steal_lock:
+            k = min(int(k), self.stealable_backlog)
+            if k <= 0:
+                return []
+            batch = self._order[self._fence - k : self._fence]
+            seen: list[str] = []
+            for pid in batch:
+                tag = str(self._tags[int(pid)])
+                if tag and tag not in seen:
+                    seen.append(tag)
+            return seen
 
     def donate(self, k: int, *, workers: int = 1) -> np.ndarray:
         """Thief-side claim: atomically cede up to ``k`` trailing undispatched
@@ -700,13 +727,15 @@ class PackageScheduler:
         order: np.ndarray | None = None,
         initial_grant: bool = True,
         domain: int | None = None,
+        tags: np.ndarray | None = None,
     ) -> ScheduleRun:
         """Start a stepwise run (requests the initial grant now unless
         ``initial_grant=False``, which starts it parked). ``order``
         restricts/overrides the dispatched package ids (fused gangs, residual
         runs of de-fused members); ``eager_backlog`` loosens the steal fence
         for runs carrying several sessions' packages; ``domain`` pins every
-        grant of the run to one locality domain."""
+        grant of the run to one locality domain; ``tags`` labels each package
+        id with its algorithm (heterogeneous fused gangs)."""
         return ScheduleRun(
             self.pool,
             packages,
@@ -718,6 +747,7 @@ class PackageScheduler:
             order=order,
             initial_grant=initial_grant,
             domain=domain,
+            tags=tags,
         )
 
     def run(

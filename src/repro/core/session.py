@@ -53,17 +53,20 @@ from .backends import ExecutionBackend, resolve_backend
 from .bounds import ThreadBounds
 from .config import EngineConfig
 from .feedback import CostFeedback
-from .contention import HardwareModel, cross_domain_cost_ns
+from .contention import HardwareModel, cross_domain_cost_ns, recalibrate_preset
 from .cost_model import iteration_cost_ns
 from .descriptors import AlgorithmDescriptor
 from .fusion import (
     FusionConfig,
     FusionGroup,
     FusionMember,
+    apply_scan_sharing,
     gang_overhead_ns,
+    member_scan_ns,
     member_work_ns,
     merge_member_trace,
     plan_gang_width,
+    plan_hetero_gang_width,
     should_fuse,
 )
 from .packaging import WorkPackages
@@ -435,6 +438,16 @@ class AdmissionController:
         self.target_share = target_share
         self.max_inflight = max_inflight
         self.class_quotas = dict(class_quotas) if class_quotas else None
+        # width-feedback-aware admission (ROADMAP item): when the engine
+        # installs a callable here (``EngineConfig(adaptive_admission=True)``
+        # with width feedback active), ``cap`` shrinks the per-session share
+        # guarantee to the width table's measured efficiency frontier — the
+        # widest width that still measures efficient. If wide execution
+        # measures poorly, sessions cannot productively use ``target_share``
+        # workers each, so guaranteeing it just strands capacity behind the
+        # admission cap; admitting more narrow sessions is strictly better.
+        # None (the default) is the static heuristic, byte for byte.
+        self.frontier_fn: Callable[[], int] | None = None
         self.inflight = 0
         self.inflight_by_class: collections.Counter[int] = collections.Counter()
         # (-priority, fifo_seq, session): highest priority first, FIFO within
@@ -445,7 +458,13 @@ class AdmissionController:
 
     def cap(self, pool: WorkerPool) -> int:
         """Current global admission cap derived from the pool's capacity."""
-        derived = max(pool.capacity // self.target_share, 1)
+        share = self.target_share
+        if self.frontier_fn is not None:
+            # measured efficiency frontier: never *lower* the cap below the
+            # static heuristic — a frontier wider than target_share means
+            # wide execution measures fine and the static guarantee stands
+            share = min(share, max(int(self.frontier_fn()), 1))
+        derived = max(pool.capacity // share, 1)
         if self.max_inflight is not None:
             derived = min(derived, self.max_inflight)
         return derived
@@ -959,7 +978,8 @@ class MultiQueryEngine:
         arrivals = cfg.arrivals
         steal = bool(cfg.steal)
         governor = cfg.governor
-        fuse = bool(cfg.fuse)
+        hetero = bool(cfg.hetero_fuse)
+        fuse = bool(cfg.fuse) or hetero
         fusion = cfg.fusion
         width_feedback = cfg.width_feedback
         domains = int(cfg.domains)
@@ -990,6 +1010,33 @@ class MultiQueryEngine:
         prev_backend = self.backend
         if cfg.backend is not None:
             self.backend = resolve_backend(cfg.backend)
+        # width-feedback-aware admission: for this run only, the admission
+        # cap's per-session share guarantee follows the width table's
+        # measured efficiency frontier — the widest power-of-two width whose
+        # corrected throughput still improves on narrower ones, taken over
+        # every algorithm the table has seen (the *most parallel* algorithm
+        # decides; others strand even less capacity). A cold table reports
+        # the full pool capacity, leaving the static heuristic untouched.
+        prev_frontier_fn = self.admission.frontier_fn
+        if cfg.adaptive_admission and self._width_fb_on:
+
+            def _efficiency_frontier() -> int:
+                algos = self.feedback.width_algorithms()
+                if not algos:
+                    return self.pool.capacity
+                frontier = 1
+                for a in algos:
+                    best_w, best_eff = 1, 0.0
+                    w = 1
+                    while w <= self.pool.capacity:
+                        eff = w / self.feedback.width_ratio(a, w)
+                        if eff > best_eff:
+                            best_w, best_eff = w, eff
+                        w <<= 1
+                    frontier = max(frontier, best_w)
+                return frontier
+
+            self.admission.frontier_fn = _efficiency_frontier
         # locality domains: split the pool for this run only (restored in the
         # teardown — set_domains requires zero outstanding grants, which the
         # cleanup loop guarantees). ``domains == 1`` leaves the pool alone.
@@ -1273,7 +1320,22 @@ class MultiQueryEngine:
                 )
                 if budget < 1:
                     continue
-                if self._width_fb_on and entry.algorithm is not None:
+                if self._width_fb_on and entry.algorithms:
+                    # heterogeneous fused victim: the claimable tail mixes
+                    # compute bodies — size the thief gang against the
+                    # algorithms it would actually run (the tags of the
+                    # slots the claim would take; the full member set when
+                    # the tail preview is empty)
+                    tail = entry.run.tail_tags(
+                        budget * (STEAL_CHUNK if entry.run.grinding else 1)
+                    )
+                    want = registry.thief_gang_width_mixed(
+                        self.feedback,
+                        tail or list(entry.algorithms),
+                        max(entry.run.bounds.t_max, 1),
+                        budget,
+                    )
+                elif self._width_fb_on and entry.algorithm is not None:
                     # size the thief gang from measured width efficiency:
                     # among pow2 widths inside the governed budget, request
                     # the one that measured best for this algorithm, not
@@ -1442,19 +1504,41 @@ class MultiQueryEngine:
             # plus the overhead slice, fully settled *before* execution so
             # the backend receives each share's final modeled cost (the
             # ModeledBackend echoes it; measuring backends ignore it)
+            scans: list[float] = []
             for slot, positions, local_ids in group.split(batch):
+                frac = local_ids.size / max(slot.prep.packages.n_packages, 1)
                 work_ns = member_work_ns(
                     slot.payload.executor.desc,
                     self.hw,
                     slot.prep.work,
                     t_eff,
-                    local_ids.size / max(slot.prep.packages.n_packages, 1),
+                    frac,
                 )
                 # each member drags its own off-domain mass over the
                 # interconnect even inside a gang (1.0 on single-domain runs)
                 work_ns *= slot.payload.remote_factor
+                if group.scan_shared:
+                    scans.append(
+                        member_scan_ns(
+                            slot.payload.executor.desc,
+                            self.hw,
+                            slot.prep.work,
+                            t_eff,
+                            frac,
+                        )
+                        * slot.payload.remote_factor
+                    )
                 shares.append([slot, positions, local_ids, work_ns, 0.0])
-                total += work_ns
+            if group.scan_shared and len(shares) > 1:
+                # heterogeneous scan sharing: the members of this batch ride
+                # ONE traversal of the CSR shard — the topology-stream slice
+                # of the edge term is charged once (the widest member's
+                # scan), not once per member; each share keeps its own
+                # compute body's full cost
+                adjusted = apply_scan_sharing([s[3] for s in shares], scans)
+                for share, a in zip(shares, adjusted):
+                    share[3] = a
+            total = sum(s[3] for s in shares)
             ov = gang_overhead_ns(self.hw, t_eff, int(batch.size), group.n_packages)
             total += ov
             for share in shares:
@@ -1499,24 +1583,41 @@ class MultiQueryEngine:
             gang_cap = (
                 self.pool.capacity_of(dom) if dom is not None else self.pool.capacity
             )
+            member_descs = [s.executor.desc for s, _ in chunk]
+            member_algos = [d.name for d in member_descs]
+            mixed = hetero and len(set(member_algos)) > 1
             gang_width = None
             if self._width_fb_on:
                 # measured-width planning: one thread_bounds call on the
                 # members' aggregated IterationWork, each candidate width
                 # scored by the feedback table's measured width ratio —
-                # replaces the blind capped-T_max-sum width choice
-                gang_width = plan_gang_width(
-                    staged_triples,
-                    chunk[0][0].executor.desc,
-                    self.hw,
-                    capacity=gang_cap,
-                    feedback=self.feedback,
-                )
+                # replaces the blind capped-T_max-sum width choice. A mixed
+                # gang scores the combined per-algorithm work with each
+                # algorithm's OWN correction (and falls back to the most
+                # conservative member when any entry is censored)
+                if mixed:
+                    gang_width = plan_hetero_gang_width(
+                        staged_triples,
+                        member_descs,
+                        self.hw,
+                        capacity=gang_cap,
+                        feedback=self.feedback,
+                    )
+                else:
+                    gang_width = plan_gang_width(
+                        staged_triples,
+                        member_descs[0],
+                        self.hw,
+                        capacity=gang_cap,
+                        feedback=self.feedback,
+                    )
             group = FusionGroup.build(
                 staged_triples,
                 capacity=gang_cap,
                 gang_width=gang_width,
                 domain=dom,
+                algorithms=member_algos if hetero else None,
+                scan_shared=mixed,
             )
             driver_sid -= 1
             driver = _SessionState(
@@ -1543,8 +1644,12 @@ class MultiQueryEngine:
                 stealable=True,
                 eager_backlog=True,
                 domain=dom,
+                tags=group.packages.tags,
             )
             if registry is not None:
+                # a mixed gang has no single algorithm name — publish the
+                # distinct member set instead, so a thief sizes its gang
+                # against the blend of compute bodies it would actually run
                 registry.publish(
                     driver.sid,
                     driver.srun,
@@ -1552,8 +1657,9 @@ class MultiQueryEngine:
                     graph_key=driver.graph_key,
                     payload=driver,
                     fused=True,
-                    algorithm=chunk[0][0].executor.desc.name,
+                    algorithm=None if mixed else member_algos[0],
                     domain=dom,
+                    algorithms=tuple(group.algorithms) if mixed else (),
                 )
             drivers.append(driver)
             _sync_running()
@@ -1958,8 +2064,16 @@ class MultiQueryEngine:
                         # gang's members share one grant and one interleaved
                         # package table, so a gang must never straddle a
                         # domain boundary (``None`` on single-domain runs —
-                        # the key degenerates to the old (graph, algorithm))
-                        fkey = (st.graph_key, ex.desc.name, st.domain)
+                        # the key degenerates to the old (graph, algorithm)).
+                        # With heterogeneous scan-sharing on, the key DROPS
+                        # the algorithm: every session on the same
+                        # (graph, domain) rendezvouses regardless of what it
+                        # computes — one topology pass, many compute bodies
+                        fkey = (
+                            st.graph_key,
+                            None if hetero else ex.desc.name,
+                            st.domain,
+                        )
                         waiting = fusion_staged.setdefault(fkey, [])
                         if not waiting:
                             _push(t + fusing.hold_ns, EV_FUSE, fkey)
@@ -2063,6 +2177,7 @@ class MultiQueryEngine:
             # admission slots, or the resize hook on the shared engine state
             self._wfb_active = prev_wfb
             self.backend = prev_backend
+            self.admission.frontier_fn = prev_frontier_fn
             self.pool.remove_resize_hook(_on_resize)
             for s in states + drivers:
                 if s.srun is not None:
@@ -2081,6 +2196,22 @@ class MultiQueryEngine:
             # requires
             if self.pool.domains != prev_domains:
                 self.pool.set_domains(prev_domains)
+
+        # censor-triggered recalibration (ROADMAP item): when the run's
+        # measured ratios clipped so hard the censoring gate tripped, the
+        # preset is far from the executing host — refit it from the raw
+        # (width, modeled, measured) pairs instead of just neutralizing the
+        # width table, then reset the table so subsequent runs accumulate a
+        # *readable* differential width signal against the converged preset.
+        if (
+            cfg.recalibrate
+            and self.feedback is not None
+            and self.feedback.censor_tripped()
+        ):
+            self.hw = recalibrate_preset(
+                self.hw, self.feedback.recalibration_pairs()
+            )
+            self.feedback.reset_width_state()
 
         if governor is not None:
             report.resize_events = list(governor.resize_events)

@@ -92,6 +92,11 @@ class StealEntry:
     # algorithm name of the victim's query (gang members share one): the key
     # thieves use to look up measured width efficiency when sizing their gang
     algorithm: str | None = None
+    # distinct member algorithms of a *heterogeneous* scan-shared gang
+    # (``algorithm`` stays None there — no single name covers the run);
+    # thieves combine the tags of the claimable tail with this to size a
+    # mixed-body gang (:meth:`StealRegistry.thief_gang_width_mixed`)
+    algorithms: tuple[str, ...] = ()
     # locality domain the victim's run is placed on (None = single-domain
     # pool); thieves prefer same-domain victims and pay the contention
     # model's migration penalty when they reach across
@@ -125,6 +130,7 @@ class StealRegistry:
         fused: bool = False,
         algorithm: str | None = None,
         domain: int | None = None,
+        algorithms: tuple[str, ...] = (),
     ) -> StealEntry:
         """Register ``run`` as a claimable victim under ``key`` (replacing
         any previous entry for that key); returns the live entry."""
@@ -137,6 +143,7 @@ class StealRegistry:
             fused=fused,
             algorithm=algorithm,
             domain=domain,
+            algorithms=algorithms,
         )
         self._entries[key] = entry
         return entry
@@ -198,6 +205,42 @@ class StealRegistry:
         w = 1
         while w <= cap:
             eff = w / feedback.width_ratio(algorithm, w)
+            if eff > best_eff:
+                best_w, best_eff = w, eff
+            w <<= 1
+        return best_w
+
+    @staticmethod
+    def thief_gang_width_mixed(
+        feedback: "CostFeedback",
+        algorithms: list[str] | tuple[str, ...],
+        t_max: int,
+        budget: int,
+    ) -> int:
+        """:meth:`thief_gang_width` for a *mixed* claim off a heterogeneous
+        fused victim: the stolen tail interleaves several algorithms, so
+        each candidate width is scored by ``w`` over the **mean** of the
+        member algorithms' width ratios — the thief's one gang runs every
+        compute body in turn, so its effective efficiency at width ``w`` is
+        the blend, not any single table row. One algorithm degenerates to
+        :meth:`thief_gang_width` exactly; an empty list falls back to ratio
+        1.0 everywhere (the cold-table maximal power of two)."""
+        names = list(algorithms)
+        if len(names) == 1:
+            return StealRegistry.thief_gang_width(
+                feedback, names[0], t_max, budget
+            )
+        cap = min(max(int(t_max), 1), int(budget))
+        if cap < 1:
+            return 0
+        best_w, best_eff = 0, 0.0
+        w = 1
+        while w <= cap:
+            if names:
+                ratio = sum(feedback.width_ratio(a, w) for a in names) / len(names)
+            else:
+                ratio = 1.0
+            eff = w / ratio
             if eff > best_eff:
                 best_w, best_eff = w, eff
             w <<= 1

@@ -64,6 +64,32 @@ def test_new_row_is_reported_not_gated(files, capsys):
     assert "fresh-only" in capsys.readouterr().out
 
 
+def test_whole_new_figure_block_is_reported_not_gated(files, capsys):
+    """A PR that lands an entire new figure (fig20's three-variant ladder)
+    contributes several fresh-only rows at once — none may gate, all must be
+    reported, and the shared rows still gate normally."""
+    fig20 = [
+        _row(f"fig20/hetero_burst/sf13/{policy}/s12", eps)
+        for policy, eps in (
+            ("nofuse", 1.4e9), ("homofuse", 1.87e9), ("heterofuse", 2.1e9),
+        )
+    ]
+    base, fresh = files(
+        [_row("fig16/fuse/sf13/fused/s12", 100.0)],
+        [_row("fig16/fuse/sf13/fused/s12", 100.0), *fig20],
+    )
+    assert main([base, fresh]) == 0
+    out = capsys.readouterr().out
+    assert all(row["name"] in out for row in fig20)
+    assert out.count("fresh-only") == 3
+    # the new block does not shield a co-present shared-row regression
+    base, fresh = files(
+        [_row("fig16/fuse/sf13/fused/s12", 100.0)],
+        [_row("fig16/fuse/sf13/fused/s12", 80.0), *fig20],
+    )
+    assert main([base, fresh]) == 1
+
+
 def test_disappeared_row_is_reported_not_gated(files, capsys):
     base, fresh = files(
         [_row("fig/a/s1", 100.0), _row("fig/old/s1", 50.0)],

@@ -375,3 +375,127 @@ def test_engine_width_histogram_reports_delivered_widths(small_rmat):
     assert sum(hist.values()) == sum(
         len(t.runs) for r in rep.records for t in r.traces
     )
+
+
+# ---------------- censor-triggered recalibration (hardware model refit) ----------------
+
+def test_censor_gate_trips_only_on_predominant_clipping():
+    fb = CostFeedback()
+    assert not fb.censor_tripped()  # cold
+    for _ in range(10):
+        fb.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=1.5)
+    assert not fb.censor_tripped()  # in-window ratios
+    fb2 = CostFeedback()
+    for _ in range(10):
+        fb2.observe("a", "parallel", width=8, modeled_ns=1.0, measured_ns=1e3)
+    assert fb2.censor_tripped()
+    assert not fb2.censor_tripped(min_observations=11)  # not enough evidence
+    pairs = fb2.recalibration_pairs()
+    assert len(pairs) == 10
+    assert all(p == (8, 1.0, 1e3) for p in pairs)  # raw, unclipped
+    fb2.reset_width_state()
+    assert not fb2.censor_tripped() and fb2.recalibration_pairs() == []
+    assert fb2.width_ratio("a", 8) == 1.0
+
+
+def test_recalibrate_preset_scales_latencies_to_the_host():
+    """A uniformly 20x-slower host: the refit preset's atomic latencies land
+    at 20x the original on every (level, thread) slot, so subsequent
+    measured/modeled ratios sit near 1.0 — back inside the clip window."""
+    from repro.core import recalibrate_preset
+
+    hw = XEON_E5_2660V4
+    assert recalibrate_preset(hw, []) is hw           # no data, same object
+    assert recalibrate_preset(hw, [(4, 0.0, 1.0)]) is hw  # unusable pairs
+    pairs = [(t, 1.0, 20.0) for t in hw.thread_counts for _ in range(3)]
+    new = recalibrate_preset(hw, pairs)
+    assert new is not hw
+    for t in hw.thread_counts:
+        for lvl in hw.levels:
+            m = 0.5 * lvl.capacity
+            assert new.l_atomic(t, m) == pytest.approx(
+                20.0 * hw.l_atomic(t, m), rel=0.05
+            )
+
+
+def test_recalibrate_preset_per_width_offsets():
+    """Non-uniform host: wide execution 30x off, narrow 10x off — each
+    thread-count slot converges to its own measured ratio (the paper's
+    per-T latency columns, retrained from runtime data)."""
+    from repro.core import recalibrate_preset
+
+    hw = XEON_E5_2660V4
+    ts = hw.thread_counts
+    pairs = [(ts[0], 1.0, 10.0)] * 5 + [(ts[-1], 1.0, 30.0)] * 5
+    new = recalibrate_preset(hw, pairs)
+    m = 0.5 * hw.levels[0].capacity
+    assert new.l_atomic(ts[0], m) == pytest.approx(
+        10.0 * hw.l_atomic(ts[0], m), rel=0.05
+    )
+    assert new.l_atomic(ts[-1], m) == pytest.approx(
+        30.0 * hw.l_atomic(ts[-1], m), rel=0.05
+    )
+
+
+class _ScaledBackend:
+    """A deliberately mis-scaled substrate: the 'host' runs every step at a
+    fixed multiple of the preset's modeled cost, far outside the clip
+    window — the regression scenario for the censoring gate."""
+
+    name = "scaled"
+
+    def __init__(self, factor=20.0):
+        from repro.core import ModeledBackend
+
+        self._inner = ModeledBackend()
+        self.factor = factor
+
+    def prepare(self, executor, prep, shard=None):
+        return self._inner.prepare(executor, prep, shard)
+
+    def execute(self, plan, step, modeled_ns=0.0):
+        return self._inner.execute(plan, step, modeled_ns) * self.factor
+
+
+def test_recalibrate_flag_refits_engine_preset_when_gate_trips(small_rmat):
+    """EngineConfig(recalibrate=True) + a 20x mis-scaled hardware model:
+    after the run the engine's preset converged toward the host (atomic
+    latencies ~20x) and the feedback tables were reset so the next run
+    accumulates a readable differential signal."""
+    fb = CostFeedback()
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4, pool_capacity=8, policy="scheduler", feedback=fb
+    )
+    rep = eng.run_sessions(
+        _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
+        config=EngineConfig(
+            width_feedback=True, recalibrate=True, backend=_ScaledBackend(20.0)
+        ),
+    )
+    assert rep.total_edges > 0
+    assert eng.hw is not XEON_E5_2660V4, "censoring gate never tripped"
+    m = 0.5 * eng.hw.levels[0].capacity
+    for t in (1, eng.hw.thread_counts[-1]):
+        assert eng.hw.l_atomic(t, m) == pytest.approx(
+            20.0 * XEON_E5_2660V4.l_atomic(t, m), rel=0.25
+        )
+    # tables reset: no stale corrections learned against the old preset
+    assert not fb.censor_tripped()
+    assert fb.recalibration_pairs() == []
+    assert fb.width_ratio(PR_PULL.name, 8) == 1.0
+
+
+def test_recalibrate_off_leaves_preset_alone(small_rmat):
+    """Same mis-scaled run without the flag: the gate trips but the preset
+    must not be touched (default-off path)."""
+    fb = CostFeedback()
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4, pool_capacity=8, policy="scheduler", feedback=fb
+    )
+    eng.run_sessions(
+        _mixed_mk(small_rmat), sessions=4, queries_per_session=1,
+        config=EngineConfig(width_feedback=True, backend=_ScaledBackend(20.0)),
+    )
+    assert eng.hw is XEON_E5_2660V4
+    assert fb.censor_tripped()
+    assert fb.recalibration_pairs()

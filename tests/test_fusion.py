@@ -6,16 +6,24 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
-from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.algorithms import BFSExecutor, DegreeCountExecutor, PageRankExecutor
 from repro.core import (
     CapacityGovernor,
+    CostFeedback,
+    DEGREE_COUNT,
     EngineConfig,
     FusionConfig,
     FusionGroup,
+    IterationWork,
     MultiQueryEngine,
+    PR_PULL,
     ThreadBounds,
     XEON_E5_2660V4,
+    apply_scan_sharing,
     make_packages,
+    member_scan_ns,
+    plan_gang_width,
+    plan_hetero_gang_width,
 )
 from repro.core.fusion import should_fuse
 from repro.graph import rmat_graph
@@ -112,7 +120,7 @@ def _mk_pr(graph, max_iters=3):
 
 def _run(graph, *, sessions=4, pool=8, fuse=False, steal=False, max_iters=3,
          governor=None, priorities=None, arrivals=None, mk=None,
-         fusion=None, queries=1):
+         fusion=None, queries=1, hetero=False):
     eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=pool, policy="scheduler")
     rep = eng.run_sessions(
         mk or _mk_pr(graph, max_iters=max_iters),
@@ -125,6 +133,7 @@ def _run(graph, *, sessions=4, pool=8, fuse=False, steal=False, max_iters=3,
             governor=governor,
             priorities=priorities,
             arrivals=arrivals,
+            hetero_fuse=hetero,
         ),
     )
     assert eng.pool.available == eng.pool.capacity, "grant leaked"
@@ -268,6 +277,216 @@ def test_stealing_from_fused_gang_conserves_work(medium_rmat):
         r.stolen_packages for r in rep.records
     )
     assert all(r.session >= 0 for r in rep.records)
+
+
+# ---------------- heterogeneous scan-sharing fusion ----------------
+
+def test_scan_sharing_conserves_totals_exactly():
+    """The gang pays max(scans); the savings Σscan − max(scan) come off the
+    members pro rata to their scan slice — Σ adjusted == Σ shares − savings
+    to the last float (the split-back conservation invariant)."""
+    shares = [100.0, 200.0, 300.0]
+    scans = [50.0, 80.0, 20.0]
+    adjusted = apply_scan_sharing(shares, scans)
+    savings = sum(scans) - max(scans)
+    assert sum(adjusted) == pytest.approx(sum(shares) - savings)
+    for adj, share, scan in zip(adjusted, shares, scans):
+        assert adj == pytest.approx(share - savings * scan / sum(scans))
+        # the discount never exceeds the member's own scan slice
+        assert share - scan <= adj <= share
+
+
+def test_scan_sharing_noop_cases():
+    assert apply_scan_sharing([100.0], [40.0]) == [100.0]     # solo member
+    assert apply_scan_sharing([1.0, 2.0], [0.0, 0.0]) == [1.0, 2.0]
+    # one member carries all the scan → nothing is redundant
+    assert apply_scan_sharing([1.0, 2.0], [0.0, 5.0]) == [1.0, 2.0]
+
+
+@settings(deadline=None, max_examples=50)
+@given(n=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_scan_sharing_conservation_property(n, seed):
+    rng = np.random.default_rng(seed)
+    shares = [float(s) for s in 10.0 ** rng.uniform(0, 9, size=n)]
+    scans = [s * float(f) for s, f in zip(shares, rng.uniform(0, 1, size=n))]
+    adjusted = apply_scan_sharing(shares, scans)
+    savings = max(sum(scans) - max(scans), 0.0) if n > 1 else 0.0
+    assert sum(adjusted) == pytest.approx(sum(shares) - savings, rel=1e-9)
+    for adj, share, scan in zip(adjusted, shares, scans):
+        assert adj <= share + 1e-9 * share
+        assert adj >= share - scan - 1e-9 * share  # compute is never discounted
+
+
+def _work(frontier, edges, m_bytes=None):
+    return IterationWork(
+        frontier=float(frontier), edges=float(edges), found=float(frontier),
+        touched=float(frontier),
+        m_bytes=float(m_bytes if m_bytes is not None else frontier * 8),
+    )
+
+
+def test_member_scan_ns_is_the_plain_memory_edge_slice():
+    """PR's pull edge term streams CSR memory → positive scan that divides
+    by the width; degree counting's edge term is pure atomics (n_mem == 0)
+    → zero scan, so it never discounts a gang it rides in."""
+    hw = XEON_E5_2660V4
+    w = _work(8192, 131072)
+    assert DEGREE_COUNT.e.n_mem == 0
+    assert member_scan_ns(DEGREE_COUNT, hw, w, 8, 1.0) == 0.0
+    s1 = member_scan_ns(PR_PULL, hw, w, 1, 1.0)
+    s8 = member_scan_ns(PR_PULL, hw, w, 8, 1.0)
+    assert s1 > 0 and s8 == pytest.approx(s1 / 8)
+    assert member_scan_ns(PR_PULL, hw, w, 8, 0.25) == pytest.approx(s8 / 4)
+
+
+def test_hetero_group_tags_and_member_groups():
+    staged = [_member(2), _member(3), _member(2)]
+    grp = FusionGroup.build(
+        staged, capacity=16, algorithms=["pr", "bfs", "pr"], scan_shared=True
+    )
+    assert grp.scan_shared and grp.heterogeneous
+    assert grp.algorithms == ["pr", "bfs"]
+    groups = grp.member_groups()
+    assert len(groups["pr"]) == 2 and len(groups["bfs"]) == 1
+    # the interleaved package table tags each fused slot with the owning
+    # member's algorithm — the scheduler's per-package compute-body map
+    tags = grp.packages.tags
+    assert tags is not None and tags.shape == (grp.n_packages,)
+    for fid in range(grp.n_packages):
+        ((owner, _, _),) = grp.split(np.array([fid]))
+        assert str(tags[fid]) == owner.algorithm
+
+
+def test_homogeneous_group_has_no_tags():
+    grp = FusionGroup.build([_member(2), _member(4)], capacity=16)
+    assert grp.packages.tags is None
+    assert not grp.heterogeneous and grp.algorithms == []
+    assert not grp.scan_shared
+
+
+def test_plan_hetero_width_single_algorithm_delegates():
+    hw = XEON_E5_2660V4
+    staged = [
+        (None, SimpleNamespace(work=_work(4096, 65536)), _bounds(t_max=16)),
+        (None, SimpleNamespace(work=_work(4096, 65536)), _bounds(t_max=16)),
+    ]
+    assert plan_hetero_gang_width(
+        staged, [PR_PULL, PR_PULL], hw, capacity=16
+    ) == plan_gang_width(staged, PR_PULL, hw, capacity=16)
+
+
+def test_plan_hetero_width_mixed_is_pow2_within_cap():
+    hw = XEON_E5_2660V4
+    staged = [
+        (None, SimpleNamespace(work=_work(8192, 131072)), _bounds(t_max=16)),
+        (None, SimpleNamespace(work=_work(100, 200)), _bounds(t_max=16)),
+    ]
+    t = plan_hetero_gang_width(staged, [PR_PULL, DEGREE_COUNT], hw, capacity=16)
+    assert t in (2, 4, 8, 16)
+
+
+def test_plan_hetero_width_censored_falls_back_most_conservative():
+    """When one member algorithm's width signal is clip-censored, the gang
+    must not run wider than the most conservative member's own pure-model
+    preference — the censored algorithm cannot veto widths it can't rank."""
+    hw = XEON_E5_2660V4
+    # a big scan-heavy member (prefers wide) + a tiny overhead-dominated one
+    # (its pure model prefers the narrowest width)
+    staged = [
+        (None, SimpleNamespace(work=_work(8192, 131072)), _bounds(t_max=16)),
+        (None, SimpleNamespace(work=_work(20, 40)), _bounds(t_max=16)),
+    ]
+    descs = [PR_PULL, DEGREE_COUNT]
+    cold = plan_hetero_gang_width(staged, descs, hw, capacity=16)
+    assert cold >= 4  # the scan-heavy member dominates a cold sweep
+
+    fb = CostFeedback()
+    fb.observe(DEGREE_COUNT.name, "parallel", modeled_ns=1.0, measured_ns=2.0)
+    for w in (2, 4, 8, 16):
+        # ratios far outside the clip window → censored width entries
+        fb.observe(
+            DEGREE_COUNT.name, "parallel", width=w,
+            modeled_ns=1.0, measured_ns=1e6,
+        )
+    assert fb.width_censored(DEGREE_COUNT.name, 2)
+    assert plan_hetero_gang_width(
+        staged, descs, hw, capacity=16, feedback=fb
+    ) == 2
+
+
+def _mixed_burst_mk(graph):
+    deg = np.asarray(graph.out_degrees())
+    hub = int(np.argsort(-deg)[0])
+
+    def mk(s, q):
+        if s == 2:
+            return DegreeCountExecutor(graph)
+        if s == 3:
+            return BFSExecutor(graph, hub)
+        return PageRankExecutor(graph, mode="pull", max_iters=3, tol=0)
+
+    return mk
+
+
+def test_hetero_burst_fuses_across_algorithms_and_conserves_work(medium_rmat):
+    """Same (graph, domain), different algorithms: with ``hetero_fuse`` the
+    rendezvous drops the algorithm and the lone BFS session — which
+    per-algorithm fusion can never gang (no second BFS to pair with) — rides
+    the PR gang. Every record still books exactly its own work."""
+    mk = _mixed_burst_mk(medium_rmat)
+    unfused = _run(medium_rmat, mk=mk, fuse=False)
+    homo = _run(medium_rmat, mk=mk, fuse=True, fusion=FusionConfig(hold_ns=2e4))
+    het = _run(medium_rmat, mk=mk, fuse=True, hetero=True,
+               fusion=FusionConfig(hold_ns=2e4))
+    assert het.fusion_events, "no hetero gang formed on a contended mixed burst"
+    for ru, rh in zip(unfused.records, het.records):
+        assert rh.edges == ru.edges
+        assert rh.iterations == ru.iterations
+        assert [len(tr.runs) for tr in rh.traces] == [
+            len(tr.runs) for tr in ru.traces
+        ]
+    bfs_homo = [r for r in homo.records if r.algorithm == "bfs_top_down"][0]
+    bfs_het = [r for r in het.records if r.algorithm == "bfs_top_down"][0]
+    assert bfs_homo.fused_packages == 0  # alone in its per-algorithm group
+    assert bfs_het.fused_packages > 0    # fused across algorithms
+
+
+def test_hetero_fuse_implies_fuse():
+    """``EngineConfig(hetero_fuse=True)`` alone must enable the fusion path
+    — a scan-shared gang is a fused gang."""
+    g = _PROPERTY_GRAPH
+    rep = _run(g, mk=_mixed_burst_mk(g), fuse=False, hetero=True,
+               fusion=FusionConfig(hold_ns=2e4))
+    assert rep.fusion_events
+
+
+def test_hetero_defuse_on_preemption_resumes_own_algorithm(medium_rmat):
+    """A governor fence mid-hetero-gang dissolves it; each member resumes on
+    its *own* algorithm's residual package ids (wrong compute body would
+    corrupt edges/iterations against the unfused reference)."""
+    mk_base = _mixed_burst_mk(medium_rmat)
+
+    def mk(s, q):
+        if s == 4:  # the late high-priority session that triggers the fence
+            return PageRankExecutor(medium_rmat, mode="pull", max_iters=3, tol=0)
+        return mk_base(s, q)
+
+    gov = CapacityGovernor(
+        p_min=8, p_max=8, window_ns=1e5, cooldown_ns=1e12, preempt=True
+    )
+    unfused = _run(medium_rmat, sessions=5, pool=8, mk=mk)
+    rep = _run(
+        medium_rmat, sessions=5, pool=8, fuse=True, hetero=True, mk=mk,
+        governor=gov, fusion=FusionConfig(hold_ns=2e4),
+        priorities=[0, 0, 0, 0, 1],
+        arrivals=[0.0, 0.0, 0.0, 0.0, 2e5],
+    )
+    assert rep.fusion_events
+    assert rep.preemptions, "governor never fenced the hetero gang"
+    assert any(tr.preempted > 0 for r in rep.records for tr in r.traces)
+    for ru, rf in zip(unfused.records, rep.records):
+        assert rf.edges == ru.edges
+        assert rf.iterations == ru.iterations
 
 
 @settings(deadline=None, max_examples=8)

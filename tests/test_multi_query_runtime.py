@@ -98,6 +98,70 @@ def test_admission_cap_derives_from_target_share():
     assert admitted == [True] * 4 + [False] * 2
 
 
+def test_admission_cap_follows_measured_efficiency_frontier():
+    """Width-feedback-aware admission: an installed frontier callable shrinks
+    the per-session share guarantee to the measured efficiency frontier —
+    narrow measured efficiency admits *more* sessions; a frontier at or above
+    ``target_share`` leaves the static heuristic untouched (the cap never
+    drops below it); ``None`` is the static path byte for byte."""
+    pool = WorkerPool(16)
+    ctrl = AdmissionController(target_share=4)
+    assert ctrl.cap(pool) == 4
+    ctrl.frontier_fn = lambda: 2   # wide execution measures poorly
+    assert ctrl.cap(pool) == 8     # guarantee only what sessions can use
+    ctrl.frontier_fn = lambda: 8   # wide measures fine
+    assert ctrl.cap(pool) == 4     # never lower than the static cap
+    ctrl.frontier_fn = lambda: 0   # degenerate frontier clamps to 1
+    assert ctrl.cap(pool) == 16
+    ctrl.frontier_fn = None
+    assert ctrl.cap(pool) == 4
+    # max_inflight still clamps on top of the adaptive share
+    narrow = AdmissionController(target_share=4, max_inflight=5)
+    narrow.frontier_fn = lambda: 1
+    assert narrow.cap(pool) == 5
+
+
+def test_adaptive_admission_is_inert_under_neutral_feedback(medium_rmat):
+    """``EngineConfig(adaptive_admission=True)`` with the modeled backend:
+    every measured ratio is 1.0, the width table's frontier is the full
+    pool, and scheduling is byte-identical to the flag being off. The
+    installed frontier hook must be restored after the run."""
+    from repro.core import CostFeedback
+
+    def run(adaptive):
+        fb = CostFeedback()
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4, pool_capacity=4, policy="scheduler", feedback=fb
+        )
+        rep = eng.run_sessions(
+            _mk_pr(medium_rmat), sessions=8, queries_per_session=1,
+            config=EngineConfig(
+                width_feedback=True, adaptive_admission=adaptive
+            ),
+        )
+        assert eng.admission.frontier_fn is None  # restored in teardown
+        return rep
+
+    off, on = run(False), run(True)
+    assert [r.modeled_ns for r in off.records] == [
+        r.modeled_ns for r in on.records
+    ]
+    assert off.makespan_modeled_ns == on.makespan_modeled_ns
+    assert on.admission_cap == off.admission_cap == 4
+
+
+def test_adaptive_admission_requires_width_feedback(medium_rmat):
+    """Without an active width table there is no frontier to consult — the
+    flag must be a no-op, not an error."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    rep = eng.run_sessions(
+        _mk_pr(medium_rmat), sessions=6, queries_per_session=1,
+        config=EngineConfig(adaptive_admission=True),
+    )
+    assert eng.admission.frontier_fn is None
+    assert len(rep.records) == 6
+
+
 def test_admission_waiters_pop_by_priority():
     """A latency-sensitive waiter must not queue behind the low-prio backlog."""
     from types import SimpleNamespace

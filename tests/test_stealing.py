@@ -6,9 +6,11 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
-from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.algorithms import BFSExecutor, DegreeCountExecutor, PageRankExecutor
 from repro.core import (
+    CostFeedback,
     EngineConfig,
+    FusionConfig,
     MultiQueryEngine,
     PackageScheduler,
     QueryRecord,
@@ -199,6 +201,124 @@ def test_width_capped_parallel_run_is_stealable():
     srun.close()
     pool.release(taken)
     assert pool.available == 16
+
+
+# ---------------- heterogeneous victims: tagged tails, mixed thief gangs ----------------
+
+def test_tail_tags_reports_trailing_algorithms():
+    """The claimable tail of a tagged (heterogeneous fused) run maps to the
+    distinct algorithms a thief would execute — first-seen order, no
+    duplicates; an untagged run reports nothing."""
+    pool = WorkerPool(8)
+    taken = pool.request(7)
+    b = _bounds()
+    pkgs = make_packages(np.full(200, 4), b, variance_ratio=1.0)
+    tags = np.asarray(["pr" if i % 2 == 0 else "bfs" for i in range(pkgs.n_packages)])
+    srun = PackageScheduler(pool, seq_package_limit=4).begin(
+        pkgs, b, stealable=True, tags=tags
+    )
+    srun.next_step()
+    backlog = srun.stealable_backlog
+    assert backlog > 2
+    # the full tail interleaves both algorithms
+    assert sorted(srun.tail_tags(backlog)) == ["bfs", "pr"]
+    # a 1-package claim maps to exactly the fence-adjacent package's tag
+    order = [int(p) for p in pkgs.order[: pkgs.n_packages]]
+    assert srun.tail_tags(1) == [str(tags[order[-1]])]
+    assert srun.tail_tags(0) == []
+    srun.close()
+
+    untagged = PackageScheduler(pool, seq_package_limit=4).begin(
+        pkgs, b, stealable=True
+    )
+    untagged.next_step()
+    assert untagged.tail_tags(5) == []
+    untagged.close()
+    pool.release(taken)
+
+
+def _seeded_mixed_fb():
+    """'a' scales fine at every width; 'b' measures badly wide (in-window
+    ratios, so nothing is censored)."""
+    fb = CostFeedback()
+    fb.observe("a", "parallel", modeled_ns=1.0, measured_ns=1.0)
+    fb.observe("b", "parallel", modeled_ns=1.0, measured_ns=1.0)
+    for w in (2, 4, 8, 16):
+        fb.observe("a", "parallel", width=w, modeled_ns=1.0, measured_ns=1.0)
+        for _ in range(20):
+            fb.observe(
+                "b", "parallel", width=w, modeled_ns=1.0,
+                measured_ns=1.0 if w <= 4 else 7.9,  # bad wide, inside the clip
+            )
+    return fb
+
+
+def test_thief_gang_width_mixed_blends_member_ratios():
+    fb = _seeded_mixed_fb()
+    assert StealRegistry.thief_gang_width(fb, "a", 16, 16) == 16
+    narrow = StealRegistry.thief_gang_width(fb, "b", 16, 16)
+    assert narrow <= 4
+    mixed = StealRegistry.thief_gang_width_mixed(fb, ["a", "b"], 16, 16)
+    # the blend sits between the pure members: 'b' pulls the gang narrower
+    # than 'a' alone would run, but cannot be ignored
+    assert narrow <= mixed < 16
+    # degenerate cases: one algorithm delegates exactly, empty list is the
+    # cold-table maximal power of two, and a zero budget admits nobody
+    assert StealRegistry.thief_gang_width_mixed(
+        fb, ["b"], 16, 16
+    ) == StealRegistry.thief_gang_width(fb, "b", 16, 16)
+    assert StealRegistry.thief_gang_width_mixed(fb, [], 16, 16) == 16
+    assert StealRegistry.thief_gang_width_mixed(fb, ["a", "b"], 16, 0) == 0
+
+
+def test_publish_carries_member_algorithms():
+    reg = StealRegistry()
+    entry = reg.publish(
+        0, _fake_run(5), fused=True, algorithms=("pr_pull", "bfs")
+    )
+    assert entry.algorithms == ("pr_pull", "bfs")
+    assert reg.publish(1, _fake_run(5)).algorithms == ()
+
+
+def test_stolen_hetero_tail_runs_correct_compute_body(medium_rmat):
+    """A thief claiming over a *heterogeneous* gang's fence executes each
+    stolen slot through its owner's executor: per-member edges and
+    iterations match the unfused reference exactly (a wrong compute body
+    would corrupt the record of whichever member was stolen from)."""
+    deg = np.asarray(medium_rmat.out_degrees())
+    hub = int(np.argsort(-deg)[0])
+
+    def mk(s, q):
+        if s == 2:
+            return DegreeCountExecutor(medium_rmat)
+        if s == 3:  # short query: drains early, then turns thief
+            return BFSExecutor(medium_rmat, hub)
+        return PageRankExecutor(medium_rmat, mode="pull", max_iters=4, tol=0)
+
+    def run(steal, hetero):
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=5, policy="scheduler")
+        rep = eng.run_sessions(
+            mk, sessions=4, queries_per_session=1,
+            config=EngineConfig(
+                steal=steal, fuse=hetero, hetero_fuse=hetero,
+                fusion=FusionConfig(hold_ns=2e4) if hetero else None,
+            ),
+        )
+        assert eng.pool.available == eng.pool.capacity
+        return rep
+
+    unfused = run(steal=False, hetero=False)
+    rep = run(steal=True, hetero=True)
+    assert rep.fusion_events
+    for ru, rf in zip(unfused.records, rep.records):
+        assert rf.edges == ru.edges
+        assert rf.iterations == ru.iterations
+    fused_victim_steals = [e for e in rep.steal_events if e[2] < 0]
+    assert fused_victim_steals, "thief never claimed from the hetero gang"
+    assert sum(k for *_, k in fused_victim_steals) <= sum(
+        r.stolen_packages for r in rep.records
+    )
+    assert all(r.session >= 0 for r in rep.records)
 
 
 # ---------------- engine integration ----------------
