@@ -1,11 +1,23 @@
 """BENCH_sessions.json trend gate (ROADMAP item).
 
 Compares a freshly generated session trajectory against the committed
-baseline and fails (exit 1) when the *modeled* PEPS/TEPS of any shared row
-regresses by more than the threshold. Only ``modeled_eps`` is gated — it is
-produced by the deterministic discrete-event simulation, so a >10% move is a
-scheduling change, not host noise; ``us_per_call`` (real wall time) is
-reported but never gated.
+baseline and fails (exit 1) when any shared gated row regresses. Two gates,
+matched to the two clocks the engine runs on:
+
+* **Modeled rows** (``modeled_eps``): produced by the deterministic
+  discrete-event simulation, so a >10% move (``--threshold``) is a
+  scheduling change, not host noise; ``us_per_call`` (real wall time) is
+  reported but never gated.
+* **Measured rows** (``"measured": true``, value key ``ratio``): fig21's
+  naive-vs-scheduled wall ratios. Host speed divides out of the ratio, but
+  repeat noise does not — so the gate is noise-aware: a row fails only when
+  the fresh ratio drops below the baseline by more than a tolerance derived
+  from both rows' MAD spreads, ``max(K * (mad_base + mad_fresh),
+  FLOOR * baseline)`` (``--ratio-k`` / ``--ratio-floor``). The floor term
+  keeps a zero-MAD row (all repeats identical) from gating at machine
+  epsilon. Ratios measured on different host classes are incomparable —
+  when the two rows' ``host`` fingerprints differ, the row is reported but
+  not gated, like an informational row.
 
 Usage:
     cp BENCH_sessions.json /tmp/baseline.json
@@ -18,8 +30,8 @@ an existing file, so figures you did *not* rerun would be compared against
 byte-identical copies of themselves and report a meaningless +0.0%.
 
 Rows present on only one side (new figures, renamed policies) are reported
-but do not fail the gate. Rows flagged ``"informational": true`` (fig18's
-real wall-clock ``_wall`` workloads) are likewise reported but never gated —
+but do not fail the gate. Rows flagged ``"informational": true`` (the real
+wall-clock ``_wall`` workloads) are likewise reported but never gated —
 host speed cannot flake the deterministic modeled trajectory.
 """
 from __future__ import annotations
@@ -31,8 +43,10 @@ import sys
 
 def load_rows(path: str) -> dict[str, dict]:
     """Load a trajectory file, raising ``ValueError`` on any malformed shape
-    (invalid JSON, non-dict document, rows without name/modeled_eps) so the
-    gate can distinguish *broken input* (exit 2) from a regression (exit 1)."""
+    (invalid JSON, non-dict document, rows without a name or a value key) so
+    the gate can distinguish *broken input* (exit 2) from a regression (exit
+    1). A row's value key is ``modeled_eps``, or ``ratio`` when the row is
+    stamped ``"measured": true``."""
     with open(path) as f:
         try:
             data = json.load(f)
@@ -42,10 +56,26 @@ def load_rows(path: str) -> dict[str, dict]:
         raise ValueError(f"{path}: expected an object with a 'rows' list")
     rows: dict[str, dict] = {}
     for r in data.get("rows", []):
-        if not isinstance(r, dict) or "name" not in r or "modeled_eps" not in r:
+        key = "ratio" if isinstance(r, dict) and r.get("measured") else "modeled_eps"
+        if not isinstance(r, dict) or "name" not in r or key not in r:
             raise ValueError(f"{path}: malformed row {r!r}")
         rows[r["name"]] = r
     return rows
+
+
+def measured_tolerance(
+    base: dict, fresh: dict, *, k: float, floor: float
+) -> float:
+    """Allowed downward move for a measured-ratio row.
+
+    ``k`` scales the summed MAD spreads of the two measurements (each MAD is
+    a robust stand-in for one side's repeat noise; their sum bounds the
+    noise of the difference), and ``floor`` is a relative backstop so a
+    perfectly quiet row — MAD exactly 0 because every repeat landed on the
+    same ratio — still tolerates ordinary cross-run jitter instead of
+    failing on the next least-significant-digit wiggle."""
+    mads = float(base.get("ratio_mad", 0.0)) + float(fresh.get("ratio_mad", 0.0))
+    return max(k * mads, floor * float(base["ratio"]))
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -57,6 +87,19 @@ def main(argv: list[str] | None = None) -> int:
         type=float,
         default=0.10,
         help="max allowed fractional modeled_eps regression (default 0.10)",
+    )
+    ap.add_argument(
+        "--ratio-k",
+        type=float,
+        default=5.0,
+        help="measured rows: tolerance multiplier on summed MADs (default 5.0)",
+    )
+    ap.add_argument(
+        "--ratio-floor",
+        type=float,
+        default=0.2,
+        help="measured rows: minimum tolerance as a fraction of the baseline "
+        "ratio (default 0.2)",
     )
     args = ap.parse_args(argv)
 
@@ -75,9 +118,33 @@ def main(argv: list[str] | None = None) -> int:
     print(f"{'row':60s} {'baseline':>12s} {'fresh':>12s} {'delta':>8s}")
     for name in shared:
         if base[name].get("informational") or fresh[name].get("informational"):
-            # real wall-clock rows (fig18 `_wall` workloads): host speed is
+            # real wall-clock rows (`_wall` workloads): host speed is
             # reported for the record but must never fail the gate
             print(f"{name:60s} (informational; not gated)")
+            continue
+        if bool(base[name].get("measured")) != bool(fresh[name].get("measured")):
+            # a row that changed clocks between baseline and fresh has no
+            # comparable value — report it like a renamed row
+            print(f"{name:60s} (measured-flag mismatch; not gated)")
+            continue
+        if base[name].get("measured"):
+            b, f = float(base[name]["ratio"]), float(fresh[name]["ratio"])
+            if base[name].get("host") != fresh[name].get("host"):
+                print(f"{name:60s} {b:12.4g} {f:12.4g} (host changed; not gated)")
+                continue
+            if b <= 0:
+                continue
+            tol = measured_tolerance(
+                base[name], fresh[name], k=args.ratio_k, floor=args.ratio_floor
+            )
+            flag = ""
+            if b - f > tol:
+                failures.append((name, (f - b) / b))
+                flag = "  << REGRESSION"
+            print(
+                f"{name:60s} {b:12.4g} {f:12.4g} {(f - b) / b:+7.1%}"
+                f" (tol {tol:.3g}){flag}"
+            )
             continue
         b, f = base[name]["modeled_eps"], fresh[name]["modeled_eps"]
         if b <= 0:
@@ -94,12 +161,12 @@ def main(argv: list[str] | None = None) -> int:
 
     if failures:
         print(
-            f"\ntrend gate FAILED: {len(failures)} row(s) regressed more than "
-            f"{args.threshold:.0%}",
+            f"\ntrend gate FAILED: {len(failures)} row(s) regressed beyond "
+            "tolerance",
             file=sys.stderr,
         )
         return 1
-    print(f"\ntrend gate OK: {len(shared)} rows within {args.threshold:.0%}")
+    print(f"\ntrend gate OK: {len(shared)} rows within tolerance")
     return 0
 
 

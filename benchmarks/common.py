@@ -1,12 +1,23 @@
 """Shared benchmark plumbing. Every figure module exposes ``run() ->
-list[(name, us_per_call, derived)]``; run.py aggregates to CSV.
+list[(name, us_per_call, derived)]``; run.py aggregates to CSV. A figure may
+append a fourth element — a metadata dict — to any row; run.py merges it
+into the row's ``BENCH_sessions.json`` entry (fig21's measured rows stamp
+``backend``/``host``/``repeats``/``ratio_mad`` this way).
 
 Measured numbers are real wall-clock on this host (single CPU device);
 ``derived`` carries the figure's y-axis (PEPS/TEPS, modeled where the paper's
 hardware is required — flagged with a ``model:`` prefix in the name).
+
+**Measured mode** (fig21): instead of a single wall time, a measured
+experiment runs warmup + N interleaved repeats of a (naive, scheduled)
+variant pair and reports the *ratio* of their wall times with a MAD spread
+(:func:`measure_ratio`). The ratio divides host speed out — the same
+workload pair on a faster machine lands on the same ratio — which is what
+lets check_trend.py gate these rows instead of flagging them informational.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable
 
@@ -15,12 +26,25 @@ import numpy as np
 from repro.algorithms import BFSExecutor, DegreeCountExecutor, PageRankExecutor
 from repro.core import EngineConfig, MultiQueryEngine, QueryRecord, XEON_E5_2660V4
 
-Row = tuple[str, float, float]
+# (name, us_per_call, derived) or (name, us_per_call, derived, metadata)
+Row = tuple
 
 # Default for inter-session work-stealing in the session figures; run.py's
 # --steal/--no-steal flags override it. --no-steal reproduces the pre-stealing
 # scheduling behaviour for apples-to-apples trajectory comparisons.
 STEAL = True
+
+# Measured-mode defaults (fig21); run.py's --repeats flag overrides the
+# repeat count. Warmup pairs absorb jit compilation and the calibration
+# bootstrap (the first run trips the censoring gate and refits the preset)
+# before any recorded repeat.
+MEASURED_REPEATS = 5
+MEASURED_WARMUP = 1
+
+# Where the measured benchmarks persist their refit hardware model between
+# runs (CalibrationStore); repo-relative so CI can cache/upload it, and
+# .gitignore'd because its contents are host-specific by design.
+CALIBRATION_PATH = "BENCH_calibration.json"
 
 
 def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
@@ -33,6 +57,70 @@ def time_call(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
         fn()
         times.append((time.perf_counter_ns() - t0) / 1e3)
     return float(np.median(times))
+
+
+def mad(samples) -> float:
+    """Median absolute deviation — the robust spread the measured-row gate
+    derives its tolerance from (a stray scheduler hiccup in one repeat must
+    widen the tolerance less than it would a standard deviation)."""
+    xs = np.asarray(list(samples), dtype=np.float64)
+    if xs.size == 0:
+        return 0.0
+    return float(np.median(np.abs(xs - np.median(xs))))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredRatio:
+    """One measured naive-vs-scheduled comparison: per-repeat paired wall
+    ratios reduced to median + MAD, plus the medians of the raw wall times
+    for the informational ``_wall`` rows."""
+
+    ratio: float          # median over repeats of naive_us / sched_us
+    ratio_mad: float      # MAD of the per-repeat ratios
+    repeats: int
+    warmup: int
+    naive_us: float       # median naive wall time
+    sched_us: float       # median scheduled wall time
+    samples: tuple        # the per-repeat ratios, for the record
+
+
+def measure_ratio(
+    naive_fn: Callable[[], float],
+    sched_fn: Callable[[], float],
+    *,
+    repeats: int | None = None,
+    warmup: int | None = None,
+) -> MeasuredRatio:
+    """Run a (naive, scheduled) variant pair ``repeats`` times, paired.
+
+    Each callable runs its variant once and returns wall µs. The two
+    variants are interleaved within every repeat (naive then scheduled) so
+    slow host drift — thermal throttling, a noisy CI neighbour ramping up —
+    hits both sides of each ratio sample roughly equally instead of biasing
+    whichever variant ran last. Warmup pairs run first and are discarded:
+    they absorb jit compilation and, on a calibrated engine, the first-run
+    recalibration bootstrap."""
+    r = MEASURED_REPEATS if repeats is None else int(repeats)
+    w = MEASURED_WARMUP if warmup is None else int(warmup)
+    for _ in range(w):
+        naive_fn()
+        sched_fn()
+    naive_us, sched_us, ratios = [], [], []
+    for _ in range(r):
+        n = float(naive_fn())
+        s = float(sched_fn())
+        naive_us.append(n)
+        sched_us.append(s)
+        ratios.append(n / max(s, 1e-9))
+    return MeasuredRatio(
+        ratio=float(np.median(ratios)),
+        ratio_mad=mad(ratios),
+        repeats=r,
+        warmup=w,
+        naive_us=float(np.median(naive_us)),
+        sched_us=float(np.median(sched_us)),
+        samples=tuple(ratios),
+    )
 
 
 def make_executor(algorithm: str, graph, seed: int = 0):

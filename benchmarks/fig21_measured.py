@@ -1,0 +1,206 @@
+"""Fig. 21 (beyond the paper): measured execution at benchmark scale.
+
+Everything gated through fig20 is proven on the modeled clock; the paper's
+claim is about real hardware. This figure runs fig14/fig16-shaped workloads
+on the *measuring* substrates — ``InlineBackend`` (timed host path) and
+``PallasBackend`` (interpret-mode kernels) — with the full measured-feedback
+stack live for the first time at benchmark scale: a ``CostFeedback`` table
+fed by real step times, width-aware planning and thief sizing consuming
+them, adaptive admission following the measured efficiency frontier, and
+censor-triggered recalibration persisting its refit ``HardwareModel``
+through a ``CalibrationStore`` (``BENCH_calibration.json``), so every
+engine after the first starts calibrated.
+
+Raw wall time flakes on shared CI hosts, which is why fig18's ``_wall``
+rows are informational. The gateable measured quantity is the paper-shaped
+*ratio*: scheduled-vs-naive (and fused-vs-unfused) wall time within one
+process on one host — host speed divides out, scheduling quality remains.
+Each ratio is measured over warmup + N interleaved repeats and reported as
+median + MAD (:func:`benchmarks.common.measure_ratio`).
+
+Scale is per-backend (the ``SCALE`` table): the inline path measures the
+fig14/fig16 shapes at SF=10; interpret-mode Pallas pays a fixed
+per-kernel-invocation interpreter cost, so it runs the same shapes at SF=8
+with fewer repeats to stay inside the CI perf budget. One backend instance
+is shared across a backend's whole repeat loop so tile staging and kernel
+warmup are paid once (prepare is memoized on the instance), not once per
+engine — exactly how a resident service would hold its backend.
+
+The calibration store rides the inline rows only. The refit preset
+attributes all measured slowness to per-item cost (the proportionality the
+§4.4 refit assumes on real silicon), but interpret-mode Pallas cost is
+dominated by a *fixed* per-invocation interpreter charge, so a
+refit-narrowed schedule multiplies invocations and each pallas run
+balloons from seconds to minutes. The pallas rows therefore run the live
+feedback stack with per-run recalibration but no persisted store; the
+caveat is documented in ARCHITECTURE.md's measured-execution section.
+
+What the gated ratio means here: on a 1-core CI host there is no real
+parallel speedup to win, so the scheduled stack's wall time is dominated by
+its own bookkeeping and by how finely the (calibrated) cost model
+partitions work. The ratio is an *overhead/alignment factor*, expected
+below 1.0 and extremely stable (MAD ~1e-3); the gate holds it steady so a
+change that makes the scheduling stack materially slower per step — or
+derails the refit so it fragments schedules — fails CI even though every
+modeled row still passes.
+
+Row conventions:
+
+* ``fig21/<workload>_ratio/sf<N>/<backend>/sN`` — median naive/scheduled
+  wall ratio (> 1 would mean the scheduled engine finished the burst faster
+  on real time). Stamped ``measured: true`` with ``ratio_mad``/``repeats``/
+  ``backend``/``host`` metadata; **gated** by check_trend.py's noise-aware
+  measured mode (MAD-derived tolerance), not the 10% modeled gate.
+* ``fig21/<workload>_wall/sf<N>/<backend>/sN`` — measured host EPS of the
+  scheduled variant; informational as always (absolute wall time never
+  gates).
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    CalibrationStore,
+    CostFeedback,
+    EngineConfig,
+    FusionConfig,
+    MultiQueryEngine,
+    XEON_E5_2660V4,
+    host_fingerprint,
+    resolve_backend,
+)
+from repro.graph import rmat_graph
+
+from .common import CALIBRATION_PATH, Row, measure_ratio
+
+SESSIONS = 4
+POOL = 8
+PR_ITERS = 3
+
+# backend -> (RMAT scale factor, repeat override, persist calibration).
+# ``None`` repeats defer to common.MEASURED_REPEATS (and thus run.py
+# --repeats); pallas pins a smaller count because each interpret-mode repeat
+# costs seconds, not milliseconds, and skips the persisted store (see the
+# module docstring for why a refit-narrowed schedule is pathological under
+# fixed per-invocation interpreter cost).
+SCALE = {
+    "inline": (10, None, True),
+    "pallas": (8, 3, False),
+}
+
+
+def _mk_skew(graph):
+    """fig14 shape: one heavy PageRank + BFS sessions from hub sources."""
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 4]))
+
+    return mk
+
+
+def _mk_fused(graph):
+    """fig16 shape: a same-graph same-algorithm burst (fusion fodder)."""
+
+    def mk(s, q):
+        return PageRankExecutor(graph, mode="pull", max_iters=PR_ITERS, tol=0)
+
+    return mk
+
+
+def _wall_run(mk, backend, *, scheduled, fuse, store=True) -> tuple[float, object]:
+    """One engine run; returns (wall µs, EngineReport).
+
+    The *scheduled* variant is the full measured-feedback stack: scheduler
+    policy, stealing, live ``CostFeedback``, width-aware admission,
+    censor-triggered recalibration — persisted through the calibration
+    store when ``store`` is set (so every construction after the first trip
+    starts on the refit preset). The *naive* variant is the paper's
+    baseline: straight full-width range partitioning, no stealing, no
+    feedback — same backend, same compute."""
+    if scheduled:
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4,
+            pool_capacity=POOL,
+            policy="scheduler",
+            feedback=CostFeedback(),
+            backend=backend,
+            calibration=CALIBRATION_PATH if store else None,
+        )
+        config = EngineConfig(
+            steal=True,
+            fuse=fuse,
+            fusion=FusionConfig(hold_ns=5e4) if fuse else None,
+            adaptive_admission=True,
+            recalibrate=True,
+        )
+    else:
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4, pool_capacity=POOL, policy="simple", backend=backend
+        )
+        config = EngineConfig()
+    t0 = time.perf_counter_ns()
+    rep = eng.run_sessions(
+        mk, sessions=SESSIONS, queries_per_session=1, config=config
+    )
+    return (time.perf_counter_ns() - t0) / 1e3, rep
+
+
+def run() -> list[Row]:
+    host = host_fingerprint()
+    graphs = {sf: rmat_graph(sf, seed=3) for sf, _, _ in SCALE.values()}
+    rows: list[Row] = []
+    for backend_name, (sf, repeats, store) in SCALE.items():
+        g = graphs[sf]
+        be = resolve_backend(backend_name)  # shared: prepare memoized once
+        for workload, mk, fuse in (
+            ("skew", _mk_skew(g), False),
+            ("fused", _mk_fused(g), True),
+        ):
+            edges = [0.0]
+
+            def naive():
+                us, _ = _wall_run(mk, be, scheduled=False, fuse=False)
+                return us
+
+            def sched():
+                us, rep = _wall_run(
+                    mk, be, scheduled=True, fuse=fuse, store=store
+                )
+                edges[0] = rep.total_edges
+                return us
+
+            m = measure_ratio(naive, sched, repeats=repeats)
+            cal = CalibrationStore(CALIBRATION_PATH)
+            rows.append(
+                (
+                    f"fig21/{workload}_ratio/sf{sf}/{backend_name}/s{SESSIONS}",
+                    m.sched_us,
+                    m.ratio,
+                    {
+                        "measured": True,
+                        "ratio_mad": round(m.ratio_mad, 4),
+                        "repeats": m.repeats,
+                        "warmup": m.warmup,
+                        "backend": backend_name,
+                        "host": host,
+                        "naive_us": round(m.naive_us, 1),
+                        "calibrated": store
+                        and cal.load("xeon_e5_2660v4", backend_name) is not None,
+                    },
+                )
+            )
+            wall_eps = edges[0] / max(m.sched_us * 1e-6, 1e-12)
+            rows.append(
+                (
+                    f"fig21/{workload}_wall/sf{sf}/{backend_name}/s{SESSIONS}",
+                    m.sched_us,
+                    wall_eps,
+                    {"backend": backend_name, "host": host, "repeats": m.repeats},
+                )
+            )
+    return rows

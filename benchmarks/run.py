@@ -4,7 +4,7 @@
 # future PRs diff against (benchmarks/check_trend.py gates >10% regressions
 # of the modeled numbers in CI).
 #
-# Usage: python -m benchmarks.run [filter] [--steal|--no-steal]
+# Usage: python -m benchmarks.run [filter] [--steal|--no-steal] [--repeats N]
 #   --steal / --no-steal toggle inter-session work-stealing for the session
 #   figures (fig10-13, fig15 and fig16; default: steal). fig14 always emits
 #   both variants. fig15 always emits fixed-P and governed variants; fig16
@@ -14,7 +14,11 @@
 #   real wall-clock rows flagged informational (reported, never gated);
 #   fig19 always emits all four locality-domain variants
 #   (d1/d4_local/d4_blind/d4_nopen); fig20 always emits the mixed-burst
-#   fusion ladder (nofuse/homofuse/heterofuse scan-sharing).
+#   fusion ladder (nofuse/homofuse/heterofuse scan-sharing); fig21 emits
+#   *measured* naive-vs-scheduled wall ratios per backend — gated by
+#   check_trend.py's MAD-tolerance measured mode — plus informational
+#   ``_wall`` rows. --repeats N overrides the measured-mode repeat count
+#   (common.MEASURED_REPEATS) for quick local runs.
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
 #   but do not commit its numbers over the gated baseline.
@@ -43,21 +47,33 @@ MODULES = [
     "fig18_substrate",
     "fig19_locality",
     "fig20_hetero_fusion",
+    "fig21_measured",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
 
 
-def sessions_json_rows(rows: list[tuple[str, float, float]]) -> list[dict]:
+def sessions_json_rows(rows: list[tuple]) -> list[dict]:
     """Parse ``figNN/<workload>/<dataset>/<policy>/sN`` throughput rows.
 
+    A row is ``(name, us, derived)`` or ``(name, us, derived, meta)`` — the
+    optional ``meta`` dict is merged into the JSON entry after the parsed
+    fields, so figures can stamp provenance (fig21's ``backend``/``host``/
+    ``repeats``/``ratio_mad``).
+
     A workload segment ending in ``_wall`` marks a real wall-clock row
-    (fig18's per-backend host EPS): it rides along in the JSON flagged
+    (fig18/fig21 per-backend host EPS): it rides along in the JSON flagged
     ``"informational": true`` so check_trend.py reports it without gating —
     host speed must never fail the deterministic modeled-trajectory gate.
+    A ``"measured": true`` stamp in ``meta`` instead renames the value key
+    to ``ratio``: the row carries a host-normalized naive-vs-scheduled wall
+    ratio, gated by check_trend.py's noise-aware measured mode rather than
+    the 10% modeled gate.
     """
     out = []
-    for name, us, derived in rows:
+    for row_tuple in rows:
+        name, us, derived = row_tuple[:3]
+        meta = dict(row_tuple[3]) if len(row_tuple) > 3 else {}
         parts = name.split("/")
         m = re.fullmatch(r"s(\d+)", parts[-1])
         if m is None or len(parts) < 5:
@@ -70,12 +86,31 @@ def sessions_json_rows(rows: list[tuple[str, float, float]]) -> list[dict]:
             "policy": parts[3],
             "sessions": int(m.group(1)),
             "us_per_call": round(us, 1),
-            "modeled_eps": derived,
         }
+        row["ratio" if meta.get("measured") else "modeled_eps"] = derived
         if parts[1].endswith("_wall"):
             row["informational"] = True
+        row.update(meta)
         out.append(row)
     return out
+
+
+def merge_session_rows(committed: list[dict], fresh: list[dict]) -> list[dict]:
+    """Merge freshly measured rows over a committed baseline, by name.
+
+    Replacement is **wholesale**: a fresh row's dict is taken as-is, never
+    key-merged into the committed row. Anything else would be a latent
+    metadata bug — a committed fig21 row carries ``backend``/``repeats``/
+    ``host``/``ratio_mad``/``informational`` stamps, and a dict-level merge
+    would keep a stale ``host`` fingerprint (or a stale ``informational``
+    flag) on a row whose numbers were just re-measured under different
+    provenance. Committed rows not re-measured in this run survive
+    untouched, so a filtered run (``run fig10``) refreshes its own figure
+    without dropping the others. Output is name-sorted for stable diffs.
+    """
+    merged = {r["name"]: r for r in committed}
+    merged.update({r["name"]: r for r in fresh})
+    return sorted(merged.values(), key=lambda r: r["name"])
 
 
 def main() -> None:
@@ -85,6 +120,12 @@ def main() -> None:
 
         common.STEAL = "--steal" in args
         args = [a for a in args if a not in ("--steal", "--no-steal")]
+    if "--repeats" in args:
+        from . import common
+
+        i = args.index("--repeats")
+        common.MEASURED_REPEATS = int(args[i + 1])
+        args = args[:i] + args[i + 2:]
     only = args[0] if args else None
     print("name,us_per_call,derived")
     session_rows: list[dict] = []
@@ -94,12 +135,14 @@ def main() -> None:
         t0 = time.time()
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         rows = mod.run()
-        for name, us, derived in rows:
+        for row_tuple in rows:
+            name, us, derived = row_tuple[:3]
             print(f"{name},{us:.1f},{derived:.6g}")
         if any(
             k in mod_name
             for k in (
-                "sessions", "governor", "fusion", "feedback", "substrate", "locality",
+                "sessions", "governor", "fusion", "feedback", "substrate",
+                "locality", "measured",
             )
         ):
             session_rows.extend(sessions_json_rows(rows))
@@ -107,15 +150,15 @@ def main() -> None:
     if session_rows:
         # merge with any existing baseline so a filtered run (e.g. `run fig10`)
         # refreshes its own rows without dropping the other figures'
-        merged: dict[str, dict] = {}
+        committed: list[dict] = []
         try:
             with open(SESSIONS_JSON) as f:
-                merged = {r["name"]: r for r in json.load(f).get("rows", [])}
+                committed = json.load(f).get("rows", [])
         except (OSError, ValueError):
             pass
-        merged.update({r["name"]: r for r in session_rows})
+        merged = merge_session_rows(committed, session_rows)
         with open(SESSIONS_JSON, "w") as f:
-            json.dump({"rows": sorted(merged.values(), key=lambda r: r["name"])}, f, indent=2)
+            json.dump({"rows": merged}, f, indent=2)
         print(f"# wrote {SESSIONS_JSON} ({len(merged)} rows)", file=sys.stderr)
 
 

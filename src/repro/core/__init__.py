@@ -21,6 +21,7 @@ from .descriptors import (
     PR_PUSH,
 )
 from .contention import (
+    PRESET_VERSION,
     PRESETS,
     TPU_V5E_POD,
     XEON_E5_2660V4,
@@ -31,6 +32,7 @@ from .contention import (
     cross_domain_cost_ns,
     recalibrate_preset,
 )
+from .calibration import CalibrationStore, host_fingerprint
 from .cost_model import (
     IterationWork,
     c_sub,
@@ -89,9 +91,11 @@ __all__ = [
     "estimate_touched_sampled",
     "DESCRIPTORS", "AlgorithmDescriptor", "BFS_TOP_DOWN", "DEGREE_COUNT", "ItemCost",
     "PR_PULL", "PR_PUSH",
-    "PRESETS", "TPU_V5E_POD", "XEON_E5_2660V4", "HardwareModel", "MemoryLevel",
+    "PRESET_VERSION", "PRESETS", "TPU_V5E_POD", "XEON_E5_2660V4",
+    "HardwareModel", "MemoryLevel",
     "calibrate_from_runs", "counter_array_bytes", "cross_domain_cost_ns",
     "recalibrate_preset",
+    "CalibrationStore", "host_fingerprint",
     "IterationWork", "c_sub", "c_vertex_sequential", "c_vertex_total",
     "iteration_cost_ns", "touched_memory_bytes",
     "ThreadBounds", "parallel_beats_sequential", "thread_bounds", "v_min_for_parallel",

@@ -79,7 +79,11 @@ class EngineConfig:
       the executing host that ratios clip en masse), refit the
       ``HardwareModel`` from the accumulated (modeled, measured) pairs via
       ``calibrate_from_runs`` and reset the width state, instead of just
-      neutralizing the table.
+      neutralizing the table. When the engine was constructed with a
+      ``CalibrationStore`` (``MultiQueryEngine(hw, calibration=...)``), the
+      refit trains on the union of this run's pairs and the store's
+      persisted provenance, and is written back so later engines on the
+      same (host, backend, preset) start calibrated.
     """
 
     priorities: Sequence[int] | Callable[[int], int] | None = None

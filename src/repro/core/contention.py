@@ -44,6 +44,14 @@ from typing import Sequence
 
 import numpy as np
 
+# Version stamp of the built-in preset tables (XEON_E5_2660V4 / TPU_V5E_POD
+# and the HardwareModel field set). Bump on any change to the synthesized
+# latencies, machine constants, or payload schema: the calibration store
+# (core/calibration.py) keys its entries on it, and CI's cached calibration
+# file uses it in the actions/cache key, so a preset change invalidates every
+# refit derived from the old tables instead of silently steering with them.
+PRESET_VERSION = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryLevel:
@@ -139,9 +147,10 @@ class HardwareModel:
 
     # ---------------- persistence (memoized calibration, §4.1.1) ----------------
 
-    def save(self, path: str) -> None:
-        """Persist the calibrated model as JSON (atomic rename)."""
-        payload = dict(
+    def to_payload(self) -> dict:
+        """The model as a JSON-serializable dict (:meth:`save`'s document;
+        also embedded per-entry by :class:`~.calibration.CalibrationStore`)."""
+        return dict(
             name=self.name,
             levels=[(l.name, l.capacity) for l in self.levels],
             thread_counts=self.thread_counts,
@@ -156,16 +165,19 @@ class HardwareModel:
             c_remote_factor=self.c_remote_factor,
             c_migration_ns=self.c_migration_ns,
         )
+
+    def save(self, path: str) -> None:
+        """Persist the calibrated model as JSON (atomic rename)."""
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(payload, f)
+            json.dump(self.to_payload(), f)
         os.replace(tmp, path)
 
     @classmethod
-    def load(cls, path: str) -> "HardwareModel":
-        """Load a model previously written by :meth:`save`."""
-        with open(path) as f:
-            p = json.load(f)
+    def from_payload(cls, p: dict) -> "HardwareModel":
+        """Rebuild a model from a :meth:`to_payload` dict (raises
+        ``KeyError``/``ValueError`` on malformed input — callers that must
+        be fail-soft, like the calibration store, catch and ignore)."""
         return cls(
             name=p["name"],
             levels=[MemoryLevel(n, c) for n, c in p["levels"]],
@@ -182,6 +194,12 @@ class HardwareModel:
             c_remote_factor=p.get("c_remote_factor", 1.35),
             c_migration_ns=p.get("c_migration_ns", 20_000.0),
         )
+
+    @classmethod
+    def load(cls, path: str) -> "HardwareModel":
+        """Load a model previously written by :meth:`save`."""
+        with open(path) as f:
+            return cls.from_payload(json.load(f))
 
 
 def calibrate_from_runs(

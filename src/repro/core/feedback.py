@@ -251,7 +251,10 @@ class CostFeedback:
 
     def recalibration_pairs(self) -> list[tuple[int, float, float]]:
         """The accumulated raw ``(width, modeled_ns, measured_ns)`` pairs
-        (unclipped — the true host ratios), newest last."""
+        (unclipped — the true host ratios), newest last. These are also the
+        provenance set a :class:`~.calibration.CalibrationStore` persists
+        next to a refit model, so later refits on the same (host, backend)
+        train on every pair ever measured there, not one run's buffer."""
         return list(self._raw_pairs)
 
     def reset_width_state(self) -> None:

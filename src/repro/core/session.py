@@ -51,6 +51,7 @@ import numpy as np
 from .autotuner import PreparedIteration, prepare_iteration
 from .backends import ExecutionBackend, resolve_backend
 from .bounds import ThreadBounds
+from .calibration import CalibrationStore
 from .config import EngineConfig
 from .feedback import CostFeedback
 from .contention import HardwareModel, cross_domain_cost_ns, recalibrate_preset
@@ -638,6 +639,7 @@ class MultiQueryEngine:
         admission: AdmissionController | None = None,
         high_priority_reserve: int = 0,
         backend: ExecutionBackend | str | None = "modeled",
+        calibration: "CalibrationStore | str | None" = None,
     ):
         if policy not in ("scheduler", "sequential", "simple"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -665,6 +667,20 @@ class MultiQueryEngine:
         # query but echoes the modeled clock as the measurement — fully
         # deterministic; InlineBackend/PallasBackend measure for real
         self.backend: ExecutionBackend = resolve_backend(backend)
+        # persistent calibration (core.calibration): when a store holds a
+        # refit of this preset for (this host, this backend), start on it —
+        # a calibrated engine plans with readable width differentials from
+        # the first step instead of re-tripping the censoring gate every
+        # process. ``None`` (the default) touches nothing: no file reads,
+        # byte-identical engine.
+        self._preset_name = hw.name
+        if isinstance(calibration, str):
+            calibration = CalibrationStore(calibration)
+        self.calibration = calibration
+        if self.calibration is not None:
+            refit = self.calibration.load(self._preset_name, self.backend.name)
+            if refit is not None:
+                self.hw = refit
 
     @property
     def _width_fb_on(self) -> bool:
@@ -1010,6 +1026,10 @@ class MultiQueryEngine:
         prev_backend = self.backend
         if cfg.backend is not None:
             self.backend = resolve_backend(cfg.backend)
+        # the backend whose measurements this run accumulates — a refit
+        # persisted after the run must be keyed on it, not on the engine's
+        # default backend restored by the teardown
+        run_backend_name = self.backend.name
         # width-feedback-aware admission: for this run only, the admission
         # cap's per-session share guarantee follows the width table's
         # measured efficiency frontier — the widest power-of-two width whose
@@ -2208,10 +2228,33 @@ class MultiQueryEngine:
             and self.feedback is not None
             and self.feedback.censor_tripped()
         ):
+            pairs = self.feedback.recalibration_pairs()
+            if self.calibration is not None:
+                # union the fresh pairs with the persisted provenance set so
+                # the refit trains on everything this (host, backend) has
+                # ever measured, not just this run's buffer
+                pairs = (
+                    self.calibration.load_pairs(
+                        self._preset_name, run_backend_name
+                    )
+                    + pairs
+                )
+            # stable refit name even when the engine already started on a
+            # persisted refit (no "+recal+recal" accretion across runs)
             self.hw = recalibrate_preset(
-                self.hw, self.feedback.recalibration_pairs()
+                self.hw, pairs, name=f"{self._preset_name}+recal"
             )
             self.feedback.reset_width_state()
+            if self.calibration is not None:
+                # persist the refit + its provenance (ROADMAP: recalibration
+                # persistence) so the next engine on this host/backend starts
+                # calibrated instead of re-tripping the censoring gate
+                self.calibration.save(
+                    self.hw,
+                    pairs,
+                    preset=self._preset_name,
+                    backend=run_backend_name,
+                )
 
         if governor is not None:
             report.resize_events = list(governor.resize_events)

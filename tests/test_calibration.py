@@ -1,0 +1,318 @@
+"""core/calibration.py — persistent hardware calibration.
+
+The store is the memory of the censoring gate: a refit that survives the
+process means the *next* engine on this host starts calibrated instead of
+re-tripping ``censor_tripped`` and re-fitting from scratch. The contract
+pinned here: round-trip fidelity (save → load → an engine constructed with
+the store starts on the refit preset), strict key matching (host
+fingerprint, backend, base preset, preset version — any mismatch reads as
+cold), fail-soft reads (missing file is cold; corrupt file warns and is
+cold; a calibration file must never break an engine), provenance-pair
+union on re-fit, and atomic multi-entry writes."""
+import json
+
+import pytest
+
+from repro.core import (
+    PRESET_VERSION,
+    XEON_E5_2660V4,
+    CalibrationStore,
+    CostFeedback,
+    EngineConfig,
+    HardwareModel,
+    ModeledBackend,
+    MultiQueryEngine,
+    host_fingerprint,
+    recalibrate_preset,
+)
+from repro.algorithms import BFSExecutor, PageRankExecutor
+
+PRESET = XEON_E5_2660V4.name
+
+# synthetic provenance: every width ran 20x slower than modeled — the refit
+# scales atomic latencies up by ~20x (same shape test_feedback pins)
+PAIRS = [(w, 1e4, 2e5) for w in (1, 2, 4, 8) for _ in range(4)]
+
+
+def _refit():
+    hw = recalibrate_preset(XEON_E5_2660V4, PAIRS, name=f"{PRESET}+recal")
+    assert hw is not XEON_E5_2660V4
+    return hw
+
+
+@pytest.fixture
+def store_path(tmp_path):
+    return str(tmp_path / "calibration.json")
+
+
+# ------------------------------------------------------------- round trip
+
+
+def test_save_load_round_trip(store_path):
+    store = CalibrationStore(store_path)
+    assert store.load(PRESET, "modeled") is None  # missing file: cold, quiet
+    assert store.load_pairs(PRESET, "modeled") == []
+    hw = _refit()
+    store.save(hw, PAIRS, preset=PRESET, backend="modeled")
+    loaded = CalibrationStore(store_path).load(PRESET, "modeled")
+    assert loaded is not None
+    assert loaded.name == hw.name
+    m = 0.5 * hw.levels[0].capacity
+    for t in (1, hw.thread_counts[-1]):
+        assert loaded.l_atomic(t, m) == pytest.approx(hw.l_atomic(t, m))
+    assert CalibrationStore(store_path).load_pairs(PRESET, "modeled") == PAIRS
+
+
+def test_engine_starts_on_persisted_refit(store_path, small_rmat):
+    """The whole point of persistence: a fresh engine constructed with the
+    store begins life on the refit preset — no warm-up run, no re-trip."""
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4, policy="scheduler", calibration=store
+    )
+    assert eng.hw is not XEON_E5_2660V4
+    assert eng.hw.name == f"{PRESET}+recal"
+    # and a string path resolves to a store transparently
+    eng2 = MultiQueryEngine(
+        XEON_E5_2660V4, policy="scheduler", calibration=store_path
+    )
+    assert eng2.hw.name == f"{PRESET}+recal"
+
+
+def test_engine_without_matching_entry_starts_cold(store_path):
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="pallas")
+    # entry is for the pallas backend; the engine installs modeled
+    eng = MultiQueryEngine(XEON_E5_2660V4, calibration=store)
+    assert eng.hw is XEON_E5_2660V4
+
+
+# ------------------------------------------------------------ key matching
+
+
+def test_foreign_fingerprint_is_ignored(store_path):
+    CalibrationStore(store_path, fingerprint="tpu-vm-c128").save(
+        _refit(), PAIRS, preset=PRESET, backend="modeled"
+    )
+    assert CalibrationStore(store_path).fingerprint == host_fingerprint()
+    assert CalibrationStore(store_path).load(PRESET, "modeled") is None
+    assert CalibrationStore(store_path).load_pairs(PRESET, "modeled") == []
+
+
+def test_wrong_backend_or_preset_is_ignored(store_path):
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="inline")
+    assert store.load(PRESET, "pallas") is None
+    assert store.load("tpu_v5e_pod", "inline") is None
+    assert store.load(PRESET, "inline") is not None
+
+
+def test_stale_preset_version_is_ignored(store_path):
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    doc = json.load(open(store_path))
+    (key,) = doc["entries"]
+    doc["entries"][key]["preset_version"] = PRESET_VERSION + 1
+    with open(store_path, "w") as f:
+        json.dump(doc, f)
+    assert store.load(PRESET, "modeled") is None
+
+
+def test_tampered_key_fields_are_ignored(store_path):
+    """The stamped fields must match the key — a hand-copied entry whose
+    stamp disagrees with its key reads as cold."""
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    doc = json.load(open(store_path))
+    (key,) = doc["entries"]
+    doc["entries"][key]["backend"] = "inline"
+    with open(store_path, "w") as f:
+        json.dump(doc, f)
+    assert store.load(PRESET, "modeled") is None
+
+
+# --------------------------------------------------------------- fail-soft
+
+
+def test_corrupt_file_warns_and_starts_cold(store_path):
+    with open(store_path, "w") as f:
+        f.write("{definitely not json")
+    store = CalibrationStore(store_path)
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert store.load(PRESET, "modeled") is None
+    # an engine built over the corrupt store still constructs, cold
+    with pytest.warns(UserWarning, match="unreadable"):
+        eng = MultiQueryEngine(XEON_E5_2660V4, calibration=store)
+    assert eng.hw is XEON_E5_2660V4
+    # and the next save atomically replaces the wreck (it re-reads the
+    # corrupt doc one last time, warning once more, then overwrites it)
+    with pytest.warns(UserWarning, match="unreadable"):
+        store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    assert store.load(PRESET, "modeled") is not None
+
+
+def test_wrong_schema_warns_and_starts_cold(store_path):
+    with open(store_path, "w") as f:
+        json.dump({"schema": 999, "entries": {}}, f)
+    with pytest.warns(UserWarning, match="unknown shape"):
+        assert CalibrationStore(store_path).load(PRESET, "modeled") is None
+
+
+def test_malformed_model_payload_warns_and_is_ignored(store_path):
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    doc = json.load(open(store_path))
+    (key,) = doc["entries"]
+    doc["entries"][key]["model"] = {"lat_atomic": "not-a-table"}
+    with open(store_path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(UserWarning, match="malformed"):
+        assert store.load(PRESET, "modeled") is None
+
+
+def test_malformed_pairs_poison_only_the_provenance(store_path):
+    store = CalibrationStore(store_path)
+    store.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    doc = json.load(open(store_path))
+    (key,) = doc["entries"]
+    doc["entries"][key]["pairs"][0] = ["x", "y"]
+    with open(store_path, "w") as f:
+        json.dump(doc, f)
+    assert store.load_pairs(PRESET, "modeled") == []
+    assert store.load(PRESET, "modeled") is not None  # model still usable
+
+
+# ------------------------------------------------------------- multi-entry
+
+
+def test_save_preserves_other_entries(store_path):
+    a = CalibrationStore(store_path, fingerprint="host-a-c8")
+    b = CalibrationStore(store_path, fingerprint="host-b-c2")
+    a.save(_refit(), PAIRS, preset=PRESET, backend="modeled")
+    b.save(_refit(), PAIRS[:2], preset=PRESET, backend="inline")
+    assert a.load(PRESET, "modeled") is not None
+    assert b.load(PRESET, "inline") is not None
+    assert b.load_pairs(PRESET, "inline") == PAIRS[:2]
+
+
+# --------------------------------------------------- engine write-back
+
+
+class _ScaledBackend:
+    """A 20x mis-scaled substrate — the deterministic censor-trip scenario
+    (same shape as test_feedback's)."""
+
+    name = "modeled"  # impersonate the default so store keys line up
+
+    def __init__(self, factor=20.0):
+        self._inner = ModeledBackend()
+        self.factor = factor
+
+    def prepare(self, executor, prep, shard=None):
+        return self._inner.prepare(executor, prep, shard)
+
+    def execute(self, plan, step, modeled_ns=0.0):
+        return self._inner.execute(plan, step, modeled_ns) * self.factor
+
+
+def _mixed_mk(graph):
+    import numpy as np
+
+    deg = np.asarray(graph.out_degrees())
+    hubs = np.argsort(-deg)
+
+    def mk(s, q):
+        if s == 0:
+            return PageRankExecutor(graph, mode="pull", max_iters=3, tol=0)
+        return BFSExecutor(graph, int(hubs[s % 4]))
+
+    return mk
+
+
+def test_recalibrating_run_persists_refit_and_provenance(
+    store_path, small_rmat
+):
+    """End to end: censor trips → refit → the store now holds the refit
+    model and its raw pairs, and the *next* engine starts calibrated."""
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=8,
+        policy="scheduler",
+        feedback=CostFeedback(),
+        backend=_ScaledBackend(20.0),
+        calibration=store_path,
+    )
+    assert eng.hw is XEON_E5_2660V4  # cold store: construction is a no-op
+    eng.run_sessions(
+        _mixed_mk(small_rmat),
+        sessions=4,
+        queries_per_session=1,
+        config=EngineConfig(width_feedback=True, recalibrate=True),
+    )
+    assert eng.hw.name == f"{PRESET}+recal"
+    store = CalibrationStore(store_path)
+    persisted = store.load(PRESET, "modeled")
+    assert persisted is not None
+    assert persisted.name == eng.hw.name
+    assert store.load_pairs(PRESET, "modeled")  # provenance rode along
+
+    nxt = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=8,
+        policy="scheduler",
+        feedback=CostFeedback(),
+        calibration=store_path,
+    )
+    assert nxt.hw.name == f"{PRESET}+recal"  # starts calibrated
+
+
+def test_refit_trains_on_union_of_stored_and_fresh_pairs(
+    store_path, small_rmat, monkeypatch
+):
+    """A second recalibration must not start blind: the pairs handed to
+    recalibrate_preset are the stored provenance plus this run's fresh
+    observations."""
+    store = CalibrationStore(store_path)
+    seeded = [(2, 7.0, 140.0), (4, 9.0, 180.0)]
+    store.save(_refit(), seeded, preset=PRESET, backend="modeled")
+
+    seen = {}
+    import repro.core.session as session_mod
+
+    real = recalibrate_preset
+
+    def spy(hw, pairs, **kw):
+        seen["pairs"] = list(pairs)
+        return real(hw, pairs, **kw)
+
+    monkeypatch.setattr(session_mod, "recalibrate_preset", spy)
+    eng = MultiQueryEngine(
+        XEON_E5_2660V4,
+        pool_capacity=8,
+        policy="scheduler",
+        feedback=CostFeedback(),
+        backend=_ScaledBackend(20.0),
+        calibration=store_path,
+    )
+    eng.run_sessions(
+        _mixed_mk(small_rmat),
+        sessions=4,
+        queries_per_session=1,
+        config=EngineConfig(width_feedback=True, recalibrate=True),
+    )
+    assert "pairs" in seen, "censoring gate never tripped"
+    assert seen["pairs"][: len(seeded)] == seeded  # stored provenance first
+    assert len(seen["pairs"]) > len(seeded)  # plus fresh observations
+    # and the union (not just the fresh tail) was written back
+    assert store.load_pairs(PRESET, "modeled") == seen["pairs"]
+
+
+def test_payload_round_trip_and_from_payload_validation():
+    payload = XEON_E5_2660V4.to_payload()
+    hw = HardwareModel.from_payload(payload)
+    assert hw.name == XEON_E5_2660V4.name
+    m = 0.5 * hw.levels[0].capacity
+    assert hw.l_atomic(4, m) == pytest.approx(XEON_E5_2660V4.l_atomic(4, m))
+    with pytest.raises((KeyError, TypeError, ValueError)):
+        HardwareModel.from_payload({"name": "broken"})

@@ -4,12 +4,18 @@ The gate decides whether PRs merge; a bug here silently green-lights
 regressions (or blocks progress), so its verdict matrix is pinned: shared
 rows within threshold pass, a >threshold modeled regression fails (exit 1),
 improvements and one-sided rows pass, malformed trajectories are a distinct
-error (exit 2), and an empty intersection refuses to certify anything."""
+error (exit 2), and an empty intersection refuses to certify anything.
+The measured-mode gate (fig21 ratio rows) pins its own matrix: within-MAD
+moves pass, beyond-tolerance drops fail, zero-MAD rows fall back to the
+relative floor, and host-fingerprint or measured-flag mismatches are
+reported but never gated. run.py's merge semantics ride along here too:
+fresh rows must replace committed rows wholesale, never key-merge."""
 import json
 
 import pytest
 
-from benchmarks.check_trend import load_rows, main
+from benchmarks.check_trend import load_rows, main, measured_tolerance
+from benchmarks.run import merge_session_rows
 
 
 def _write(path, rows):
@@ -19,6 +25,13 @@ def _write(path, rows):
 
 def _row(name, eps):
     return {"name": name, "modeled_eps": eps}
+
+
+def _mrow(name, ratio, mad=0.01, host="linux-x86_64-c4", **extra):
+    return {
+        "name": name, "ratio": ratio, "ratio_mad": mad, "host": host,
+        "measured": True, "backend": "inline", "repeats": 5, **extra,
+    }
 
 
 @pytest.fixture
@@ -170,3 +183,158 @@ def test_load_rows_raises_valueerror_on_malformed(tmp_path):
     p.write_text('{"rows": [{"modeled_eps": 1.0}]}')  # row without a name
     with pytest.raises(ValueError):
         load_rows(str(p))
+
+
+# ---------------------------------------------------------------- measured
+
+
+def test_measured_within_mad_tolerance_passes(files):
+    """A drop smaller than K*(mad_b + mad_f) is repeat noise, not a
+    regression."""
+    base, fresh = files(
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 1.00, mad=0.02)],
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 0.85, mad=0.02)],
+    )
+    # tolerance = max(5 * 0.04, 0.2 * 1.0) = 0.2 >= 0.15 drop
+    assert main([base, fresh]) == 0
+
+
+def test_measured_regression_beyond_tolerance_fails(files, capsys):
+    base, fresh = files(
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 1.00, mad=0.005)],
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 0.70, mad=0.005)],
+    )
+    # tolerance = max(5 * 0.01, 0.2 * 1.0) = 0.2 < 0.30 drop
+    assert main([base, fresh]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_measured_improvement_passes(files):
+    base, fresh = files(
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 1.00, mad=0.0)],
+        [_mrow("fig21/skew_ratio/sf10/inline/s4", 3.00, mad=0.0)],
+    )
+    assert main([base, fresh]) == 0
+
+
+def test_measured_zero_mad_falls_back_to_relative_floor(files):
+    """All repeats identical on both sides → MAD term is 0; the floor must
+    still tolerate sub-floor jitter and still fail a real drop."""
+    name = "fig21/fused_ratio/sf10/inline/s4"
+    base, fresh = files(
+        [_mrow(name, 1.00, mad=0.0)], [_mrow(name, 0.85, mad=0.0)]
+    )
+    assert main([base, fresh]) == 0  # 15% drop < 20% floor
+    base, fresh = files(
+        [_mrow(name, 1.00, mad=0.0)], [_mrow(name, 0.75, mad=0.0)]
+    )
+    assert main([base, fresh]) == 1  # 25% drop > 20% floor
+
+
+def test_measured_knobs_override_defaults(files):
+    name = "fig21/skew_ratio/sf10/inline/s4"
+    base, fresh = files(
+        [_mrow(name, 1.00, mad=0.01)], [_mrow(name, 0.85, mad=0.01)]
+    )
+    assert main([base, fresh]) == 0  # floor 0.2 covers the 0.15 drop
+    assert main([base, fresh, "--ratio-floor", "0.05"]) == 1
+    assert main([base, fresh, "--ratio-floor", "0.05", "--ratio-k", "10"]) == 0
+
+
+def test_measured_host_mismatch_is_reported_not_gated(files, capsys):
+    """Ratios from different host classes are incomparable — a committed
+    laptop baseline must not gate a CI runner's fresh measurement."""
+    name = "fig21/skew_ratio/sf10/inline/s4"
+    base, fresh = files(
+        [_mrow(name, 1.00, host="linux-x86_64-c8"), _row("fig/a/s1", 1.0)],
+        [_mrow(name, 0.10, host="linux-aarch64-c2"), _row("fig/a/s1", 1.0)],
+    )
+    assert main([base, fresh]) == 0
+    assert "host changed; not gated" in capsys.readouterr().out
+
+
+def test_measured_flag_mismatch_is_reported_not_gated(files, capsys):
+    """A row that switched clocks (modeled <-> measured) between baseline
+    and fresh has no comparable value on the two sides."""
+    name = "fig21/skew_ratio/sf10/inline/s4"
+    base, fresh = files(
+        [_row(name, 100.0), _row("fig/a/s1", 1.0)],
+        [_mrow(name, 0.05), _row("fig/a/s1", 1.0)],
+    )
+    assert main([base, fresh]) == 0
+    assert "measured-flag mismatch; not gated" in capsys.readouterr().out
+
+
+def test_measured_fresh_only_rows_ride_along(files, capsys):
+    """The PR that lands fig21 has no committed measured baseline — its rows
+    must be reported fresh-only without gating."""
+    base, fresh = files(
+        [_row("fig/a/s1", 1.0)],
+        [_row("fig/a/s1", 1.0), _mrow("fig21/skew_ratio/sf10/inline/s4", 0.07)],
+    )
+    assert main([base, fresh]) == 0
+    assert "fresh-only" in capsys.readouterr().out
+
+
+def test_measured_row_without_ratio_is_malformed(tmp_path):
+    good = _write(tmp_path / "good.json", [_row("fig/a/s1", 1.0)])
+    bad = _write(
+        tmp_path / "bad.json",
+        [{"name": "fig21/x/sf10/inline/s4", "measured": True, "modeled_eps": 1.0}],
+    )
+    assert main([good, bad]) == 2
+
+
+def test_measured_tolerance_math():
+    assert measured_tolerance(
+        {"ratio": 1.0, "ratio_mad": 0.02}, {"ratio": 0.9, "ratio_mad": 0.03},
+        k=5.0, floor=0.0,
+    ) == pytest.approx(0.25)
+    # floor dominates when the spreads are tiny
+    assert measured_tolerance(
+        {"ratio": 2.0, "ratio_mad": 0.0}, {"ratio": 1.9, "ratio_mad": 0.0},
+        k=5.0, floor=0.2,
+    ) == pytest.approx(0.4)
+    # missing ratio_mad keys read as zero spread
+    assert measured_tolerance(
+        {"ratio": 1.0}, {"ratio": 1.0}, k=5.0, floor=0.1
+    ) == pytest.approx(0.1)
+
+
+# ------------------------------------------------------------ run.py merge
+
+
+def test_merge_replaces_rows_wholesale_never_key_merges():
+    """A fresh measurement under new provenance must not inherit stale
+    metadata stamps from the committed row it replaces."""
+    committed = [
+        {
+            "name": "fig21/skew_ratio/sf10/inline/s4", "ratio": 0.07,
+            "ratio_mad": 0.001, "measured": True, "backend": "inline",
+            "repeats": 5, "host": "linux-x86_64-c8", "informational": True,
+        },
+        {"name": "fig10/pr/sf12/sched/s4", "modeled_eps": 1e9},
+    ]
+    fresh = [
+        {
+            "name": "fig21/skew_ratio/sf10/inline/s4", "ratio": 0.09,
+            "ratio_mad": 0.002, "measured": True, "backend": "inline",
+            "repeats": 3, "host": "linux-aarch64-c2",
+        },
+    ]
+    merged = {r["name"]: r for r in merge_session_rows(committed, fresh)}
+    row = merged["fig21/skew_ratio/sf10/inline/s4"]
+    assert row == fresh[0]  # exactly the fresh dict...
+    assert "informational" not in row  # ...stale flags don't survive
+    assert row["host"] == "linux-aarch64-c2"
+    assert row["repeats"] == 3
+    # rows not re-measured survive untouched
+    assert merged["fig10/pr/sf12/sched/s4"] == committed[1]
+
+
+def test_merge_output_is_name_sorted():
+    rows = merge_session_rows(
+        [{"name": "b", "modeled_eps": 1.0}],
+        [{"name": "a", "modeled_eps": 2.0}, {"name": "c", "modeled_eps": 3.0}],
+    )
+    assert [r["name"] for r in rows] == ["a", "b", "c"]
