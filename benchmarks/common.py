@@ -177,6 +177,8 @@ def run_sessions(
     placement: str = "locality",
     migration_penalty: bool = True,
     hetero_fuse: bool = False,
+    dynamic: bool = False,
+    ingest=None,
 ):
     """-> (us_total, modeled_aggregate_eps, EngineReport) for N sessions.
 
@@ -198,7 +200,12 @@ def run_sessions(
     ExecutionBackend instance; fig18). ``domains``/``placement``/
     ``migration_penalty`` split the pool into locality domains and pick the
     session-placement policy (fig19); the ``domains=1`` default is
-    byte-identical to the pre-domain engine."""
+    byte-identical to the pre-domain engine. ``dynamic``/``ingest`` enable
+    dynamic-graph mode with a live ``IngestStream`` writer (fig22); note a
+    dynamic figure usually needs its own ``make_executor`` closing over
+    ``ingest.log.current()`` so new queries see fresh snapshots — this
+    helper's executors all read the ``graph`` argument, i.e. one pinned
+    snapshot."""
     kwargs = {}
     if pool_capacity is not None:
         kwargs["pool_capacity"] = pool_capacity
@@ -231,6 +238,8 @@ def run_sessions(
             placement=placement,
             migration_penalty=migration_penalty,
             hetero_fuse=hetero_fuse,
+            dynamic=dynamic,
+            ingest=ingest,
         ),
     )
     us = (time.perf_counter_ns() - t0) / 1e3

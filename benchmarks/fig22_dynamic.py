@@ -1,0 +1,152 @@
+"""Fig. 22 (beyond the paper): dynamic graphs — a live ingest writer under
+concurrent readers.
+
+The ROADMAP's most production-shaped scenario, and one the paper never
+touched: one writer session applies streamed edge batches to an sf12 graph
+(``GraphEpochLog`` publishing immutable epoch snapshots between DES events)
+while 8 reader sessions run a PR/BFS mix concurrently. Readers pin the
+snapshot they start on; the writer's publishes only change what *newly
+starting* queries see. Because the snapshot epoch is part of ``Graph.key``,
+fusion rendezvous and steal locality never mix readers pinned to different
+snapshots.
+
+Two variants, always emitted so ``BENCH_sessions.json`` carries both and
+``check_trend.py`` gates the modeled rows:
+
+* ``static`` — ``EngineConfig(dynamic=False)``: the same reader burst on
+  the frozen base snapshot, no writer. This is the byte-identity control:
+  the dynamic machinery off must cost nothing.
+* ``dynamic`` — writer at ``INTERVAL_NS`` batch cadence + the same readers,
+  epoch-pinned. This variant *asserts* (trace-level, per record) that every
+  reader's result was computed on its pinned epoch: the stamped
+  ``record.graph_epoch`` must equal the executor's snapshot epoch, the run
+  must actually spread readers across epochs, and every BFS reader's result
+  must equal the reference traversal of its pinned snapshot — not of the
+  final graph.
+
+The writer's edge-batch rate is configurable via ``N_BATCHES`` /
+``INTERVAL_NS`` (modeled ns between batches).
+"""
+import time
+
+import numpy as np
+
+from repro.algorithms.bfs import BFSExecutor, bfs_reference
+from repro.core import EngineConfig, IngestStream, MultiQueryEngine, XEON_E5_2660V4
+from repro.graph import GraphEpochLog, build_graph, rmat_edges
+
+from . import common
+from .common import Row, make_executor
+
+SCALE = 12
+POOL = 8
+SESSIONS = 8
+QUERIES = 2
+# the PR/BFS reader mix (one entry per session)
+ALGOS = ("pr_pull", "bfs", "pr_push", "bfs", "pr_pull", "bfs", "pr_pull", "bfs")
+# writer: the held-out 15% of the edge stream, applied in N_BATCHES batches
+# every INTERVAL_NS of modeled time
+BASE_FRACTION = 0.85
+N_BATCHES = 6
+INTERVAL_NS = 6e5
+# reader arrivals staggered across the writer's publishes so queries start
+# on different epochs (deterministic — the gated rows must be stable)
+ARRIVAL_GAP_NS = 4.5e5
+
+
+def _build(dynamic: bool):
+    """(base graph, IngestStream | None) for one variant."""
+    src, dst = rmat_edges(SCALE, seed=3)
+    n = 2 ** SCALE
+    cut = int(src.size * BASE_FRACTION)
+    base = build_graph(src[:cut], dst[:cut], n, name="sf12_dyn")
+    if not dynamic:
+        return base, None
+    log = GraphEpochLog(base)
+    parts = np.array_split(np.arange(cut, src.size), N_BATCHES)
+    batches = [(src[i], dst[i]) for i in parts]
+    return base, IngestStream(log=log, batches=batches, interval_ns=INTERVAL_NS)
+
+
+def _assert_pinned(rep, pinned, stream) -> None:
+    """The acceptance-criteria trace assertion: results on pinned epochs."""
+    final_epoch = stream.log.epoch
+    assert rep.epochs_published == N_BATCHES, rep.ingest_events
+    for r in rep.records:
+        ex = pinned[(r.session, r.query)]
+        if r.graph_epoch != ex.graph.epoch:
+            raise AssertionError(
+                f"record s{r.session}q{r.query} stamped epoch {r.graph_epoch} "
+                f"but its executor ran on epoch {ex.graph.epoch}"
+            )
+    epochs = {r.graph_epoch for r in rep.records}
+    if not any(e < final_epoch for e in epochs):
+        raise AssertionError("no reader pinned a pre-final snapshot")
+    if not any(e > 0 for e in epochs):
+        raise AssertionError("no reader started after a publish")
+    # readers provably computed on their pinned snapshot: every BFS result
+    # equals the reference traversal of that snapshot (the final graph has
+    # more edges and would disagree on parents/levels)
+    for (s, q), ex in pinned.items():
+        if isinstance(ex, BFSExecutor):
+            ref = bfs_reference(ex.graph, ex.source)
+            if not np.array_equal(np.asarray(ex.result()), np.asarray(ref)):
+                raise AssertionError(
+                    f"BFS reader s{s}q{q} diverged from its pinned epoch "
+                    f"{ex.graph.epoch}"
+                )
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for label, dynamic in (("static", False), ("dynamic", True)):
+        base, stream = _build(dynamic)
+        pinned: dict[tuple[int, int], object] = {}
+
+        def mk(s, q, _log=(stream.log if stream else None), _base=base):
+            g = _log.current() if _log is not None else _base
+            ex = make_executor(ALGOS[s], g, seed=s)
+            pinned[(s, q)] = ex
+            return ex
+
+        eng = MultiQueryEngine(
+            XEON_E5_2660V4, pool_capacity=POOL, policy="scheduler"
+        )
+        t0 = time.perf_counter_ns()
+        rep = eng.run_sessions(
+            mk,
+            sessions=SESSIONS,
+            queries_per_session=QUERIES,
+            config=EngineConfig(
+                steal=common.STEAL,
+                fuse=True,
+                arrivals=[i * ARRIVAL_GAP_NS for i in range(SESSIONS)],
+                dynamic=dynamic,
+                ingest=stream,
+            ),
+        )
+        us = (time.perf_counter_ns() - t0) / 1e3
+        if dynamic:
+            _assert_pinned(rep, pinned, stream)
+        base_name = f"fig22/dynamic_mix/sf12/{label}/s{SESSIONS}"
+        rows.append((base_name, us, rep.throughput_modeled()))
+        rows.append((f"{base_name}/mean_util", us, rep.mean_utilization()))
+        rows.append(
+            (f"{base_name}/p95_latency_us", us, rep.latency_percentiles()["p95"] / 1e3)
+        )
+        rows.append((f"{base_name}/epochs", us, float(rep.epochs_published)))
+        rows.append(
+            (
+                f"{base_name}/epoch_spread",
+                us,
+                float(len({r.graph_epoch for r in rep.records})),
+            )
+        )
+        rows.append(
+            (
+                f"{base_name}/ingested_edges",
+                us,
+                float(sum(k for _, _, k in rep.ingest_events)),
+            )
+        )
+    return rows

@@ -17,7 +17,9 @@
 #   fusion ladder (nofuse/homofuse/heterofuse scan-sharing); fig21 emits
 #   *measured* naive-vs-scheduled wall ratios per backend — gated by
 #   check_trend.py's MAD-tolerance measured mode — plus informational
-#   ``_wall`` rows. --repeats N overrides the measured-mode repeat count
+#   ``_wall`` rows; fig22 always emits the static and dynamic (live ingest
+#   writer + epoch-pinned readers) variants of the mixed read/write burst.
+#   --repeats N overrides the measured-mode repeat count
 #   (common.MEASURED_REPEATS) for quick local runs.
 #   The committed BENCH_sessions.json trajectory is produced with the
 #   default; use --no-steal for apples-to-apples pre-stealing comparisons,
@@ -48,6 +50,7 @@ MODULES = [
     "fig19_locality",
     "fig20_hetero_fusion",
     "fig21_measured",
+    "fig22_dynamic",
 ]
 
 SESSIONS_JSON = "BENCH_sessions.json"
@@ -142,7 +145,7 @@ def main() -> None:
             k in mod_name
             for k in (
                 "sessions", "governor", "fusion", "feedback", "substrate",
-                "locality", "measured",
+                "locality", "measured", "dynamic",
             )
         ):
             session_rows.extend(sessions_json_rows(rows))

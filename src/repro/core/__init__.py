@@ -78,6 +78,7 @@ from .governor import CapacityGovernor, GovernorConfig
 from .session import (
     AdmissionController,
     EngineReport,
+    IngestStream,
     MultiQueryEngine,
     PoissonArrivals,
     QueryExecutor,
@@ -110,7 +111,7 @@ __all__ = [
     "apply_scan_sharing", "member_scan_ns", "plan_gang_width",
     "plan_hetero_gang_width",
     "CapacityGovernor", "GovernorConfig",
-    "AdmissionController", "EngineReport", "MultiQueryEngine", "PoissonArrivals",
-    "QueryExecutor", "QueryRecord",
+    "AdmissionController", "EngineReport", "IngestStream", "MultiQueryEngine",
+    "PoissonArrivals", "QueryExecutor", "QueryRecord",
     "CostFeedback",
 ]

@@ -23,7 +23,7 @@ if TYPE_CHECKING:  # pragma: no cover - annotation-only imports (no cycles)
     from .backends import ExecutionBackend
     from .fusion import FusionConfig
     from .governor import CapacityGovernor
-    from .session import PoissonArrivals
+    from .session import IngestStream, PoissonArrivals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +84,18 @@ class EngineConfig:
       refit trains on the union of this run's pairs and the store's
       persisted provenance, and is written back so later engines on the
       same (host, backend, preset) start calibrated.
+    * ``dynamic`` — dynamic-graph mode: the run may carry a live ingest
+      writer (``ingest``), query records stamp the epoch of the snapshot
+      they pinned, and the shared prep cache's staleness stamp gains the
+      snapshot epoch. ``False`` (the default) performs zero epoch calls
+      and keeps every scheduling decision byte-identical to the
+      static-graph engine (all committed fig10–21 modeled rows are
+      unchanged).
+    * ``ingest`` — the live ingest writer: an ``IngestStream`` describing
+      a ``GraphEpochLog`` plus timed edge batches. The DES loop applies
+      each batch between events (``EV_INGEST``) and publishes a new
+      immutable snapshot; sessions already running keep the snapshot they
+      started on ("readers pin, writers publish"). Requires ``dynamic``.
     """
 
     priorities: Sequence[int] | Callable[[int], int] | None = None
@@ -100,10 +112,14 @@ class EngineConfig:
     hetero_fuse: bool = False
     adaptive_admission: bool = False
     recalibrate: bool = False
+    dynamic: bool = False
+    ingest: "IngestStream | None" = None
 
     def __post_init__(self) -> None:
         if self.domains < 1:
             raise ValueError("domains must be >= 1")
+        if self.ingest is not None and not self.dynamic:
+            raise ValueError("ingest requires dynamic=True")
         if self.placement not in ("locality", "round_robin"):
             raise ValueError(
                 f"placement must be 'locality' or 'round_robin', got {self.placement!r}"

@@ -148,6 +148,10 @@ class QueryRecord:
     # fusion); the per-member split-back keeps this record's modeled time,
     # edges and traces exact even when the iteration ran co-scheduled
     fused_packages: int = 0
+    # dynamic-graph runs: epoch of the snapshot this query pinned at start
+    # (None on static runs — the field is only stamped under
+    # ``EngineConfig(dynamic=True)``)
+    graph_epoch: int | None = None
     traces: list[ScheduleTrace] = dataclasses.field(default_factory=list)
 
     @property
@@ -210,6 +214,13 @@ class EngineReport:
     # paid the cross-domain remote factor + migration cost when the run's
     # ``migration_penalty`` was on)
     cross_domain_steals: int = 0
+    # dynamic-graph runs: (modeled time_ns, published epoch, batch edges)
+    # per ingest-writer batch applied between DES events (empty on static
+    # runs — the writer only exists under ``dynamic=True`` with an
+    # ``IngestStream``)
+    ingest_events: list[tuple[float, int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def total_edges(self) -> float:
@@ -386,6 +397,23 @@ class EngineReport:
                 out.append(step_mean(line, line[0][0], line[-1][0]))
         return out
 
+    # -------------------------------------------------- dynamic graphs
+    @property
+    def epochs_published(self) -> int:
+        """Snapshots the ingest writer published during the run (an empty
+        batch is a no-op publish and does not advance the epoch, so this
+        counts *distinct* epochs among the ingest events)."""
+        return len({e for _, e, _ in self.ingest_events})
+
+    def epoch_histogram(self) -> dict[int | None, int]:
+        """Queries per pinned snapshot epoch — the reader-side evidence that
+        sessions starting before/after a publish pinned different snapshots
+        (``None`` buckets static-run records, which never stamp an epoch)."""
+        hist: dict[int | None, int] = {}
+        for r in self.records:
+            hist[r.graph_epoch] = hist.get(r.graph_epoch, 0) + 1
+        return hist
+
 
 @dataclasses.dataclass(frozen=True)
 class PoissonArrivals:
@@ -404,6 +432,41 @@ class PoissonArrivals:
         rng = np.random.default_rng(self.seed)
         gaps = rng.exponential(1e9 / self.rate_per_s, size=n)
         return np.cumsum(gaps)
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestStream:
+    """The dynamic-graph writer session: timed edge batches into an epoch log.
+
+    Passed as ``EngineConfig(dynamic=True, ingest=IngestStream(...))``, this
+    drives the DES loop's ingest writer: at each batch time an ``EV_INGEST``
+    event applies the batch to ``log`` and publishes a new immutable
+    snapshot (``GraphEpochLog.ingest``). Like the governor heartbeat, the
+    writer is a scheduling entity rather than a query — it holds no pool
+    workers, takes no admission slot, and never advances the work clock
+    (the modeled makespan stays reader completion), but every snapshot it
+    publishes changes what *newly starting* readers see: ``make_executor``
+    typically closes over ``log.current()``. Readers already running keep
+    the snapshot they pinned at query start — snapshots share no mutable
+    state, so the "readers pin, writers publish" invariant is structural.
+
+    ``batches`` is a sequence of ``(src, dst)`` edge-array pairs applied in
+    order; batch ``i`` lands at ``start_ns + (i + 1) * interval_ns`` on the
+    modeled clock (the writer needs a beat to prepare its first batch, so
+    nothing mutates at t=0 and the base snapshot is a real epoch).
+    """
+
+    log: Any                       # GraphEpochLog (duck-typed: .ingest/.current)
+    batches: Sequence[tuple]       # [(src, dst), ...] applied in order
+    interval_ns: float             # modeled ns between batch applications
+    start_ns: float = 0.0          # modeled time the writer session starts
+
+    def times_ns(self) -> np.ndarray:
+        """Modeled application time of every batch (strictly increasing)."""
+        if self.interval_ns <= 0:
+            raise ValueError("interval_ns must be positive")
+        n = len(self.batches)
+        return self.start_ns + self.interval_ns * np.arange(1, n + 1)
 
 
 class AdmissionController:
@@ -988,7 +1051,21 @@ class MultiQueryEngine:
         one-time migration cost. ``domains=1`` (the default) performs zero
         partition/domain calls and keeps every scheduling decision
         byte-identical to the pre-domain engine (the fig10–18 modeled rows
-        are unchanged)."""
+        are unchanged).
+
+        ``config.dynamic`` turns on dynamic-graph mode: an
+        :class:`IngestStream` writer (``config.ingest``) applies timed edge
+        batches between DES events and publishes immutable epoch snapshots
+        through its :class:`~repro.graph.epochs.GraphEpochLog`; every query
+        record stamps the epoch of the snapshot it pinned at start, and the
+        shared prep cache's staleness stamp gains that epoch. Because the
+        snapshot ``epoch`` is a component of ``Graph.key``, fusion
+        rendezvous, steal locality, partitions, and backend memos
+        distinguish snapshots without further plumbing — no gang ever mixes
+        members pinned to different snapshots. ``dynamic=False`` (the
+        default) performs zero epoch calls and keeps every scheduling
+        decision byte-identical to the static-graph engine (the fig10–21
+        modeled rows are unchanged)."""
         cfg = config if config is not None else EngineConfig()
         priorities = cfg.priorities
         arrivals = cfg.arrivals
@@ -1001,6 +1078,8 @@ class MultiQueryEngine:
         domains = int(cfg.domains)
         placement = cfg.placement
         migration_penalty = bool(cfg.migration_penalty)
+        dynamic = bool(cfg.dynamic)
+        ingest = cfg.ingest
 
         if priorities is None:
             prio = [0] * sessions
@@ -1130,9 +1209,10 @@ class MultiQueryEngine:
             nonlocal running_view
             running_view = states + drivers if drivers else states
 
-        EV_ARRIVE, EV_STEP, EV_STEAL, EV_GOV, EV_FUSE = 0, 1, 2, 3, 4
+        EV_ARRIVE, EV_STEP, EV_STEAL, EV_GOV, EV_FUSE, EV_INGEST = 0, 1, 2, 3, 4, 5
         # payload is a _SessionState for session events, None for heartbeats,
-        # and the staging key for EV_FUSE flushes
+        # the staging key for EV_FUSE flushes, and the batch index for
+        # EV_INGEST writer events
         heap: list[tuple[float, int, int, Any]] = []
         seq = 0
         clock = 0.0
@@ -1145,6 +1225,12 @@ class MultiQueryEngine:
 
         for st in states:
             _push(float(arrival_ns[st.sid]), EV_ARRIVE, st)
+
+        # the ingest writer session: one EV_INGEST per timed edge batch
+        # (dynamic runs only — a static run pushes zero writer events)
+        if dynamic and ingest is not None:
+            for bi, t_b in enumerate(ingest.times_ns()):
+                _push(float(t_b), EV_INGEST, bi)
 
         def _sample(t: float) -> None:
             u = self.pool.in_use
@@ -1235,6 +1321,13 @@ class MultiQueryEngine:
                 algorithm=st.executor.desc.name,
                 priority=st.priority,
             )
+            if dynamic:
+                # pin stamp: the snapshot this query starts on is the one it
+                # finishes on — later publishes must not touch it (the fig22
+                # trace-level assertion reads this back per record)
+                st.record.graph_epoch = getattr(
+                    getattr(st.executor, "graph", None), "epoch", None
+                )
             # closed loop within a session: the next query is submitted the
             # moment the previous one finishes. The first query inherits the
             # session's arrival time so admission wait counts into latency.
@@ -1821,9 +1914,11 @@ class MultiQueryEngine:
             while heap:
                 t, _, kind, st = heapq.heappop(heap)
                 now = t
-                if kind != EV_GOV:
-                    # heartbeats observe time but are not work: the modeled
-                    # makespan must end at the last session event
+                if kind != EV_GOV and kind != EV_INGEST:
+                    # heartbeats and the ingest writer observe time but are
+                    # not pool work: the modeled makespan must end at the
+                    # last session event (a writer outliving every reader
+                    # keeps publishing, but readers define the makespan)
                     clock = max(clock, t)
 
                 if governor is not None:
@@ -1850,6 +1945,43 @@ class MultiQueryEngine:
                     # must not keep a finished loop spinning
                     if heap:
                         _push(t + gov_tick_ns, EV_GOV, None)
+                    continue
+
+                if kind == EV_INGEST:
+                    # the writer session applies one edge batch between DES
+                    # events and publishes the next immutable snapshot.
+                    # Readers already running keep the snapshot they pinned;
+                    # newly starting queries (make_executor closing over
+                    # ``log.current()``) see the new epoch.
+                    bsrc, bdst = ingest.batches[st]
+                    g = ingest.log.ingest(bsrc, bdst)
+                    report.ingest_events.append(
+                        (t, int(g.epoch), int(np.asarray(bsrc).size))
+                    )
+                    # stale-snapshot hygiene: epoch-qualified keys mean an
+                    # older epoch's cached partition/prep entries are never
+                    # looked up again once no live session pins it — drop
+                    # them so a long ingest run doesn't accrete dead plans
+                    live = {
+                        s.graph_key
+                        for s in states + drivers
+                        if s.executor is not None
+                    }
+
+                    def _stale(gk: Any) -> bool:
+                        return (
+                            isinstance(gk, tuple)
+                            and len(gk) >= 2
+                            and gk[0] == g.name
+                            and isinstance(gk[1], int)
+                            and gk[1] < g.epoch
+                            and gk not in live
+                        )
+
+                    for gk in [k for k in partitions if _stale(k)]:
+                        del partitions[gk]
+                    for pck in [k for k in prep_cache if _stale(k[0])]:
+                        del prep_cache[pck]
                     continue
 
                 if kind == EV_FUSE:
@@ -2046,6 +2178,22 @@ class MultiQueryEngine:
                             if self._width_fb_on
                             else None
                         )
+                        if dynamic:
+                            # snapshot-generation stamp, same mechanism as
+                            # the width-ratio signature: a prep computed
+                            # against one epoch's topology is never served
+                            # across an epoch boundary. The epoch-qualified
+                            # ``graph_key`` in ``ck`` already separates
+                            # snapshots; the stamp keeps the invariant even
+                            # for executors whose identity degenerates to
+                            # ``id(graph)`` (no ``.key``), and is what the
+                            # epoch property suite drives directly
+                            ver = (
+                                ver,
+                                getattr(
+                                    getattr(ex, "graph", None), "epoch", None
+                                ),
+                            )
                         cached = prep_cache.get(ck)
                         if cached is None or cached[0] != ver:
                             # topology-centric plans carry the partition's

@@ -1,11 +1,23 @@
-"""Neighbour sampling for minibatch GNN training (minibatch_lg shape).
+"""Graph statistics sampling: GNN fanout blocks and incremental re-stats.
 
-A real fanout sampler (GraphSAGE-style): given seed nodes and per-hop fanouts
-(e.g. 15, 10), sample up to ``fanout`` neighbours per node per hop, producing
-a fixed-shape (padded) subgraph block suitable for XLA.
+Two kinds of sampling live here:
 
-Host-side numpy implementation for data-pipeline use + a device-side uniform
-sampler used inside jit when the CSR fits on-device.
+* A real fanout sampler (GraphSAGE-style): given seed nodes and per-hop
+  fanouts (e.g. 15, 10), sample up to ``fanout`` neighbours per node per
+  hop, producing a fixed-shape (padded) subgraph block suitable for XLA.
+  Host-side numpy implementation for data-pipeline use + a device-side
+  uniform sampler used inside jit when the CSR fits on-device.
+
+* :class:`DegreeStatTracker` — incremental re-sampling of the
+  construction-time degree statistics (§4.1.2) under streamed edge ingest.
+  ``build_graph`` gathers ``GraphStats`` in one O(V+E) pass; a
+  ``GraphEpochLog`` publishing a snapshot per edge batch cannot afford that
+  pass per epoch, so the tracker delta-updates the stats from the batch
+  alone. Under append-only ingest the update is *exact*, not approximate:
+  degree means are ``|E| / |V|`` by definition, degrees only ever grow so
+  the new maxima can only come from batch-touched vertices, and
+  ``v_reach`` (vertices with an in-edge — having one implies non-isolated)
+  grows exactly by the batch destinations whose in-degree crossed 0.
 """
 from __future__ import annotations
 
@@ -14,7 +26,73 @@ import dataclasses
 import numpy as np
 import jax.numpy as jnp
 
-from .structure import Graph
+from .structure import Graph, GraphStats
+
+
+class DegreeStatTracker:
+    """Delta-update ``GraphStats`` across streamed edge batches.
+
+    Seeded from a base :class:`Graph`, the tracker keeps host-side out/in
+    degree arrays plus the running edge count, degree maxima, and reach
+    count. :meth:`add` folds one edge batch in at O(batch) cost;
+    :meth:`stats` materializes the ``GraphStats`` for the next snapshot.
+
+    The invariants that make the delta exact (asserted by the property
+    suite in ``tests/test_epochs.py`` against from-scratch ``build_graph``
+    stats):
+
+    * ingest is append-only, so per-vertex degrees are monotone — a new
+      maximum must belong to a vertex the batch touched;
+    * ``deg_*_mean`` is ``num_edges / num_vertices`` exactly, so the means
+      follow from the edge count alone;
+    * a vertex with an in-edge is by definition not isolated, so
+      ``v_reach == count(in_deg > 0)`` and it grows exactly by the batch
+      destinations whose in-degree crossed zero.
+
+    Duplicate edges are *kept* (matching ``build_graph(dedup=False)``, the
+    epoch log's construction mode); a deduplicating ingest path would break
+    the append-only degree monotonicity argument and needs the full pass.
+    """
+
+    def __init__(self, graph: Graph) -> None:
+        self._out = np.asarray(graph.csr.out_degrees(), dtype=np.int64).copy()
+        self._in = np.asarray(graph.csr_in.out_degrees(), dtype=np.int64).copy()
+        s = graph.stats
+        self._v = int(s.num_vertices)
+        self._edges = int(s.num_edges)
+        self._out_max = int(s.deg_out_max)
+        self._in_max = int(s.deg_in_max)
+        # raw reach count (GraphStats stores it clamped to >= 1)
+        self._reach = int(np.count_nonzero(self._in > 0))
+
+    def add(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Fold one edge batch into the tracked degree state."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if src.size == 0:
+            return
+        us, cs = np.unique(src, return_counts=True)
+        self._out[us] += cs
+        self._out_max = max(self._out_max, int(self._out[us].max()))
+        ud, cd = np.unique(dst, return_counts=True)
+        self._reach += int(np.count_nonzero(self._in[ud] == 0))
+        self._in[ud] += cd
+        self._in_max = max(self._in_max, int(self._in[ud].max()))
+        self._edges += int(src.size)
+
+    def stats(self) -> GraphStats:
+        """The delta-updated statistics for the current edge total."""
+        v = self._v
+        mean = float(self._edges) / v if v else 0.0
+        return GraphStats(
+            num_vertices=v,
+            num_edges=self._edges,
+            v_reach=max(self._reach, 1),
+            deg_out_mean=mean,
+            deg_out_max=self._out_max,
+            deg_in_mean=mean,
+            deg_in_max=self._in_max,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -80,6 +80,7 @@ class Graph:
     stats: GraphStats
     name: str = "graph"
     surrogate: bool = False        # True when standing in for a SNAP dataset
+    epoch: int = 0                 # snapshot generation (GraphEpochLog)
 
     @property
     def num_vertices(self) -> int:
@@ -99,10 +100,20 @@ class Graph:
         ``id(graph)``, which broke steal/fusion grouping across separately
         loaded copies. Built entirely from construction-time statistics, so
         it costs nothing at query time and discriminates datasets far better
-        than (name, |V|, |E|) alone."""
+        than (name, |V|, |E|) alone.
+
+        The ``epoch`` is an *explicit* component: under dynamic ingest two
+        snapshots of the same logical graph can coincide on every statistic
+        (a batch that only thickens mid-degree vertices), and identity built
+        purely from stats would silently let a fusion gang or a same-graph
+        steal mix members pinned to different snapshots. Epoch-qualifying
+        the key makes every consumer of ``graph_identity`` — steal locality
+        ranking, fusion rendezvous, partition caching, backend device-table
+        memos — snapshot-correct for free."""
         s = self.stats
         return (
             self.name,
+            self.epoch,
             s.num_vertices,
             s.num_edges,
             s.deg_out_max,

@@ -1,0 +1,304 @@
+"""Epoch-snapshot invariants: GraphEpochLog, delta-resampled stats, the
+epoch-qualified identity key, and the runtime's "readers pin, writers
+publish" guarantees (prep cache, fusion rendezvous, steal ranking).
+
+Property tests ride the hypothesis-optional shim — deterministic corner +
+seeded grids when hypothesis is absent (see ``_hypothesis_compat``).
+"""
+import warnings
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.algorithms import BFSExecutor, PageRankExecutor
+from repro.core import (
+    EngineConfig,
+    FusionConfig,
+    IngestStream,
+    MultiQueryEngine,
+    StealRegistry,
+    XEON_E5_2660V4,
+)
+from repro.graph import (
+    DegreeStatTracker,
+    GraphEpochLog,
+    build_graph,
+    rmat_edges,
+)
+
+from _hypothesis_compat import given, settings, st
+
+
+def _split_edges(scale, seed, base_fraction, n_batches):
+    """(base graph, [(src, dst), ...] writer batches) from one rmat stream."""
+    src, dst = rmat_edges(scale, seed=seed)
+    n = 2 ** scale
+    cut = max(int(src.size * base_fraction), 1)
+    base = build_graph(src[:cut], dst[:cut], n, name="epochs")
+    parts = np.array_split(np.arange(cut, src.size), n_batches)
+    return base, [(src[i], dst[i]) for i in parts], (src, dst, n)
+
+
+# ---------------- snapshot immutability ----------------
+
+def test_reader_snapshot_arrays_never_change_after_publish():
+    """A reader holding epoch-e arrays must see them bit-identical after
+    any number of later publishes (snapshots share no mutable state)."""
+    base, batches, _ = _split_edges(9, 7, 0.7, 3)
+    log = GraphEpochLog(base)
+    held = log.current()
+    frozen = {
+        "indptr": np.asarray(held.csr.indptr).copy(),
+        "indices": np.asarray(held.csr.indices).copy(),
+        "indptr_in": np.asarray(held.csr_in.indptr).copy(),
+        "indices_in": np.asarray(held.csr_in.indices).copy(),
+        "src": np.asarray(held.src).copy(),
+        "dst": np.asarray(held.dst).copy(),
+    }
+    stats0, key0 = held.stats, held.key
+    for bsrc, bdst in batches:
+        log.ingest(bsrc, bdst)
+    assert log.epoch == 3
+    assert np.array_equal(np.asarray(held.csr.indptr), frozen["indptr"])
+    assert np.array_equal(np.asarray(held.csr.indices), frozen["indices"])
+    assert np.array_equal(np.asarray(held.csr_in.indptr), frozen["indptr_in"])
+    assert np.array_equal(np.asarray(held.csr_in.indices), frozen["indices_in"])
+    assert np.array_equal(np.asarray(held.src), frozen["src"])
+    assert np.array_equal(np.asarray(held.dst), frozen["dst"])
+    assert held.stats == stats0 and held.key == key0
+
+
+# ---------------- epoch monotonicity ----------------
+
+@settings(max_examples=20, deadline=None)
+@given(n_batches=st.integers(1, 6), seed=st.integers(0, 10_000))
+def test_epoch_monotonicity(n_batches, seed):
+    """Each non-empty publish advances the epoch by exactly one; empty
+    publishes are no-ops returning the current snapshot."""
+    base, batches, _ = _split_edges(7, seed % 97, 0.6, n_batches)
+    log = GraphEpochLog(base)
+    assert log.epoch == 0
+    seen = [log.current()]
+    for i, (bsrc, bdst) in enumerate(batches):
+        before = log.current()
+        assert log.publish() is before  # nothing pending -> no-op
+        g = log.ingest(bsrc, bdst)
+        if len(bsrc):
+            assert g.epoch == i + 1 == log.epoch
+        seen.append(g)
+    epochs = [g.epoch for g in seen]
+    assert epochs == sorted(epochs)
+    # epoch-qualified identity: every snapshot's key is distinct
+    assert len({g.key for g in seen}) == len({g.epoch for g in seen})
+
+
+def test_append_validates_vertex_range():
+    base, _, _ = _split_edges(7, 3, 0.9, 1)
+    log = GraphEpochLog(base)
+    with pytest.raises(ValueError):
+        log.append([0], [base.num_vertices])
+    with pytest.raises(ValueError):
+        log.append([-1], [0])
+    with pytest.raises(ValueError):
+        log.append([0, 1], [0])
+
+
+# ---------------- delta-resampled stats ----------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_batches=st.integers(1, 5))
+def test_delta_stats_match_from_scratch(seed, n_batches):
+    """Stats delta-updated across publishes equal a from-scratch
+    ``build_graph`` over the cumulative edge list — exactly, not within
+    tolerance (append-only ingest makes the delta lossless)."""
+    base, batches, (src, dst, n) = _split_edges(8, seed % 89, 0.65, n_batches)
+    log = GraphEpochLog(base)
+    lo = base.num_edges
+    for bsrc, bdst in batches:
+        g = log.ingest(bsrc, bdst)
+        lo += len(bsrc)
+        ref = build_graph(src[:lo], dst[:lo], n, name="epochs")
+        assert g.stats == ref.stats
+        # and the published topology is the same edge multiset
+        assert np.array_equal(np.asarray(g.csr.indptr), np.asarray(ref.csr.indptr))
+        assert np.array_equal(
+            np.sort(np.asarray(g.csr_in.indices)),
+            np.sort(np.asarray(ref.csr_in.indices)),
+        )
+
+
+def test_tracker_handles_duplicate_and_repeated_batches():
+    """Duplicate edges in one batch and across batches keep the tracker
+    exact (build_graph(dedup=False) semantics)."""
+    src = np.array([0, 1, 2, 2])
+    dst = np.array([1, 2, 3, 3])
+    base = build_graph(src, dst, 5, name="dups")
+    tr = DegreeStatTracker(base)
+    tr.add(np.array([2, 2, 4]), np.array([3, 3, 0]))
+    ref = build_graph(
+        np.concatenate([src, [2, 2, 4]]),
+        np.concatenate([dst, [3, 3, 0]]),
+        5,
+        name="dups",
+    )
+    assert tr.stats() == ref.stats
+
+
+# ---------------- prep cache: never served across an epoch boundary ----------------
+
+def test_prep_cache_never_served_across_epoch_boundary():
+    """Every executed step's PreparedIteration must have been prepared
+    against the executing query's own pinned snapshot. The engine's shared
+    prep cache amortizes same-epoch preparations; a cross-epoch hit would
+    run one snapshot's packaging on another's topology."""
+    src, dst = rmat_edges(9, seed=3)
+    n = 2 ** 9
+    cut = int(src.size * 0.8)
+    base = build_graph(src[:cut], dst[:cut], n, name="prepcache")
+    log = GraphEpochLog(base)
+    parts = np.array_split(np.arange(cut, src.size), 3)
+    stream = IngestStream(
+        log=log,
+        batches=[(src[i], dst[i]) for i in parts],
+        interval_ns=1.5e5,
+    )
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+
+    prep_epoch: dict[int, int] = {}
+    orig_prepare = eng._prepare
+    orig_execute = eng._execute_step
+
+    def prep_wrap(ex, *a, **kw):
+        p = orig_prepare(ex, *a, **kw)
+        prep_epoch.setdefault(id(p), ex.graph.epoch)
+        return p
+
+    def exec_wrap(ex, prep, step, step_ns, **kw):
+        assert prep_epoch[id(prep)] == ex.graph.epoch, (
+            f"prep from epoch {prep_epoch[id(prep)]} served to a reader "
+            f"pinned on epoch {ex.graph.epoch}"
+        )
+        return orig_execute(ex, prep, step, step_ns, **kw)
+
+    eng._prepare = prep_wrap
+    eng._execute_step = exec_wrap
+
+    def mk(s, q):
+        return PageRankExecutor(log.current(), mode="pull", max_iters=4, tol=0)
+
+    rep = eng.run_sessions(
+        mk,
+        sessions=6,
+        queries_per_session=2,
+        config=EngineConfig(
+            dynamic=True,
+            ingest=stream,
+            fuse=True,  # fusion enables the shared prep cache
+            arrivals=[i * 1.0e5 for i in range(6)],
+        ),
+    )
+    assert rep.epochs_published == 3
+    # the run must actually have crossed a boundary for the test to bite
+    assert len({r.graph_epoch for r in rep.records}) >= 2
+    assert eng.pool.available == eng.pool.capacity
+
+
+# ---------------- epoch-qualified identity (satellite regression) ----------------
+
+def test_two_snapshots_never_rendezvous_into_one_fusion_group():
+    """Regression: identity used to fingerprint stats alone, which a
+    mutation can leave unchanged. Two snapshots of the same logical graph
+    must not fuse into one gang — with one session on each snapshot,
+    fusion must not fire at all, while the same pair on a single snapshot
+    does fuse (the control proving the setup would rendezvous)."""
+    base, batches, _ = _split_edges(11, 3, 0.9, 1)
+    log = GraphEpochLog(base)
+    g1 = log.ingest(*batches[0])
+    assert base.key != g1.key and base.key[0] == g1.key[0]
+
+    def run(graphs):
+        eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+        return eng.run_sessions(
+            lambda s, q: PageRankExecutor(graphs[s], mode="pull", max_iters=3, tol=0),
+            sessions=2,
+            queries_per_session=1,
+            config=EngineConfig(fuse=True, fusion=FusionConfig(hold_ns=1e6)),
+        )
+
+    control = run([base, base])
+    assert control.fusion_events, "control pair on one snapshot failed to fuse"
+    crossed = run([base, g1])
+    assert crossed.fusion_events == [], (
+        "sessions pinned to different snapshots fused into one gang"
+    )
+
+
+def test_two_snapshots_never_rank_as_same_graph_steal_victims():
+    """Steal locality must treat snapshots as different graphs: a thief on
+    epoch 1 prefers the (smaller-backlog) epoch-1 victim over a fatter
+    epoch-0 victim of the same logical graph."""
+    base, batches, _ = _split_edges(8, 3, 0.9, 1)
+    log = GraphEpochLog(base)
+    g1 = log.ingest(*batches[0])
+    reg = StealRegistry()
+    fat = SimpleNamespace(stealable_backlog=50, grinding=True)
+    thin = SimpleNamespace(stealable_backlog=3, grinding=True)
+    reg.publish(0, fat, graph_key=base.key)
+    reg.publish(1, thin, graph_key=g1.key)
+    assert reg.pick_victim(graph_key=g1.key).key == 1
+    assert reg.pick_victim(graph_key=base.key).key == 0
+    # identical-stats snapshots stay distinct purely via the epoch component
+    assert base.key[2:] != g1.key[2:] or base.key[1] != g1.key[1]
+
+
+# ---------------- config flag hygiene ----------------
+
+def test_dynamic_flag_path_clean_under_deprecation_errors():
+    """The new config path must run warning-free with DeprecationWarning
+    promoted to an error (stale kwargs or deprecated shims would trip it),
+    and the legacy-kwarg surface must stay dead: ``run_sessions`` takes the
+    flag only through ``EngineConfig``."""
+    base, batches, _ = _split_edges(8, 3, 0.8, 2)
+    log = GraphEpochLog(base)
+    stream = IngestStream(
+        log=log, batches=batches, interval_ns=1e5
+    )
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rep = eng.run_sessions(
+            lambda s, q: PageRankExecutor(log.current(), mode="pull", max_iters=2, tol=0),
+            sessions=2,
+            queries_per_session=2,
+            config=EngineConfig(dynamic=True, ingest=stream),
+        )
+    assert rep.epochs_published == 2
+    with pytest.raises(TypeError):
+        eng.run_sessions(
+            lambda s, q: PageRankExecutor(base, mode="pull", max_iters=1, tol=0),
+            sessions=1,
+            queries_per_session=1,
+            dynamic=True,
+        )
+
+
+def test_ingest_requires_dynamic():
+    base, batches, _ = _split_edges(7, 3, 0.8, 1)
+    stream = IngestStream(log=GraphEpochLog(base), batches=batches, interval_ns=1e5)
+    with pytest.raises(ValueError):
+        EngineConfig(ingest=stream)
+
+
+def test_static_records_never_stamp_an_epoch(small_rmat):
+    """dynamic=False performs zero epoch calls: no record stamps an epoch,
+    no ingest events exist, and the report's epoch accessors degenerate."""
+    eng = MultiQueryEngine(XEON_E5_2660V4, policy="scheduler")
+    rep = eng.run_sessions(
+        lambda s, q: BFSExecutor(small_rmat, 0),
+        sessions=2,
+        queries_per_session=1,
+    )
+    assert all(r.graph_epoch is None for r in rep.records)
+    assert rep.ingest_events == [] and rep.epochs_published == 0
+    assert rep.epoch_histogram() == {None: 2}

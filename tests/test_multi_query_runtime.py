@@ -456,3 +456,199 @@ def test_bfs_sessions_still_complete(medium_rmat):
     assert rep.total_edges > 0
     assert all(r.finished_ns > 0 for r in rep.records)
     assert eng.pool.available == eng.pool.capacity
+
+
+# ---------------- dynamic graphs: writer/reader interleaving stress ----------------
+#
+# Seeded DES schedules with a live ingest writer flipping epochs while the
+# readers exercise the riskiest machinery: fused gangs, work-stealing, and
+# governor preemption. Every run asserts (a) the pool capacity invariant
+# ``in_use <= capacity + shrink_debt`` after *every* request/release, and
+# (b) split-back conservation on the *pinned* snapshot — a PR reader pinned
+# to epoch e must book exactly ``max_iters * |E_e|`` edges, which breaks if
+# a gang, thief, or de-fused residual ever ran a member on the wrong
+# snapshot or lost a package.
+
+from repro.algorithms.bfs import bfs_reference  # noqa: E402
+from repro.core import (  # noqa: E402
+    CapacityGovernor,
+    FusionConfig,
+    IngestStream,
+)
+from repro.graph import GraphEpochLog, build_graph, rmat_edges  # noqa: E402
+
+
+def _dyn_setup(scale=11, seed=3, base_fraction=0.85, n_batches=4, interval_ns=2e5):
+    """(base, log, stream) — a seeded writer schedule over one rmat stream."""
+    src, dst = rmat_edges(scale, seed=seed)
+    cut = int(src.size * base_fraction)
+    base = build_graph(src[:cut], dst[:cut], 2 ** scale, name="dyn_stress")
+    log = GraphEpochLog(base)
+    parts = np.array_split(np.arange(cut, src.size), n_batches)
+    stream = IngestStream(
+        log=log,
+        batches=[(src[i], dst[i]) for i in parts],
+        interval_ns=interval_ns,
+    )
+    return base, log, stream
+
+
+def _guard_pool(pool):
+    """Assert the ledger invariant after every pool transition; returns the
+    transition counter so tests can prove the guard actually ran."""
+    orig_request, orig_release = pool.request, pool.release
+    calls = {"n": 0}
+
+    def request(n, **kw):
+        got = orig_request(n, **kw)
+        assert pool.in_use <= pool.capacity + pool.shrink_debt
+        calls["n"] += 1
+        return got
+
+    def release(n, **kw):
+        out = orig_release(n, **kw)
+        assert pool.in_use <= pool.capacity + pool.shrink_debt
+        calls["n"] += 1
+        return out
+
+    pool.request = request
+    pool.release = release
+    return calls
+
+
+def _assert_conserved_on_pinned(rep, pinned, max_iters):
+    """Split-back conservation per record, against its pinned snapshot."""
+    for r in rep.records:
+        ex = pinned[(r.session, r.query)]
+        assert r.finished_ns > 0
+        assert r.graph_epoch == ex.graph.epoch
+        if isinstance(ex, PageRankExecutor):
+            assert r.edges == pytest.approx(max_iters * ex.graph.num_edges)
+        else:
+            ref = bfs_reference(ex.graph, ex.source)
+            assert np.array_equal(np.asarray(ex.result()), np.asarray(ref))
+
+
+def test_writer_publishes_mid_fused_gang_conservation():
+    """Epoch flips while fused gangs are live: the gang never mixes
+    snapshots (epoch-qualified rendezvous), split-back stays exact on each
+    member's pinned snapshot, and the pool ledger invariant holds on every
+    transition."""
+    _, log, stream = _dyn_setup(scale=11, n_batches=5, interval_ns=2.5e5)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=4, policy="scheduler")
+    calls = _guard_pool(eng.pool)
+    pinned = {}
+
+    def mk(s, q):
+        ex = PageRankExecutor(log.current(), mode="pull", max_iters=3, tol=0)
+        pinned[(s, q)] = ex
+        return ex
+
+    rep = eng.run_sessions(
+        mk,
+        sessions=6,
+        queries_per_session=2,
+        config=EngineConfig(
+            dynamic=True,
+            ingest=stream,
+            fuse=True,
+            fusion=FusionConfig(hold_ns=5e4),
+            arrivals=[i * 1.0e5 for i in range(6)],
+        ),
+    )
+    assert calls["n"] > 0
+    assert rep.fusion_events, "stress run formed no gang"
+    assert rep.epochs_published == 5
+    # the writer really published *mid-gang*: some gang formed before an
+    # ingest event whose members finished after it
+    t_ingest = [t for t, _, _ in rep.ingest_events]
+    assert min(t for t, *_ in rep.fusion_events) < max(t_ingest)
+    assert len({r.graph_epoch for r in rep.records}) >= 2
+    _assert_conserved_on_pinned(rep, pinned, max_iters=3)
+    assert eng.pool.available == eng.pool.capacity
+
+
+def test_writer_publishes_mid_steal_conservation():
+    """Epoch flips while thieves hold donated batches: stolen work still
+    books to the victim's pinned snapshot exactly, and the ledger invariant
+    holds across the flips."""
+    _, log, stream = _dyn_setup(scale=11, n_batches=5, interval_ns=1.2e5)
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    calls = _guard_pool(eng.pool)
+    pinned = {}
+
+    def mk(s, q):
+        g = log.current()
+        if s < 2:
+            ex = PageRankExecutor(g, mode="pull", max_iters=5, tol=0)
+        else:
+            deg = np.asarray(g.out_degrees())
+            ex = BFSExecutor(g, int(np.argsort(-deg)[s % 8]))
+        pinned[(s, q)] = ex
+        return ex
+
+    rep = eng.run_sessions(
+        mk,
+        sessions=6,
+        queries_per_session=2,
+        config=EngineConfig(
+            dynamic=True,
+            ingest=stream,
+            steal=True,
+            arrivals=[0.0, 0.0, 2e4, 2e4, 4e4, 4e4],
+        ),
+    )
+    assert calls["n"] > 0
+    assert rep.steal_events, "skewed mix produced no steals"
+    assert rep.epochs_published == 5
+    # a steal and a publish genuinely interleaved
+    t_ingest = [t for t, _, _ in rep.ingest_events]
+    assert min(t for t, *_ in rep.steal_events) < max(t_ingest)
+    assert max(t for t, *_ in rep.steal_events) > min(t_ingest)
+    _assert_conserved_on_pinned(rep, pinned, max_iters=5)
+    assert eng.pool.available == eng.pool.capacity
+
+
+def test_preemption_defuse_resumes_members_on_pinned_snapshot():
+    """A governor fence de-fuses a gang while the writer keeps publishing:
+    the de-fused members' residual runs must resume on the snapshot each
+    member pinned at query start — their conserved edge counts (and the
+    high-priority sprinter's result) prove no member re-read a newer
+    snapshot mid-query."""
+    _, log, stream = _dyn_setup(scale=12, n_batches=4, interval_ns=2.5e5)
+    gov = CapacityGovernor(
+        p_min=8, p_max=8, window_ns=1e5, cooldown_ns=1e12, preempt=True
+    )
+    eng = MultiQueryEngine(XEON_E5_2660V4, pool_capacity=8, policy="scheduler")
+    calls = _guard_pool(eng.pool)
+    pinned = {}
+
+    def mk(s, q):
+        iters = 4 if s < 4 else 2
+        ex = PageRankExecutor(log.current(), mode="pull", max_iters=iters, tol=0)
+        pinned[(s, q)] = ex
+        return ex
+
+    rep = eng.run_sessions(
+        mk,
+        sessions=5,
+        queries_per_session=1,
+        config=EngineConfig(
+            dynamic=True,
+            ingest=stream,
+            fuse=True,
+            governor=gov,
+            priorities=[0, 0, 0, 0, 1],
+            arrivals=[0.0, 0.0, 0.0, 0.0, 2e5],
+        ),
+    )
+    assert calls["n"] > 0
+    assert rep.fusion_events, "no gang to de-fuse"
+    assert rep.preemptions, "governor never fenced the gang"
+    assert rep.epochs_published == 4
+    assert sum(tr.preempted for r in rep.records for tr in r.traces) >= 1
+    for r in rep.records:
+        ex = pinned[(r.session, r.query)]
+        assert r.graph_epoch == ex.graph.epoch
+        assert r.edges == pytest.approx(ex.max_iters * ex.graph.num_edges)
+    assert eng.pool.available == eng.pool.capacity
